@@ -1,0 +1,50 @@
+"""Render the baseline-vs-optimized §Perf comparison table from dry-run
+artifacts.
+
+    PYTHONPATH=src python -m benchmarks.compare \
+        --baseline experiments/dryrun --optimized experiments/optimized
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(d: str) -> dict:
+    out = {}
+    for p in glob.glob(os.path.join(d, "*.json")):
+        r = json.load(open(p))
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="experiments/dryrun")
+    ap.add_argument("--optimized", default="experiments/optimized")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    base = load(args.baseline)
+    opt = load(args.optimized)
+
+    print(f"{'arch':22s} {'shape':11s} | {'base C/M/N (s)':>26s} "
+          f"{'roof':>8s} {'mfu':>5s} | {'opt C/M/N (s)':>26s} "
+          f"{'roof':>8s} {'mfu':>5s} | {'gain':>5s}")
+    rows = sorted(k for k in base if k[2] == args.mesh and k in opt)
+    for k in rows:
+        b, o = base[k], opt[k]
+        bm = b["compute_s"] / b["roofline_s"] if b["roofline_s"] else 0
+        om = o["compute_s"] / o["roofline_s"] if o["roofline_s"] else 0
+        gain = b["roofline_s"] / o["roofline_s"] if o["roofline_s"] else 0
+        print(f"{k[0]:22s} {k[1]:11s} | "
+              f"{b['compute_s']:8.2e}/{b['memory_s']:8.2e}/"
+              f"{b['collective_s']:8.2e} {b['roofline_s']:8.2e} {bm:5.2f} | "
+              f"{o['compute_s']:8.2e}/{o['memory_s']:8.2e}/"
+              f"{o['collective_s']:8.2e} {o['roofline_s']:8.2e} {om:5.2f} | "
+              f"{gain:5.2f}x")
+
+
+if __name__ == "__main__":
+    main()

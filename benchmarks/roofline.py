@@ -1,0 +1,56 @@
+"""§Roofline aggregation: read the dry-run artifacts and print/emit the
+per-(arch × shape × mesh) roofline table (terms in seconds, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs useful ratio).
+
+Run the dry-run first:
+    python -m repro.launch.dryrun --all --both-meshes --out experiments/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DEFAULT_DIR = "experiments/dryrun"
+
+
+def load_cells(dryrun_dir: str = DEFAULT_DIR) -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_row(r: dict) -> str:
+    roof = max(r["compute_s"], 1e-30)
+    frac = r["compute_s"] / r["roofline_s"] if r["roofline_s"] else 0.0
+    return (f"{r['arch']:22s} {r['shape']:11s} {r['mesh']:10s} "
+            f"{r['compute_s']:9.2e} {r['memory_s']:9.2e} "
+            f"{r['collective_s']:9.2e} {r['dominant']:>10s} "
+            f"{r['useful_flops_ratio']:6.2f} {frac:9.3f}")
+
+
+def main(dryrun_dir: str = DEFAULT_DIR) -> list[dict]:
+    cells = load_cells(dryrun_dir)
+    if not cells:
+        print(f"[roofline] no dry-run artifacts in {dryrun_dir} — run "
+              "python -m repro.launch.dryrun --all --both-meshes first")
+        return []
+    print(f"[roofline] {len(cells)} cells "
+          "(terms in seconds/step; frac = compute/roofline = achievable MFU "
+          "bound at this config)")
+    print(f"{'arch':22s} {'shape':11s} {'mesh':10s} "
+          f"{'compute':>9s} {'memory':>9s} {'collect':>9s} {'dominant':>10s} "
+          f"{'useful':>6s} {'mfu-bound':>9s}")
+    for r in sorted(cells, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        print(fmt_row(r))
+    doms = {}
+    for r in cells:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    print(f"[roofline] dominant-term histogram: {doms}")
+    return cells
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Wall-clock cross-check (CPU): per-step cost of the incremental update vs
+a from-scratch batch eigh, as m grows — the practical speedup that
+motivates the paper's algorithm in the streaming setting, plus the
+incremental-Nyström landmark-add cost.
+
+(CPU timings are indicative only; the TPU-path cost model lives in the
+dry-run §Roofline. This benchmark demonstrates the *scaling*, ~m² per
+update vs ~m³ re-batch once jit overheads are out.)
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import inkpca, kernels_fn as kf
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                      # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def main() -> dict:
+    rng = np.random.default_rng(0)
+    results = {}
+    print(f"[timing] {'m':>6s} {'incr_update_ms':>15s} "
+          f"{'batch_eigh_ms':>14s} {'ratio':>7s}")
+    for m in (64, 128, 256, 512):
+        d = 10
+        X = rng.normal(size=(m + 1, d))
+        spec = kf.KernelSpec(name="rbf", sigma=float(d))
+        state = inkpca.init_state(jnp.asarray(X[:m]), m + 1, spec,
+                                  adjusted=True, dtype=jnp.float64)
+        a, k_new = inkpca._masked_row(state, jnp.asarray(X[m]), spec)
+
+        t_inc = _time(lambda s, a_, k_, x_: inkpca.update_adjusted(
+            s, a_, k_, x_).L.block_until_ready(), state, a, k_new,
+            jnp.asarray(X[m]))
+
+        K = kf.gram_block(jnp.asarray(X), jnp.asarray(X), spec=spec)
+        Kc = kf.center_gram(K)
+        t_batch = _time(lambda M: jnp.linalg.eigh(M)[0].block_until_ready(),
+                        Kc)
+        results[m] = {"incremental_s": t_inc, "batch_s": t_batch}
+        print(f"{m:6d} {t_inc * 1e3:15.2f} {t_batch * 1e3:14.2f} "
+              f"{t_batch / t_inc:7.2f}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps on
+the synthetic token stream, with checkpointing and resume — deliverable (b)
+end-to-end example.
+
+The default config is a 12-layer, d=512 dense transformer (~100M params
+with the 50k vocab). On CPU this takes a few minutes; pass --tiny for a
+seconds-scale sanity run.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+    PYTHONPATH=src python examples/train_lm.py --tiny --steps 60
+"""
+import argparse
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.data.synthetic import TokenStream
+from repro.launch import steps as steps_lib
+from repro.models.config import ArchConfig
+from repro.optim import make_optimizer
+from repro.optim.schedules import ScheduleConfig, make_schedule
+
+
+def make_cfg(tiny: bool) -> ArchConfig:
+    if tiny:
+        return ArchConfig(name="tiny", family="dense", n_layers=2,
+                          d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                          vocab=512, dtype="float32")
+    # ~100M params: 12L d=512 (50k vocab contributes 2×25M)
+    return ArchConfig(name="lm100m", family="dense", n_layers=12,
+                      d_model=512, n_heads=8, n_kv_heads=8, d_ff=2048,
+                      vocab=50304, tie_embeddings=False, dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = make_cfg(args.tiny)
+    from repro.models.config import param_count
+    print(f"arch={cfg.name}: {param_count(cfg) / 1e6:.1f}M params")
+
+    opt = make_optimizer("adamw")
+    sched = make_schedule(ScheduleConfig(kind="cosine", lr=3e-3, warmup=20,
+                                         total=args.steps))
+    step_fn = jax.jit(steps_lib.make_train_step(cfg, opt, sched),
+                      donate_argnums=(0,))
+    stream = TokenStream(vocab=cfg.vocab, seq_len=args.seq,
+                         global_batch=args.batch)
+
+    ckpt_dir = args.ckpt_dir or os.path.join(tempfile.gettempdir(),
+                                             "repro_train_lm")
+    state = steps_lib.init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    start = 0
+    last = latest_step(ckpt_dir)
+    if last is not None and last < args.steps:
+        state = load_checkpoint(ckpt_dir, last, jax.eval_shape(lambda: state))
+        start = last
+        print(f"resumed from checkpoint step {last}")
+
+    losses = []
+    t0 = time.time()
+    for step in range(start, args.steps):
+        state, metrics = step_fn(state, stream.batch_at(jnp.int32(step)))
+        if step % 20 == 0 or step == args.steps - 1:
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            tps = args.batch * args.seq * (step - start + 1) \
+                / max(time.time() - t0, 1e-9)
+            print(f"step {step:5d} loss={loss:.4f} "
+                  f"acc={float(metrics['accuracy']):.3f} "
+                  f"lr={float(metrics['lr']):.2e} tok/s={tps:,.0f}",
+                  flush=True)
+        if (step + 1) % 100 == 0:
+            save_checkpoint(ckpt_dir, step + 1, state)
+            print(f"checkpointed step {step + 1} -> {ckpt_dir}")
+
+    print(f"loss: {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"({args.steps} steps, {time.time() - t0:.0f}s)")
+    assert losses[-1] < losses[0], "training must reduce the loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.npz_store import (save_checkpoint, load_checkpoint,
+                                        latest_step, AsyncCheckpointer)

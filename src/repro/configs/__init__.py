@@ -1,0 +1,59 @@
+"""Architecture registry: one module per assigned arch (+ the paper's own
+KPCA workload).  ``get_config(name)`` returns the full ArchConfig;
+``get_config(name, smoke=True)`` the reduced same-family smoke variant.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ArchConfig
+
+ARCH_IDS = [
+    "musicgen_large",
+    "pixtral_12b",
+    "xlstm_125m",
+    "jamba_1_5_large_398b",
+    "qwen3_32b",
+    "stablelm_12b",
+    "command_r_plus_104b",
+    "minicpm_2b",
+    "kimi_k2_1t_a32b",
+    "dbrx_132b",
+]
+
+_ALIASES = {name.replace("_", "-"): name for name in ARCH_IDS}
+
+# (arch × shape) assignment: every arch gets the 4 LM shapes; long_500k is
+# assigned only to sub-quadratic-decode families (SSM/hybrid).  Dense archs
+# can still *lower* long_500k with attention="nystrom" — tracked separately
+# as a beyond-paper extra (EXPERIMENTS.md §Dry-run).
+SHAPES = {
+    "train_4k":    {"kind": "train",  "seq_len": 4096,    "global_batch": 256},
+    "prefill_32k": {"kind": "train",  "seq_len": 32768,   "global_batch": 32},
+    "decode_32k":  {"kind": "decode", "seq_len": 32768,   "global_batch": 128},
+    "long_500k":   {"kind": "decode", "seq_len": 524288,  "global_batch": 1},
+}
+
+LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
+
+
+def get_config(name: str, smoke: bool = False) -> ArchConfig:
+    mod_name = _ALIASES.get(name, name)
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    cfg: ArchConfig = mod.CONFIG
+    return cfg.smoke() if smoke else cfg
+
+
+def cells(include_skipped: bool = False):
+    """All assigned (arch, shape) dry-run cells, with skip annotations."""
+    out = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape, spec in SHAPES.items():
+            skip = (shape == "long_500k"
+                    and cfg.family not in LONG_CONTEXT_FAMILIES
+                    and cfg.attention != "nystrom")
+            if skip and not include_skipped:
+                continue
+            out.append((arch, shape, spec, skip))
+    return out

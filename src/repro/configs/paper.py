@@ -1,0 +1,24 @@
+"""The paper's own workload configurations (incremental KPCA / Nyström).
+
+These drive the reproduction benchmarks (Fig. 1 drift, Fig. 2 Nyström
+error) and the distributed streaming-KPCA dry-run.
+"""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class KPCAWorkload:
+    name: str
+    dataset: str          # 'magic' | 'yeast'
+    n_seed: int = 20      # paper: matrices of size 20+m
+    n_stream: int = 480   # streamed points after the seed
+    n_total: int = 1000   # Nyström: first 1000 observations (paper §5.2)
+    capacity: int = 512
+    adjusted: bool = True
+    dtype: str = "float64"   # paper uses NumPy f64; f32 variant benchmarked
+
+
+MAGIC = KPCAWorkload(name="paper-magic", dataset="magic")
+YEAST = KPCAWorkload(name="paper-yeast", dataset="yeast")
+
+WORKLOADS = {"magic": MAGIC, "yeast": YEAST}

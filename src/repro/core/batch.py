@@ -1,0 +1,74 @@
+"""Batch oracles and baseline incremental algorithms (paper §2.3 comparisons).
+
+* ``batch_kpca``      — eigh of the (optionally centered) gram matrix; the
+  exactness oracle used by every test and the drift benchmark.
+* ``rotated_eigh_step`` — the *dense small-problem* incremental baseline: the
+  update to K' is expressed in the current eigenbasis Q = blockdiag(U, 1),
+  the (m+1)x(m+1) projected matrix is eigendecomposed and U rotated.  This
+  performs exactly the operation mix the paper attributes to Chin & Suter
+  (2007) — one small eigh (~9m^3 flops) plus an m×m matmul (2m^3) — minus
+  their extra eigh of the unadjusted kernel matrix, i.e. it is a *stronger*
+  version of that baseline (~11m^3 vs their ~20m^3 vs ours ~8m^3).
+* ``hoegaerts_step``  — the unadjusted two-rank-one-update scheme of
+  Hoegaerts et al. (2007) coincides with Algorithm 1; provided as an alias.
+
+All baselines produce exact eigendecompositions (up to fp error), so tests
+cross-check all algorithms against each other and against ``batch_kpca``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kernels_fn as kf
+
+Array = jax.Array
+
+
+def batch_kpca(K: Array, *, adjusted: bool) -> tuple[Array, Array]:
+    """Oracle: eigendecomposition (ascending) of K or the centered K'."""
+    Keff = kf.center_gram(K) if adjusted else K
+    return jnp.linalg.eigh(Keff)
+
+
+@partial(jax.jit)
+def rotated_eigh_step(L: Array, U: Array, Kprev: Array, Knew: Array
+                      ) -> tuple[Array, Array]:
+    """Chin–Suter-class baseline: one incremental step via projected eigh.
+
+    L, U: eigendecomposition of the centered K' of the first m points
+    Kprev: unadjusted m×m gram, Knew: unadjusted (m+1)×(m+1) gram.
+    Returns eigendecomposition of the centered (m+1)×(m+1) K'.
+    """
+    m = L.shape[0]
+    Kp_new = kf.center_gram(Knew)
+    # Q = blockdiag(U, 1) spans R^{m+1}; project, eigh, rotate.
+    Kp_old = (U * L[None, :]) @ U.T
+    delta = Kp_new - jnp.pad(Kp_old, ((0, 1), (0, 1)))
+    Q = jnp.pad(U, ((0, 1), (0, 1))).at[m, m].set(1.0)
+    small = jnp.diag(jnp.pad(L, (0, 1))) + Q.T @ delta @ Q
+    lam, V = jnp.linalg.eigh(small)
+    return lam, Q @ V   # one (m+1)x(m+1) matmul — the baseline's hot spot
+
+
+# Alias: the unadjusted-case baseline of Hoegaerts et al. (2007) performs the
+# same two symmetric rank-one updates as our Algorithm 1.
+from repro.core.inkpca import update_unadjusted as hoegaerts_step  # noqa: E402,F401
+
+
+def flop_model(m: int) -> dict[str, float]:
+    """Leading-order flop counts per incremental step at size m (paper §3).
+
+    Paper's accounting: a rank-one eigenvector update costs one m×m matmul
+    (2m^3); QR-algorithm eigh ~ 9m^3; Chin & Suter: eigh(m+2) + eigh(m) +
+    m×m matmul ~ 20m^3.
+    """
+    return {
+        "ours_adjusted": 8.0 * m**3,        # 4 rank-one updates × 2m^3
+        "ours_unadjusted": 4.0 * m**3,      # 2 rank-one updates × 2m^3
+        "chin_suter_2007": 20.0 * m**3,     # paper's cited cost
+        "rotated_eigh_baseline": 11.0 * m**3,  # eigh(m+1) + rotate
+        "batch_eigh": 9.0 * m**3,           # recompute from scratch
+    }

@@ -1,0 +1,123 @@
+"""Distributed incremental KPCA / Nyström via shard_map (data-parallel rows).
+
+Sharding scheme (designed for the production mesh in ``repro.launch.mesh``):
+
+* U (M×M eigenvectors) and the stored points X are **row-sharded** over the
+  'data' axis: each device owns M/P rows (data points).  Eigenvalues L and
+  all O(M) bookkeeping are replicated.
+* One update needs a single collective: z = psum_p(U_p^T v_p)  (M floats).
+  The secular solve (O(M^2) VPU) is replicated — cheaper than communicating.
+  The Cauchy factor W is built replicated from (d, roots, ẑ); each device
+  rotates only its row block: U_p <- U_p @ W  (local matmul, no comm).
+* The Nyström extension row-shards K_{n,m} over 'data' as well; the
+  reconstruction B diag(1/λ) B^T is local per row-block.
+
+Per update the communication volume is M floats (one all-reduce) against
+O(M^2 / P) local flops — strongly compute-bound for M ≳ P, which is what the
+roofline analysis in EXPERIMENTS.md shows.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import kernels_fn as kf, rankone
+
+Array = jax.Array
+
+
+def _rank_one_update_sharded(L, U_local, v_local, sigma, m, *, axis: str,
+                             iters: int, method: str):
+    """Body run under shard_map: U_local is a row block of U."""
+    M = L.shape[0]
+    dtype = L.dtype
+    mask = rankone.active_mask(M, m)
+
+    z = jax.lax.psum(U_local.T @ v_local, axis)
+
+    # deflation, mirroring rankone.rank_one_update
+    sig_abs = jnp.abs(sigma)
+    neg = sigma < 0
+    room = sig_abs * jnp.sum(z * z)
+    scale = jnp.max(jnp.abs(jnp.where(mask, L, 0.0))) + room + 1e-30
+    znorm = jnp.sqrt(jnp.sum(z * z))
+    floor = 32.0 * jnp.finfo(dtype).eps * jnp.maximum(znorm,
+                                                      jnp.finfo(dtype).eps)
+    defl = (~mask | (jnp.abs(z) < floor)
+            | (sig_abs * z * z < 64.0 * jnp.finfo(dtype).eps * scale))
+    z = jnp.where(defl, 0.0, z)
+    d_sent = rankone.sentinelize(L, m, room)
+    d_eff = jnp.where(neg, -d_sent[::-1], d_sent)
+    z_eff = jnp.where(neg, z[::-1], z)
+    defl_eff = jnp.where(neg, defl[::-1], defl)
+
+    roots_eff = rankone._secular_bisect(d_eff, z_eff * z_eff, sig_abs, iters,
+                                        defl=defl_eff)
+    zhat_eff = (rankone._gu_zhat(d_eff, roots_eff, sig_abs, z_eff)
+                if method == "gu" else z_eff)
+    zhat_eff = jnp.where(defl_eff, 0.0, zhat_eff)
+    W_eff, inv_eff = rankone._cauchy_W(d_eff, roots_eff, zhat_eff)
+    eye = jnp.eye(M, dtype=dtype)
+    W_eff = jnp.where(defl_eff[None, :], eye, W_eff)
+    inv_eff = jnp.where(defl_eff, 1.0, inv_eff)
+
+    roots = jnp.where(neg, -roots_eff[::-1], roots_eff)
+    W = jnp.where(neg, W_eff[::-1, ::-1], W_eff)
+    inv = jnp.where(neg, inv_eff[::-1], inv_eff)
+
+    blk = mask[:, None] & mask[None, :]
+    Wn = jnp.where(blk, W * inv[None, :], eye)
+
+    U_new = U_local @ Wn            # local row-block rotation, no comm
+    L_new = jnp.where(mask, roots, d_sent)
+    perm = jnp.argsort(L_new)       # deflation can locally reorder
+    return L_new[perm], U_new[:, perm]
+
+
+def make_sharded_update(mesh, *, axis: str = "data", iters: int = 62,
+                        method: str = "gu"):
+    """Build a pjit-compatible sharded rank-one update over ``mesh``.
+
+    Returns f(L, U, v, sigma, m) with U sharded P(axis, None); everything
+    else replicated.  Composable under jit with other computation.
+    """
+    body = partial(_rank_one_update_sharded, axis=axis, iters=iters,
+                   method=method)
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(axis, None), P(axis), P(), P()),
+        out_specs=(P(), P(axis, None)),
+        check_vma=False,
+    )
+
+
+def make_sharded_expand(mesh, *, axis: str = "data"):
+    """Sharded version of expand_eigensystem: permutation applies to columns
+    (replicated dimension), so each row block permutes locally."""
+
+    def body(L, U_local, lam_new, m):
+        m_new = m + 1
+        L = L.at[m].set(lam_new)
+        L = rankone.sentinelize(L, m_new, jnp.zeros((), L.dtype))
+        perm = jnp.argsort(L)
+        return L[perm], U_local[:, perm], m_new
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(axis, None), P(), P()),
+        out_specs=(P(), P(axis, None), P()),
+        check_vma=False,
+    )
+
+
+def sharded_gram_row(mesh, spec: kf.KernelSpec, *, axis: str = "data"):
+    """k(X, x_new) with X row-sharded: embarrassingly parallel."""
+
+    def body(X_local, x_new):
+        return kf.kernel_row(x_new, X_local, spec=spec)
+
+    return jax.shard_map(body, mesh=mesh, in_specs=(P(axis, None), P()),
+                         out_specs=P(axis), check_vma=False)

@@ -1,0 +1,255 @@
+"""Incremental kernel PCA (paper §3, Algorithms 1 & 2).
+
+State is fixed-capacity (capacity M, active count m) so a whole stream of
+updates compiles once; see ``rankone.py`` for the padding invariants.
+
+* ``update_unadjusted``  — Algorithm 1: expansion + 2 rank-one updates of the
+  raw kernel matrix K.
+* ``update_adjusted``    — Algorithm 2: 2 mean-adjustment updates of K', then
+  expansion + 2 updates for the new row/column (4 rank-one updates total).
+
+Both consume a precomputed kernel row ``a = [k(x_i, x_new)]`` and diagonal
+value ``k_new = k(x_new, x_new)``; ``KPCAStream`` wires in the kernel-function
+evaluation and an optional Pallas gram-row kernel, and ``update_stream`` runs
+a scan over a block of points (one compilation, sequential semantics).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Literal, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kernels_fn as kf
+from repro.core import rankone
+
+Array = jax.Array
+
+
+class KPCAState(NamedTuple):
+    """Fixed-capacity incremental KPCA state.
+
+    L:  (M,)   eigenvalues (ascending; sentinels above the active spectrum)
+    U:  (M,M)  eigenvectors in columns (identity on inactive columns)
+    m:  ()     active count (int32)
+    S:  ()     sum of all entries of the *unadjusted* K_mm          (Alg. 2)
+    K1: (M,)   row sums K_mm @ 1_m, zero-padded                     (Alg. 2)
+    X:  (M,d)  stored data points (needed to evaluate kernel rows)
+    """
+
+    L: Array
+    U: Array
+    m: Array
+    S: Array
+    K1: Array
+    X: Array
+
+
+def init_state(x0: Array, capacity: int, spec: kf.KernelSpec,
+               *, adjusted: bool, dtype=jnp.float32) -> KPCAState:
+    """Batch-initialize from m0 >= 1 seed points (eigh of the small gram)."""
+    m0, d = x0.shape
+    assert m0 <= capacity
+    x0 = x0.astype(dtype)
+    K0 = kf.gram_block(x0, x0, spec=spec)
+    S = jnp.sum(K0)
+    K1 = jnp.sum(K0, axis=1)
+    Keff = kf.center_gram(K0) if adjusted else K0
+    lam, vec = jnp.linalg.eigh(Keff)
+
+    M = capacity
+    L = jnp.zeros((M,), dtype)
+    U = jnp.eye(M, dtype=dtype)
+    L = L.at[:m0].set(lam.astype(dtype))
+    U = U.at[:m0, :m0].set(vec.astype(dtype))
+    m = jnp.asarray(m0, jnp.int32)
+    L = rankone.sentinelize(L, m, jnp.zeros((), dtype))
+
+    X = jnp.zeros((M, d), dtype).at[:m0].set(x0)
+    K1p = jnp.zeros((M,), dtype).at[:m0].set(K1.astype(dtype))
+    return KPCAState(L=L, U=U, m=m, S=S.astype(dtype), K1=K1p, X=X)
+
+
+def _masked_row(state: KPCAState, x_new: Array, spec: kf.KernelSpec) -> tuple[Array, Array]:
+    """Kernel row against stored points, zeroed beyond the active count."""
+    a_full = kf.kernel_row(x_new, state.X, spec=spec)
+    mask = rankone.active_mask(state.X.shape[0], state.m)
+    a = jnp.where(mask, a_full, 0.0)
+    k_new = kf.gram_block(x_new[None], x_new[None], spec=spec)[0, 0]
+    return a, k_new
+
+
+@partial(jax.jit, static_argnames=("method", "matmul", "iters"))
+def update_unadjusted(state: KPCAState, a: Array, k_new: Array, x_new: Array,
+                      *, method: str = "gu", matmul: str = "jnp",
+                      iters: int = 62) -> KPCAState:
+    """Algorithm 1: K_{m,m} -> K_{m+1,m+1} via expansion + 2 rank-one updates."""
+    M = state.L.shape[0]
+    m = state.m
+    kn = jnp.maximum(k_new, jnp.finfo(state.L.dtype).tiny)  # sigma = 4/k guard
+
+    # Bookkeeping for the unadjusted matrix (shared with Alg. 2 / Nyström).
+    sum_a = jnp.sum(a)
+    S2 = state.S + 2.0 * sum_a + k_new
+    K1 = jnp.where(rankone.active_mask(M, m), state.K1 + a, 0.0)
+    K1 = K1.at[m].set(sum_a + k_new)
+    X = jax.lax.dynamic_update_slice(state.X, x_new[None].astype(state.X.dtype),
+                                     (m, jnp.zeros((), m.dtype)))
+
+    # Expansion: eigenpair (k/4, e_m), then the two updates from paper eq. (2).
+    L, U, m1 = rankone.expand_eigensystem(state.L, state.U, kn / 4.0, m)
+    v1 = a.at[m].set(kn / 2.0)
+    v2 = a.at[m].set(kn / 4.0)
+    sigma = 4.0 / kn
+    L, U = rankone.rank_one_update(L, U, v1, sigma, m1,
+                                   method=method, matmul=matmul, iters=iters)
+    L, U = rankone.rank_one_update(L, U, v2, -sigma, m1,
+                                   method=method, matmul=matmul, iters=iters)
+    return KPCAState(L=L, U=U, m=m1, S=S2, K1=K1, X=X)
+
+
+@partial(jax.jit, static_argnames=("method", "matmul", "iters"))
+def update_adjusted(state: KPCAState, a: Array, k_new: Array, x_new: Array,
+                    *, method: str = "gu", matmul: str = "jnp",
+                    iters: int = 62) -> KPCAState:
+    """Algorithm 2: K'_{m,m} -> K'_{m+1,m+1} via 4 rank-one updates.
+
+    Follows the paper's derivation (§3.1.2); Alg. 2 line 4 contains an
+    erratum (the square on m(m+1)) — we use the derived
+    u = K1/(m(m+1)) - a/(m+1) + C/2 * 1_m, verified against direct
+    construction of K' in the tests.
+    """
+    M = state.L.shape[0]
+    m = state.m
+    mf = m.astype(state.L.dtype)
+    mask_m = rankone.active_mask(M, m)
+
+    # --- Step 1: mean-adjustment of the existing m×m block (2 updates). ---
+    sum_a = jnp.sum(a)
+    S2 = state.S + 2.0 * sum_a + k_new
+    C = -state.S / mf**2 + S2 / (mf + 1.0) ** 2
+    u = (state.K1 / (mf * (mf + 1.0)) - a / (mf + 1.0) + 0.5 * C)
+    u = jnp.where(mask_m, u, 0.0)
+    ones_u_p = jnp.where(mask_m, 1.0 + u, 0.0)
+    ones_u_m = jnp.where(mask_m, 1.0 - u, 0.0)
+    L, U = rankone.rank_one_update(state.L, state.U, ones_u_p,
+                                   jnp.asarray(0.5, state.L.dtype), m,
+                                   method=method, matmul=matmul, iters=iters)
+    L, U = rankone.rank_one_update(L, U, ones_u_m,
+                                   jnp.asarray(-0.5, state.L.dtype), m,
+                                   method=method, matmul=matmul, iters=iters)
+
+    # --- Step 2: bookkeeping updates (paper lines 7-9). ---
+    K1 = jnp.where(mask_m, state.K1 + a, 0.0)
+    K1 = K1.at[m].set(sum_a + k_new)
+    m_new_f = mf + 1.0
+
+    # --- Step 3: new centered row/column v (paper line 10). ---
+    k_vec = a.at[m].set(k_new)
+    mask_m1 = rankone.active_mask(M, m + 1)
+    v = k_vec - (jnp.sum(k_vec) + K1 - S2 / m_new_f) / m_new_f
+    v = jnp.where(mask_m1, v, 0.0)
+    v0 = v[m]
+    v0 = jnp.where(jnp.abs(v0) < jnp.finfo(L.dtype).eps,
+                   jnp.finfo(L.dtype).eps, v0)  # sigma = 4/v0 guard
+
+    # --- Step 4: expansion + 2 updates (paper eq. (3)). ---
+    L, U, m1 = rankone.expand_eigensystem(L, U, v0 / 4.0, m)
+    v1 = v.at[m].set(v0 / 2.0)
+    v2 = v.at[m].set(v0 / 4.0)
+    sigma = 4.0 / v0
+    L, U = rankone.rank_one_update(L, U, v1, sigma, m1,
+                                   method=method, matmul=matmul, iters=iters)
+    L, U = rankone.rank_one_update(L, U, v2, -sigma, m1,
+                                   method=method, matmul=matmul, iters=iters)
+
+    X = jax.lax.dynamic_update_slice(state.X, x_new[None].astype(state.X.dtype),
+                                     (m, jnp.zeros((), m.dtype)))
+    return KPCAState(L=L, U=U, m=m1, S=S2, K1=K1, X=X)
+
+
+class KPCAStream:
+    """User-facing streaming driver around the jitted update functions."""
+
+    def __init__(self, x0: Array, capacity: int, spec: kf.KernelSpec, *,
+                 adjusted: bool = True, method: Literal["gu", "bns"] = "gu",
+                 matmul: Literal["jnp", "pallas"] = "jnp",
+                 iters: int = 62, dtype=jnp.float32):
+        self.spec = spec
+        self.adjusted = adjusted
+        self.method = method
+        self.matmul = matmul
+        self.iters = iters
+        self.state = init_state(x0, capacity, spec, adjusted=adjusted,
+                                dtype=dtype)
+
+    def update(self, x_new: Array) -> KPCAState:
+        a, k_new = _masked_row(self.state, x_new, self.spec)
+        fn = update_adjusted if self.adjusted else update_unadjusted
+        self.state = fn(self.state, a, k_new, x_new, method=self.method,
+                        matmul=self.matmul, iters=self.iters)
+        return self.state
+
+    def update_block(self, xs: Array) -> KPCAState:
+        """Scan over a block of points — one compilation, exact sequential
+        semantics (the paper's per-point algorithm, amortized for TPU)."""
+        spec, adjusted = self.spec, self.adjusted
+        method, matmul, iters = self.method, self.matmul, self.iters
+
+        def step(state, x_new):
+            a, k_new = _masked_row(state, x_new, spec)
+            fn = update_adjusted if adjusted else update_unadjusted
+            return fn(state, a, k_new, x_new, method=method, matmul=matmul,
+                      iters=iters), None
+
+        self.state, _ = jax.lax.scan(step, self.state, xs)
+        return self.state
+
+    def truncate(self, k: int) -> KPCAState:
+        """Keep only the k dominant eigenpairs (paper conclusion: 'adapt the
+        proposed algorithm to only maintain a subset') — subsequent updates
+        then track the dominant subspace at O(k³)-per-update cost, trading
+        exactness for the Hoegaerts-style subset regime."""
+        st = self.state
+        M = st.L.shape[0]
+        mask = rankone.active_mask(M, st.m)
+        order = jnp.argsort(jnp.where(mask, -st.L, jnp.inf))
+        keep = order[:k]
+        L = jnp.zeros_like(st.L).at[:k].set(st.L[keep])
+        U = jnp.eye(M, dtype=st.U.dtype).at[:, :k].set(st.U[:, keep])
+        m = jnp.minimum(st.m, jnp.asarray(k, st.m.dtype))
+        L = rankone.sentinelize(L, m, jnp.zeros((), L.dtype))
+        self.state = KPCAState(L=L, U=U, m=m, S=st.S, K1=st.K1, X=st.X)
+        return self.state
+
+    # ---- read-out utilities -------------------------------------------------
+    def eigpairs(self) -> tuple[Array, Array]:
+        """Active (descending) eigenvalues and eigenvectors."""
+        st = self.state
+        M = st.L.shape[0]
+        mask = rankone.active_mask(M, st.m)
+        order = jnp.argsort(jnp.where(mask, -st.L, jnp.inf))
+        return st.L[order], st.U[:, order]
+
+    def reconstruction(self) -> Array:
+        return rankone.reconstruct(self.state.L, self.state.U, self.state.m)
+
+    def transform(self, x: Array, n_components: int) -> Array:
+        """Project new points on the leading kernel principal components."""
+        st = self.state
+        lam, vec = self.eigpairs()
+        lam = lam[:n_components]
+        vec = vec[:, :n_components]
+        krow = kf.gram_block(x.astype(st.X.dtype), st.X, spec=self.spec)
+        mask = rankone.active_mask(st.X.shape[0], st.m)
+        krow = jnp.where(mask[None, :], krow, 0.0)
+        if self.adjusted:
+            mf = st.m.astype(st.L.dtype)
+            rowmean = jnp.sum(krow, axis=1, keepdims=True) / mf
+            colmean = (st.K1 / mf)[None, :]
+            grand = st.S / mf**2
+            krow = jnp.where(mask[None, :],
+                             krow - rowmean - colmean + grand, 0.0)
+        denom = jnp.sqrt(jnp.maximum(lam, jnp.finfo(st.L.dtype).eps))
+        return (krow @ vec) / denom[None, :]

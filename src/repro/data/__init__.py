@@ -1,0 +1,2 @@
+from repro.data.synthetic import TokenStream, make_batch_specs
+from repro.data.uci_like import magic_like, yeast_like, load_dataset

@@ -1,0 +1,3 @@
+from repro.distributed.sharding import use_mesh, constrain, DEFAULT_RULES
+from repro.distributed.straggler import HeartbeatMonitor, StepTimer
+from repro.distributed.pipeline import pipeline_apply, make_stage_fn

@@ -1,0 +1,4 @@
+from repro.kernels.eigvec_update import ops, ref
+from repro.kernels.eigvec_update.eigvec_update import eigvec_rotate
+
+__all__ = ["ops", "ref", "eigvec_rotate"]

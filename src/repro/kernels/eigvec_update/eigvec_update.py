@@ -1,0 +1,92 @@
+"""Fused Cauchy-factor eigenvector rotation — the paper's O(m^3) hot spot.
+
+Computes  C = U @ (W * inv[None, :])  where  W[k, j] = zhat[k] / (d[k] - lam[j])
+without ever materializing W in HBM: each (BK, BJ) tile of W is generated in
+VMEM from three O(M) vectors immediately before the MXU dot-accumulate.
+
+Roofline motivation (TPU v5e, bf16/f32): the naive two-step
+(materialize W, then matmul) moves 3·M^2 reads + 2·M^2 writes of HBM traffic;
+the fused kernel moves M^2 reads (U) + M^2 writes (C) — a ~2.5× cut on the
+memory term, and the VPU divide pipeline overlaps the MXU dot.
+
+Tiling: (BI, BJ) output tiles, reduction over K in the innermost grid axis;
+MXU-aligned 128×128×128 blocks by default.  Vectors are carried as (M, 1) /
+(1, M) so no in-kernel transposes are needed (lane/sublane friendly).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 128
+
+
+def _kernel(u_ref, z_ref, d_ref, lam_ref, inv_ref, out_ref, acc_ref, *,
+            k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Generate the W tile in VMEM: (BK, 1) vectors against (1, BJ) vectors.
+    zcol = z_ref[...]            # (BK, 1)
+    dcol = d_ref[...]            # (BK, 1)
+    lamrow = lam_ref[...]        # (1, BJ)
+    w = zcol / (dcol - lamrow)   # (BK, BJ) — Cauchy tile, never hits HBM
+
+    acc_ref[...] += jnp.dot(u_ref[...], w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _done():
+        out_ref[...] = (acc_ref[...] * inv_ref[...]).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def eigvec_rotate(u: jax.Array, zhat: jax.Array, d: jax.Array,
+                  lam: jax.Array, inv: jax.Array, *,
+                  block: int = DEFAULT_BLOCK,
+                  interpret: bool = False) -> jax.Array:
+    """C[i, j] = sum_k U[i,k] * zhat[k]/(d[k]-lam[j]) * inv[j].
+
+    u: (M, M); zhat, d, lam, inv: (M,).  M is padded internally to a multiple
+    of ``block``; padded columns use lam=1e30 / d=2e30 so generated W entries
+    are exactly 0 (no NaNs enter the accumulator).
+    """
+    M = u.shape[0]
+    Mp = -(-M // block) * block
+    pad = Mp - M
+    dtype = u.dtype
+    if pad:
+        u = jnp.pad(u, ((0, pad), (0, pad)))
+        zhat = jnp.pad(zhat, (0, pad))
+        d = jnp.pad(d, (0, pad), constant_values=2e30)
+        lam = jnp.pad(lam, (0, pad), constant_values=1e30)
+        inv = jnp.pad(inv, (0, pad))
+    zcol = zhat.reshape(Mp, 1).astype(dtype)
+    dcol = d.reshape(Mp, 1).astype(dtype)
+    lamrow = lam.reshape(1, Mp).astype(dtype)
+    invrow = inv.reshape(1, Mp).astype(dtype)
+
+    steps = Mp // block
+    out = pl.pallas_call(
+        functools.partial(_kernel, k_steps=steps),
+        grid=(steps, steps, steps),
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, j, k: (i, k)),   # U
+            pl.BlockSpec((block, 1), lambda i, j, k: (k, 0)),       # zhat
+            pl.BlockSpec((block, 1), lambda i, j, k: (k, 0)),       # d
+            pl.BlockSpec((1, block), lambda i, j, k: (0, j)),       # lam
+            pl.BlockSpec((1, block), lambda i, j, k: (0, j)),       # inv
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Mp), dtype),
+        scratch_shapes=[pltpu.VMEM((block, block), jnp.float32)],
+        interpret=interpret,
+    )(u, zcol, dcol, lamrow, invrow)
+    return out[:M, :M]

@@ -1,0 +1,42 @@
+"""Jit'd public wrapper for the fused eigenvector rotation kernel.
+
+Dispatch: real TPU -> compiled Pallas; CPU (this container) -> Pallas
+interpret mode for small sizes in tests, pure-jnp oracle otherwise (the
+interpreter is Python-slow; numerics are identical).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.eigvec_update.eigvec_update import eigvec_rotate
+from repro.kernels.eigvec_update.ref import eigvec_rotate_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def rotate_vectors(u: jax.Array, zhat: jax.Array, d: jax.Array,
+                   lam: jax.Array, inv: jax.Array, *,
+                   force: str | None = None) -> jax.Array:
+    """C = U @ (diag-normalized Cauchy factor).
+
+    force in {None, 'pallas', 'interpret', 'ref'} overrides dispatch; the
+    REPRO_PALLAS_FORCE env var does the same (tests set it to 'interpret'
+    so the real kernel body executes on CPU).
+    """
+    force = force or os.environ.get("REPRO_PALLAS_FORCE") or None
+    if force == "ref" or (force is None and not _on_tpu()):
+        return eigvec_rotate_ref(u, zhat, d, lam, inv)
+    if force == "interpret":
+        return eigvec_rotate(u, zhat, d, lam, inv, interpret=True)
+    return eigvec_rotate(u, zhat, d, lam, inv)
+
+
+def rotate(u: jax.Array, wn: jax.Array) -> jax.Array:
+    """Fallback entry used by rankone when only the dense factor is at hand
+    (keeps the pallas code-path selectable end-to-end)."""
+    return u @ wn

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the fused Cauchy eigenvector rotation."""
+import jax
+import jax.numpy as jnp
+
+
+def eigvec_rotate_ref(u: jax.Array, zhat: jax.Array, d: jax.Array,
+                      lam: jax.Array, inv: jax.Array) -> jax.Array:
+    """Materialize W then matmul — the unfused baseline the kernel beats."""
+    W = zhat[:, None] / (d[:, None] - lam[None, :])
+    return (u @ W) * inv[None, :]

@@ -1,0 +1,3 @@
+from repro.kernels.flash_attn.ops import causal_attention
+from repro.kernels.flash_attn.flash_attn import flash_attention
+from repro.kernels.flash_attn.ref import flash_attention_ref

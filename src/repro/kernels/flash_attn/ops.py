@@ -1,0 +1,28 @@
+"""Jit'd public wrapper for the fused flash-attention kernel.
+
+Dispatch: real TPU -> compiled Pallas; CPU (this container) -> interpret
+mode in tests (REPRO_PALLAS_FORCE=interpret) or the jnp oracle otherwise.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.flash_attn.flash_attn import flash_attention
+from repro.kernels.flash_attn.ref import flash_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def causal_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     force: str | None = None) -> jax.Array:
+    """Fused causal attention over (BH, T, hd) slices."""
+    force = force or os.environ.get("REPRO_PALLAS_FORCE") or None
+    if force == "ref" or (force is None and not _on_tpu()):
+        return flash_attention_ref(q, k, v)
+    if force == "interpret":
+        return flash_attention(q, k, v, interpret=True)
+    return flash_attention(q, k, v)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused flash-attention kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array
+                        ) -> jax.Array:
+    """Naive causal softmax attention; q, k, v: (BH, T, hd)."""
+    T = q.shape[1]
+    hd = q.shape[2]
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) / (hd ** 0.5)
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v)

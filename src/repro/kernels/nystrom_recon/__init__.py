@@ -1,0 +1,4 @@
+from repro.kernels.nystrom_recon import ops, ref
+from repro.kernels.nystrom_recon.nystrom_recon import scaled_gram
+
+__all__ = ["ops", "ref", "scaled_gram"]

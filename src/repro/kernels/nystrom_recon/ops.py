@@ -1,0 +1,19 @@
+"""Jit'd public wrapper for the Nyström reconstruction kernel."""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.nystrom_recon.nystrom_recon import scaled_gram as _pallas
+from repro.kernels.nystrom_recon.ref import scaled_gram_ref
+
+
+def scaled_gram(b: jax.Array, s: jax.Array, *, force: str | None = None
+                ) -> jax.Array:
+    force = force or os.environ.get("REPRO_PALLAS_FORCE") or None
+    if force == "ref" or (force is None and jax.default_backend() != "tpu"):
+        return scaled_gram_ref(b, s)
+    if force == "interpret":
+        return _pallas(b, s, interpret=True)
+    return _pallas(b, s)

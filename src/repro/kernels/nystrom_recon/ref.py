@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the fused Nyström reconstruction kernel."""
+import jax
+
+
+def scaled_gram_ref(b: jax.Array, s: jax.Array) -> jax.Array:
+    return (b * s[None, :]) @ b.T

@@ -1,0 +1,4 @@
+from repro.kernels.rbf_gram import ops, ref
+from repro.kernels.rbf_gram.rbf_gram import rbf_gram
+
+__all__ = ["ops", "ref", "rbf_gram"]

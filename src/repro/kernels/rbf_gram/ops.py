@@ -1,0 +1,19 @@
+"""Jit'd public wrapper for the RBF gram kernel (dispatch as eigvec_update)."""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.rbf_gram.rbf_gram import rbf_gram
+from repro.kernels.rbf_gram.ref import rbf_gram_ref
+
+
+def gram(x: jax.Array, y: jax.Array, sigma, *, force: str | None = None
+         ) -> jax.Array:
+    force = force or os.environ.get("REPRO_PALLAS_FORCE") or None
+    if force == "ref" or (force is None and jax.default_backend() != "tpu"):
+        return rbf_gram_ref(x, y, sigma)
+    if force == "interpret":
+        return rbf_gram(x, y, sigma, interpret=True)
+    return rbf_gram(x, y, sigma)

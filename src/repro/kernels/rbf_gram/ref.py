@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the tiled RBF gram kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def rbf_gram_ref(x: jax.Array, y: jax.Array, sigma: jax.Array) -> jax.Array:
+    xn = jnp.sum(x * x, axis=-1)[:, None]
+    yn = jnp.sum(y * y, axis=-1)[None, :]
+    d2 = jnp.maximum(xn + yn - 2.0 * (x @ y.T), 0.0)
+    return jnp.exp(-d2 / sigma)

@@ -1,0 +1,3 @@
+from repro.kernels.ssd_chunk.ops import intra_chunk
+from repro.kernels.ssd_chunk.ssd_chunk import ssd_intra_chunk
+from repro.kernels.ssd_chunk.ref import ssd_intra_chunk_ref

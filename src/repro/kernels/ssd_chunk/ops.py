@@ -1,0 +1,22 @@
+"""Jit'd public wrapper for the fused SSD intra-chunk kernel."""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.ssd_chunk.ref import ssd_intra_chunk_ref
+from repro.kernels.ssd_chunk.ssd_chunk import ssd_intra_chunk
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def intra_chunk(c, b, x, cum, *, force: str | None = None):
+    force = force or os.environ.get("REPRO_PALLAS_FORCE") or None
+    if force == "ref" or (force is None and not _on_tpu()):
+        return ssd_intra_chunk_ref(c, b, x, cum)
+    if force == "interpret":
+        return ssd_intra_chunk(c, b, x, cum, interpret=True)
+    return ssd_intra_chunk(c, b, x, cum)

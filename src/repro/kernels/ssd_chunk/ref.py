@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused SSD intra-chunk kernel."""
+import jax.numpy as jnp
+
+
+def ssd_intra_chunk_ref(c, b, x, cum):
+    """c, b: (G,Q,N); x: (G,Q,H,P); cum: (G,Q,H) -> (G,Q,H,P)."""
+    G, Q, N = c.shape
+    scores = jnp.einsum("gqn,gsn->gqs", c, b)
+    ldiff = cum[:, :, None, :] - cum[:, None, :, :]       # (G,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+    decay = jnp.where(causal, jnp.exp(ldiff), 0.0)
+    m = scores[..., None] * decay
+    return jnp.einsum("gqsh,gshp->gqhp", m.astype(x.dtype), x)

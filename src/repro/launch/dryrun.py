@@ -1,0 +1,272 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: the jit is
+lowered against ShapeDtypeStruct inputs (no allocation), compiled for the
+production mesh, and the compiled artifact yields the §Roofline terms
+(memory_analysis, cost_analysis, collective bytes from the HLO).
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3_32b --shape train_4k
+    python -m repro.launch.dryrun --all --multi-pod
+    python -m repro.launch.dryrun --all --both-meshes --out experiments/dryrun
+"""
+# The 512 placeholder devices MUST be configured before any other import —
+# jax locks the device count on first initialization.
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse        # noqa: E402
+import dataclasses     # noqa: E402
+import json            # noqa: E402
+import time            # noqa: E402
+import traceback       # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax             # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import configs                      # noqa: E402
+from repro.data.synthetic import make_batch_specs  # noqa: E402
+from repro.distributed import sharding as shd  # noqa: E402
+from repro.launch import hlo_parse, hlo_stats, steps  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import lm                    # noqa: E402
+from repro.models.config import active_param_count  # noqa: E402
+
+
+def input_specs(cfg, shape_spec: dict) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    if shape_spec["kind"] == "train":
+        return make_batch_specs(cfg, shape_spec["global_batch"],
+                                shape_spec["seq_len"])
+    B = shape_spec["global_batch"]
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+    }
+
+
+def pick_accum(cfg, shape_spec: dict, mesh, target_bytes: float = 4e9) -> int:
+    """Gradient-accumulation factor so per-device activations fit HBM."""
+    if shape_spec["kind"] != "train":
+        return 1
+    data_ways = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    b_loc = max(shape_spec["global_batch"] // data_ways, 1)
+    # saved residual stream per scan step (bf16), × periods
+    per = (b_loc * shape_spec["seq_len"] * cfg.d_model * 2
+           * (cfg.n_layers // cfg.period))
+    accum = 1
+    while per / accum > target_bytes and accum < b_loc:
+        accum *= 2
+    return accum
+
+
+def lower_cell(arch: str, shape: str, *, multi_pod: bool,
+               nystrom: bool = False, accum: int | None = None,
+               overrides: dict | None = None,
+               rule_overrides: dict | None = None):
+    cfg = configs.get_config(arch)
+    if nystrom:
+        cfg = dataclasses.replace(cfg, attention="nystrom")
+    if overrides:
+        moe_over = {k[4:]: v for k, v in overrides.items()
+                    if k.startswith("moe_") and k != "moe_every"}
+        overrides = {k: v for k, v in overrides.items()
+                     if not (k.startswith("moe_") and k != "moe_every")}
+        if moe_over and cfg.moe is not None:
+            overrides["moe"] = dataclasses.replace(cfg.moe, **moe_over)
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape_spec = configs.SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = len(mesh.devices.reshape(-1))
+    rng = jax.random.PRNGKey(0)
+
+    rules = None
+    if rule_overrides:
+        rules = dict(shd.DEFAULT_RULES)
+        rules.update(rule_overrides)
+
+    with shd.use_mesh(mesh, rules=rules):
+        if shape_spec["kind"] == "train":
+            optimizer = steps.optimizer_for(arch)
+            schedule = steps.schedule_for(arch)
+            accum = accum or pick_accum(cfg, shape_spec, mesh)
+            step_fn = steps.make_train_step(cfg, optimizer, schedule,
+                                            accum=accum)
+            state_shapes = jax.eval_shape(
+                partial(steps.init_train_state, cfg=cfg,
+                        optimizer=optimizer), rng)
+            state_sh = steps.state_shardings(state_shapes)
+            batch_specs = input_specs(cfg, shape_spec)
+            batch_sh = steps.batch_shardings(batch_specs)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_shapes, batch_specs)
+            tokens = shape_spec["global_batch"] * shape_spec["seq_len"]
+            model_flops = hlo_stats.model_flops_train(
+                active_param_count(cfg), tokens)
+        else:
+            serve_fn = steps.make_serve_step(cfg)
+            params_shapes = jax.eval_shape(
+                partial(lm.init_params, cfg=cfg), rng)
+            params_sh = steps.param_sharding_tree(params_shapes)
+            B = shape_spec["global_batch"]
+            cache_shapes = jax.eval_shape(
+                partial(lm.init_caches, cfg=cfg, batch=B,
+                        max_seq=shape_spec["seq_len"]), params_shapes)
+            cache_sh = steps.cache_shardings(cache_shapes)
+            io = input_specs(cfg, shape_spec)
+            io_sh = {k: shd.named_sharding(("batch", None), tuple(v.shape))
+                     for k, v in io.items()}
+            jitted = jax.jit(serve_fn,
+                             in_shardings=(params_sh, cache_sh,
+                                           io_sh["token"], io_sh["pos"]),
+                             out_shardings=(io_sh["token"], None, cache_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_shapes, cache_shapes,
+                                   io["token"], io["pos"])
+            model_flops = hlo_stats.model_flops_decode(
+                active_param_count(cfg), shape_spec["global_batch"])
+        accum_used = accum if shape_spec["kind"] == "train" else 1
+
+    return lowered, {"arch": arch, "shape": shape, "chips": chips,
+                     "mesh": "pod2x16x16" if multi_pod else "16x16",
+                     "nystrom": nystrom, "accum": accum_used,
+                     "model_flops": model_flops}
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
+             nystrom: bool = False, accum: int | None = None,
+             hlo_dir: str | None = None, overrides: dict | None = None,
+             rule_overrides: dict | None = None,
+             tag_suffix: str = "") -> dict:
+    t0 = time.time()
+    lowered, meta = lower_cell(arch, shape, multi_pod=multi_pod,
+                               nystrom=nystrom, accum=accum,
+                               overrides=overrides,
+                               rule_overrides=rule_overrides)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = hlo_stats.memory_analysis_dict(compiled)
+    xla_cost = hlo_stats.cost_analysis_terms(compiled, meta["chips"])
+    hlo = compiled.as_text()
+    # Trip-count-aware per-device accounting (hlo_parse), the roofline
+    # source of truth; XLA cost_analysis retained as a cross-check (it
+    # counts while bodies once).
+    stats = hlo_parse.analyze(hlo)
+    chips = meta["chips"]
+    flops_global = stats.flops * chips
+    bytes_global = stats.bytes * chips
+    terms = hlo_stats.roofline_terms(flops_global, bytes_global,
+                                     stats.wire_bytes, chips)
+    result = {
+        **meta,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "hlo_flops": flops_global,
+        "hlo_bytes": bytes_global,
+        "hlo_flops_per_device": stats.flops,
+        "hlo_bytes_per_device": stats.bytes,
+        "xla_cost_flops_1trip": xla_cost["hlo_flops"],
+        "xla_cost_bytes_1trip": xla_cost["hlo_bytes"],
+        "collective_wire_bytes": stats.wire_bytes,
+        "collective_payload_bytes": stats.payload_bytes,
+        "collective_by_kind": stats.by_kind,
+        "collective_count": stats.coll_count,
+        **terms,
+        "useful_flops_ratio": (meta["model_flops"] / flops_global
+                               if flops_global else 0.0),
+    }
+    tag = (f"{arch}_{shape}_{meta['mesh']}" + ("_nys" if nystrom else "")
+           + tag_suffix)
+    if hlo_dir:
+        os.makedirs(hlo_dir, exist_ok=True)
+        with open(os.path.join(hlo_dir, tag + ".hlo.txt"), "w") as f:
+            f.write(hlo)
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def _fmt(r: dict) -> str:
+    return (f"{r['arch']:22s} {r['shape']:11s} {r['mesh']:10s} "
+            f"compile={r['compile_s']:7.1f}s "
+            f"flops={r['hlo_flops']:.3e} "
+            f"C/M/N={r['compute_s']:.2e}/{r['memory_s']:.2e}/"
+            f"{r['collective_s']:.2e} dom={r['dominant']:10s} "
+            f"useful={r['useful_flops_ratio']:.2f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--nystrom", action="store_true",
+                    help="force attention='nystrom' (long-context extra)")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config overrides key=value (e.g. attn_impl=flash,"
+                         " moe_impl=scatter); tagged into the output name")
+    ap.add_argument("--rule", action="append", default=[],
+                    help="sharding-rule overrides name=axis "
+                         "(e.g. expert_cap=data)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--hlo-dir", default=None,
+                    help="also dump compiled HLO text here")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    cells = (configs.cells() if args.all
+             else [(args.arch, args.shape, configs.SHAPES[args.shape],
+                    False)])
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            pass
+        overrides[k] = v
+    rule_overrides = {}
+    for kv in args.rule:
+        k, v = kv.split("=", 1)
+        rule_overrides[k] = v if v != "none" else None
+    parts = [f"{k}={v}" for k, v in overrides.items()]
+    parts += [f"r.{k}={v}" for k, v in rule_overrides.items()]
+    suffix = args.tag or ("_" + "-".join(parts) if parts else "")
+
+    failures = []
+    for mp in meshes:
+        for arch, shape, _, _ in cells:
+            try:
+                r = run_cell(arch, shape, multi_pod=mp, out_dir=args.out,
+                             nystrom=args.nystrom, accum=args.accum,
+                             hlo_dir=args.hlo_dir, overrides=overrides,
+                             rule_overrides=rule_overrides,
+                             tag_suffix=suffix)
+                print(_fmt(r), flush=True)
+                if args.verbose:
+                    print(json.dumps(r["memory"], indent=2), flush=True)
+            except Exception as e:      # noqa: BLE001
+                failures.append((arch, shape, mp, repr(e)))
+                print(f"FAIL {arch} {shape} multi_pod={mp}: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run cells failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

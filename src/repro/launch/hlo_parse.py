@@ -1,0 +1,440 @@
+"""Trip-count-aware HLO analysis (parser-lite over compiled HLO text).
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE — useless for
+scan-over-layers programs where >95% of the work sits inside loops.  This
+module parses the post-SPMD-partitioning HLO text and resolves, per
+computation and recursively through ``while``/``fusion``/``conditional``:
+
+* **flops** — 2·K·prod(result) for every ``dot`` (incl. dots inside fusion
+  computations), the dominant LM compute;
+* **hbm bytes** — Σ (operand + result bytes) over non-free ops in real
+  (non-fusion) computations: the post-fusion boundary model of HBM traffic
+  (same model HloCostAnalysis uses), fusion-internal temps excluded;
+* **collective wire bytes** — ring-model per-device bytes per op kind;
+
+each multiplied by the enclosing while's trip count (read from the largest
+integer constant in the loop-condition computation — XLA emits
+``compare(induction, constant(T))`` for scan loops; fallback 1).
+
+All numbers are PER DEVICE (the partitioned module is the per-device
+program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "after-all", "add-dependency", "domain",
+    "opt-barrier", "partition-id", "replica-id", "call",
+}
+
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-reduce-start", "all-gather-start",
+                "collective-permute-start"}
+
+_TYPE_RE = re.compile(r"([a-z]\d*[a-z]*\d*(?:e\dm\d\w*)?)\[([\d,]*)\]")
+_OPLINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s([a-z][a-z0-9\-]*)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*\{")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"(?:branch_computations|true_computation|"
+                          r"false_computation)=\{?%?([\w\.\-,% ]+)\}?")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\}?")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONST_INT_RE = re.compile(r"[su]\d+\[\]\s+constant\((\d+)\)")
+
+
+def _type_bytes(segment: str) -> float:
+    total = 0.0
+    for dt, dims in _TYPE_RE.findall(segment):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _dims_of(segment: str) -> list[int]:
+    m = _TYPE_RE.search(segment)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    result_bytes: float
+    line: str
+    result_seg: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    symbols: dict = field(default_factory=dict)   # name -> result bytes
+    dims: dict = field(default_factory=dict)      # name -> result dims
+    by_name: dict = field(default_factory=dict)   # name -> Op
+
+
+@dataclass
+class Stats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire_bytes: float = 0.0
+    payload_bytes: float = 0.0
+    coll_count: int = 0
+    by_kind: dict = field(default_factory=dict)
+
+    def add_scaled(self, other: "Stats", k: float, flops_only: bool = False):
+        self.flops += k * other.flops
+        if flops_only:
+            return
+        self.bytes += k * other.bytes
+        self.wire_bytes += k * other.wire_bytes
+        self.payload_bytes += k * other.payload_bytes
+        self.coll_count += int(k * other.coll_count)
+        for kk, v in other.by_kind.items():
+            d = self.by_kind.setdefault(kk, {"count": 0, "wire_bytes": 0.0})
+            d["count"] += int(k * v["count"])
+            d["wire_bytes"] += k * v["wire_bytes"]
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    current: Computation | None = None
+    for line in hlo.splitlines():
+        # Computation headers sit at column 0: `%name (args) -> type {`
+        # (args may contain nested parens for tuple types, so parse by
+        # position rather than a paren-matching regex).
+        if (line and not line[0].isspace() and line.rstrip().endswith("{")
+                and "->" in line):
+            head = line.strip()
+            if head.startswith("ENTRY"):
+                head = head[len("ENTRY"):].strip()
+            name = head.split("(")[0].split()[0].lstrip("%").rstrip(".")
+            current = Computation(name=name)
+            comps[name] = current
+            continue
+        if current is None:
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        mo = _OPLINE_RE.match(line)
+        if not mo:
+            continue
+        name, result_seg, opcode = mo.groups()
+        rbytes = _type_bytes(result_seg)
+        current.symbols[name] = rbytes
+        current.dims[name] = _dims_of(result_seg)
+        o = Op(name=name, opcode=opcode, result_bytes=rbytes,
+               line=line, result_seg=result_seg)
+        current.ops.append(o)
+        current.by_name[name] = o
+    return comps
+
+
+def _bf16_legalized(op: Op, comp: Computation,
+                    comps: dict[str, Computation] | None = None) -> bool:
+    """True when a collective's f32 payload is an XLA:CPU bf16->f32
+    legalization artifact: on TPU the tensor stays bf16 and the wire cost
+    is half. Detected as: f32 collective whose direct operand is a
+    convert (or convert-fusion whose callee upconverts from bf16)."""
+    if not op.result_seg.lstrip("(").startswith("f32"):
+        return False
+    m = re.search(re.escape(op.opcode) + r"\(%([\w\.\-]+)", op.line)
+    if not m:
+        return False
+    src = comp.by_name.get(m.group(1))
+    if src is None:
+        return False
+    if src.opcode == "convert" and "bf16" in src.line:
+        return True
+    if src.opcode in ("fusion", "copy") and "convert" in src.name:
+        if "bf16" in src.line:
+            return True
+        if comps is not None:
+            mc = _CALLS_RE.search(src.line)
+            callee = comps.get(mc.group(1)) if mc else None
+            if callee is not None and any(
+                    o.opcode == "convert" and "bf16" in o.line
+                    for o in callee.ops):
+                return True
+    return False
+
+
+def _operand_bytes_list(op: Op, comp: Computation) -> list[float]:
+    # operand names inside the call parens; the symbol table is
+    # authoritative (handles tuple-typed operands and bare names).
+    m = re.search(re.escape(op.opcode) + r"\((.*)$", op.line)
+    if not m:
+        return []
+    seg = m.group(1)
+    depth = 1
+    out = []
+    for ch in seg:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        out.append(ch)
+    inner = "".join(out)
+    return [comp.symbols.get(nm, 0.0)
+            for nm in re.findall(r"%([\w\.\-]+)", inner)]
+
+
+def _fusion_param_reads(callee: Computation) -> dict[int, float | None]:
+    """Per-parameter read bytes inside a fusion computation.
+
+    None  -> full operand read (default);
+    float -> slice-limited read (parameter consumed ONLY by dynamic-slice /
+             gather ops: a scan reading one step of a stacked buffer).
+    """
+    param_names: dict[str, int] = {}
+    for op in callee.ops:
+        if op.opcode == "parameter":
+            m = re.search(r"parameter\((\d+)\)", op.line)
+            if m:
+                param_names[op.name] = int(m.group(1))
+    reads: dict[int, float | None] = {}
+    consumers: dict[str, list[Op]] = {n: [] for n in param_names}
+    for op in callee.ops:
+        if op.opcode == "parameter":
+            continue
+        for nm in re.findall(r"%([\w\.\-]+)", op.line.split("=", 1)[-1]):
+            if nm in consumers:
+                consumers[nm].append(op)
+    for nm, idx in param_names.items():
+        ops = consumers.get(nm, [])
+        if ops and all(o.opcode in ("dynamic-slice", "gather")
+                       for o in ops):
+            reads[idx] = sum(o.result_bytes for o in ops)
+        else:
+            reads[idx] = None
+    return reads
+
+
+def _fusion_bytes(op: Op, comp: Computation,
+                  callee: Computation | None) -> float:
+    ops_b = _operand_bytes_list(op, comp)
+    if callee is None:
+        return sum(ops_b) + op.result_bytes
+    reads = _fusion_param_reads(callee)
+    total = 0.0
+    for i, b in enumerate(ops_b):
+        r = reads.get(i, None)
+        total += b if r is None else min(r, b)
+    # A fusion containing dynamic-update-slice updates its buffer in place
+    # (possibly behind a convert/bitcast root): write = update-slice bytes,
+    # and the aliased big buffer is neither fully read nor fully written.
+    dus_ops = [o for o in callee.ops if o.opcode == "dynamic-update-slice"]
+    if dus_ops:
+        upd = 0.0
+        for o in dus_ops:
+            m = re.search(
+                r"dynamic-update-slice\(%([\w\.\-]+),\s*%([\w\.\-]+)",
+                o.line)
+            upd += callee.symbols.get(m.group(2), 0.0) if m else 0.0
+        big = max(ops_b) if ops_b else 0.0
+        return max(total - big, 0.0) + upd
+    return total + op.result_bytes
+
+
+def _hbm_bytes(op: Op, comp: Computation,
+               comps: dict[str, Computation] | None = None) -> float:
+    """Post-fusion HBM traffic model for one op.
+
+    In-place / slice ops are the critical special case: a
+    dynamic-update-slice on a (T, ...) stacking buffer inside a scan writes
+    only the slice, and a fused dynamic-slice reads only one step — counting
+    whole buffers per trip overstates bytes by ~1000×.
+    """
+    if op.opcode == "fusion":
+        callee = None
+        if comps is not None:
+            mc = _CALLS_RE.search(op.line)
+            if mc:
+                callee = comps.get(mc.group(1))
+        return _fusion_bytes(op, comp, callee)
+    ops_b = _operand_bytes_list(op, comp)
+    if op.opcode == "dynamic-update-slice":
+        upd = ops_b[1] if len(ops_b) > 1 else 0.0
+        return 2.0 * upd
+    if op.opcode == "dynamic-slice":
+        return 2.0 * op.result_bytes
+    total_in = sum(ops_b)
+    if "output_to_operand_aliasing" in op.line and ops_b:
+        aliased = max(ops_b)
+        return max(total_in - aliased, 0.0) + max(op.result_bytes - aliased,
+                                                  0.0)
+    return total_in + op.result_bytes
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    # flops = 2 × prod(result dims) × prod(lhs contracting dims).
+    # Operands are printed as bare names in compiled HLO — resolve the lhs
+    # dims through the computation's symbol table.
+    res_dims = _dims_of(op.result_seg)
+    m = re.search(r"\sdot\(\s*(?:[a-z0-9]+\[[\d,]*\][^\s]*\s+)?%([\w\.\-]+)",
+                  op.line)
+    lhs_dims: list[int] = []
+    if m:
+        lhs_dims = comp.dims.get(m.group(1), [])
+        if not lhs_dims:
+            mt = re.search(r"dot\(\s*([a-z0-9]+\[[\d,]*\])", op.line)
+            if mt:
+                lhs_dims = _dims_of(mt.group(1))
+    mc = _LHS_CONTRACT_RE.search(op.line)
+    k = 1
+    if mc and lhs_dims:
+        for idx in mc.group(1).split(","):
+            if idx:
+                k *= lhs_dims[int(idx)]
+    n = 1
+    for d in res_dims:
+        n *= d
+    return 2.0 * n * k
+
+
+def _participants(line: str, kind: str) -> int:
+    mg = _GROUPS_RE.search(line)
+    if mg:
+        first = mg.group(1).split("}")[0]
+        return max(len([t for t in first.split(",") if t.strip() != ""]), 1)
+    mi = _GROUPS_IOTA_RE.search(line)
+    if mi:
+        return int(mi.group(2))
+    if kind.startswith("collective-permute"):
+        return 2
+    return 1
+
+
+def _collective_wire(op: Op) -> tuple[str, float, float]:
+    kind = op.opcode.replace("-start", "")
+    p = _participants(op.line, kind)
+    out_b = op.result_bytes
+    if op.opcode.endswith("-start"):
+        # start ops return (operand, result) tuples: halve the estimate
+        out_b = out_b / 2.0
+    if p <= 1 and kind != "collective-permute":
+        return kind, 0.0, 0.0
+    if kind == "all-reduce":
+        wire = 2.0 * (p - 1) / p * out_b
+    elif kind == "all-gather":
+        wire = (p - 1) / p * out_b
+    elif kind == "reduce-scatter":
+        wire = (p - 1) * out_b
+    elif kind == "all-to-all":
+        wire = (p - 1) / p * out_b
+    else:
+        wire = out_b
+    return kind, wire, out_b
+
+
+def _trip_count(cond_name: str, comps: dict) -> int:
+    comp = comps.get(cond_name)
+    if not comp:
+        return 1
+    best = 1
+    for op in comp.ops:
+        for mm in _CONST_INT_RE.finditer(op.line):
+            best = max(best, int(mm.group(1)))
+    return best
+
+
+class Analyzer:
+    def __init__(self, hlo: str):
+        self.comps = parse_computations(hlo)
+        self._memo: dict[tuple[str, bool], Stats] = {}
+        self.entry = self._find_entry(hlo)
+
+    def _find_entry(self, hlo: str) -> str:
+        m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.M)
+        if m:
+            return m.group(1)
+        # fallback: computation named 'main*'
+        for name in self.comps:
+            if name.startswith("main"):
+                return name
+        return next(iter(self.comps))
+
+    def stats(self, comp_name: str | None = None,
+              flops_only: bool = False) -> Stats:
+        name = comp_name or self.entry
+        key = (name, flops_only)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(name)
+        s = Stats()
+        self._memo[key] = s
+        if comp is None:
+            return s
+        for op in comp.ops:
+            if op.opcode == "dot":
+                s.flops += _dot_flops(op, comp)
+            if op.opcode == "fusion":
+                mc = _CALLS_RE.search(op.line)
+                if mc:
+                    s.add_scaled(self.stats(mc.group(1), flops_only=True),
+                                 1.0)
+            elif op.opcode == "while":
+                mb = _BODY_RE.search(op.line)
+                mc = _COND_RE.search(op.line)
+                trips = _trip_count(mc.group(1), self.comps) if mc else 1
+                if mb:
+                    s.add_scaled(self.stats(mb.group(1), flops_only),
+                                 trips, flops_only)
+            elif op.opcode == "conditional":
+                mb = _BRANCHES_RE.search(op.line)
+                if mb:
+                    names = re.findall(r"[\w\.\-]+", mb.group(1))
+                    for nm in names:
+                        s.add_scaled(self.stats(nm, flops_only), 1.0,
+                                     flops_only)
+            elif op.opcode == "call":
+                mc = re.search(r"to_apply=%?([\w\.\-]+)", op.line)
+                if mc:
+                    s.add_scaled(self.stats(mc.group(1), flops_only), 1.0,
+                                 flops_only)
+
+            if flops_only:
+                continue
+            if op.opcode in _FREE_OPS:
+                continue
+            if op.opcode in _COLLECTIVES:
+                if op.opcode.endswith("-done"):
+                    continue
+                kind, wire, payload = _collective_wire(op)
+                if _bf16_legalized(op, comp, self.comps):
+                    wire *= 0.5
+                    payload *= 0.5
+                s.wire_bytes += wire
+                s.payload_bytes += payload
+                s.coll_count += 1
+                d = s.by_kind.setdefault(kind,
+                                         {"count": 0, "wire_bytes": 0.0})
+                d["count"] += 1
+                d["wire_bytes"] += wire
+            s.bytes += _hbm_bytes(op, comp, self.comps)
+        return s
+
+
+def analyze(hlo: str) -> Stats:
+    return Analyzer(hlo).stats()

@@ -1,0 +1,159 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+``collective_bytes`` parses the (post-SPMD-partitioning) HLO text and sums
+the per-device tensor bytes moved by every collective op.  Wire-byte
+accounting per op kind (ring algorithms on P participants):
+
+    all-reduce        2·(P-1)/P · bytes(out)      (reduce-scatter+all-gather)
+    all-gather        (P-1)/P  · bytes(out)       (out is the gathered buf)
+    reduce-scatter    (P-1)/P  · bytes(in)  ≈ (P-1) · bytes(out)
+    all-to-all        (P-1)/P  · bytes(out)
+    collective-permute  bytes(out)
+
+P is read from the op's replica_groups. Roofline terms (v5e):
+
+    compute    = HLO_FLOPs / (chips · 197e12)            [bf16 MXU]
+    memory     = HLO_bytes / (chips · 819e9)
+    collective = wire_bytes_per_device / 50e9            [ICI per link]
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+PEAK_FLOPS = 197e12        # bf16 per chip, TPU v5e
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link direction
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-reduce.5 = f32[8,128]{1,0} all-reduce(%x), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([\d,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{(.*?)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0              # per device, ring-model
+    payload_bytes: float = 0.0           # raw tensor bytes per device
+    by_kind: dict = field(default_factory=dict)
+    count: int = 0
+
+    def add(self, kind: str, wire: float, payload: float):
+        self.wire_bytes += wire
+        self.payload_bytes += payload
+        k = self.by_kind.setdefault(kind, {"count": 0, "wire_bytes": 0.0})
+        k["count"] += 1
+        k["wire_bytes"] += wire
+        self.count += 1
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        mo = _OP_RE.search(line)
+        if not mo:
+            continue
+        if "-done(" in line:
+            continue                      # count async pairs once (at start)
+        dtype, dims, kind = mo.group(1), mo.group(2), mo.group(3)
+        out_bytes = _shape_bytes(dtype, dims)
+
+        p = 1
+        mg = _GROUPS_RE.search(line)
+        if mg:
+            p = len([t for t in mg.group(1).split(",") if t.strip() != ""])
+        else:
+            mi = _GROUPS_IOTA_RE.search(line)
+            if mi:
+                p = int(mi.group(2))
+            elif kind == "collective-permute":
+                ms = _SRC_TGT_RE.search(line)
+                p = 2 if ms else 1
+        if p <= 1 and kind != "collective-permute":
+            continue
+
+        if kind == "all-reduce":
+            wire = 2.0 * (p - 1) / p * out_bytes
+        elif kind == "all-gather":
+            wire = (p - 1) / p * out_bytes
+        elif kind == "reduce-scatter":
+            wire = (p - 1) * out_bytes
+        elif kind == "all-to-all":
+            wire = (p - 1) / p * out_bytes
+        else:                              # collective-permute
+            wire = out_bytes
+        stats.add(kind, wire, out_bytes)
+    return stats
+
+
+def roofline_terms(flops: float, hbm_bytes: float, wire_bytes: float,
+                   chips: int) -> dict:
+    """Three roofline terms in seconds (per-step / per-call)."""
+    compute_s = flops / (chips * PEAK_FLOPS)
+    memory_s = hbm_bytes / (chips * HBM_BW)
+    collective_s = wire_bytes / ICI_BW       # wire_bytes is already per-dev
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "roofline_s": max(compute_s, memory_s, collective_s),
+    }
+
+
+def cost_analysis_terms(compiled, chips: int) -> dict:
+    """Pull flops/bytes from compiled.cost_analysis() (device-total)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    return {"hlo_flops": flops, "hlo_bytes": byts}
+
+
+def memory_analysis_dict(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def model_flops_train(n_active_params: int, tokens: int) -> float:
+    """6·N·D — the useful-flops yardstick for a train step."""
+    return 6.0 * n_active_params * tokens
+
+
+def model_flops_decode(n_active_params: int, tokens: int) -> float:
+    """2·N per generated token (forward only)."""
+    return 2.0 * n_active_params * tokens

@@ -1,0 +1,60 @@
+"""Re-derive roofline stats for saved dry-run artifacts from their dumped
+HLO text (no recompilation) — used when the analyzer improves (e.g. the
+bf16-legalization wire adjustment).
+
+    python -m repro.launch.reanalyze --hlo-dir experiments/hlo \
+        --out experiments/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.launch import hlo_parse, hlo_stats
+
+
+def reanalyze(hlo_path: str, json_path: str) -> dict | None:
+    if not os.path.exists(json_path):
+        return None
+    with open(json_path) as f:
+        result = json.load(f)
+    with open(hlo_path) as f:
+        stats = hlo_parse.analyze(f.read())
+    chips = result["chips"]
+    flops_global = stats.flops * chips
+    bytes_global = stats.bytes * chips
+    terms = hlo_stats.roofline_terms(flops_global, bytes_global,
+                                     stats.wire_bytes, chips)
+    result.update(
+        hlo_flops=flops_global, hlo_bytes=bytes_global,
+        hlo_flops_per_device=stats.flops, hlo_bytes_per_device=stats.bytes,
+        collective_wire_bytes=stats.wire_bytes,
+        collective_payload_bytes=stats.payload_bytes,
+        collective_by_kind=stats.by_kind, collective_count=stats.coll_count,
+        useful_flops_ratio=(result["model_flops"] / flops_global
+                            if flops_global else 0.0),
+        **terms)
+    with open(json_path, "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hlo-dir", default="experiments/hlo")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    for hlo_path in sorted(glob.glob(os.path.join(args.hlo_dir,
+                                                  "*.hlo.txt"))):
+        tag = os.path.basename(hlo_path)[: -len(".hlo.txt")]
+        json_path = os.path.join(args.out, tag + ".json")
+        r = reanalyze(hlo_path, json_path)
+        if r:
+            print(f"{tag:55s} C/M/N={r['compute_s']:.2e}/{r['memory_s']:.2e}"
+                  f"/{r['collective_s']:.2e} dom={r['dominant']}")
+
+
+if __name__ == "__main__":
+    main()

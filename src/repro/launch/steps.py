@@ -1,0 +1,228 @@
+"""Train/serve step builders + sharding derivation for states and inputs.
+
+Everything here is mesh-agnostic: steps close over the ArchConfig, and
+shardings are derived from the logical rules installed by
+``sharding.use_mesh`` — the same builders serve the 1-device smoke tests
+and the 512-chip dry-run.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models import lm
+from repro.models.config import ArchConfig
+from repro.optim import OptState, make_optimizer
+from repro.optim.optimizers import Optimizer, clip_by_global_norm
+from repro.optim.schedules import Schedule, ScheduleConfig, make_schedule
+
+Array = jax.Array
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    step: Array
+    params: PyTree
+    opt: OptState
+
+
+def init_train_state(rng, cfg: ArchConfig, optimizer: Optimizer) -> TrainState:
+    params = lm.init_params(rng, cfg)
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      opt=optimizer.init(params))
+
+
+# ----------------------------------------------------------- train step ----
+def make_train_step(cfg: ArchConfig, optimizer: Optimizer,
+                    schedule: Schedule, *, accum: int = 1,
+                    clip: float = 1.0):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``accum`` > 1 runs gradient accumulation over microbatches via
+    lax.scan (sequential, activation memory / accum).
+    """
+
+    def loss_fn(params, batch):
+        return lm.loss_fn(params, cfg, batch)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: dict):
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum)
+                                    + x.shape[1:]), batch)
+
+            def acc_body(carry, mb):
+                (l, m), g = grad_fn(state.params, mb)
+                carry = jax.tree.map(jnp.add, carry, (l, g))
+                return carry, m
+
+            zero = (jnp.zeros((), jnp.float32),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state.params))
+            (loss_sum, grads), ms = jax.lax.scan(acc_body, zero, micro)
+            loss = loss_sum / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            metrics = jax.tree.map(lambda m: m[-1], ms)
+            metrics["loss"] = loss
+
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        lr = schedule(state.opt.step)
+        params, opt = optimizer.update(grads, state.opt, state.params, lr)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return TrainState(step=state.step + 1, params=params, opt=opt), metrics
+
+    return train_step
+
+
+# ----------------------------------------------------------- serve step ----
+def make_serve_step(cfg: ArchConfig, *, greedy: bool = True):
+    """serve_step(params, caches, token (B,1), pos (B,1)) ->
+    (next_token (B,1), logits, caches) — one decode iteration."""
+
+    def serve_step(params, caches, token: Array, pos: Array):
+        logits, caches = lm.decode_step(params, cfg, caches, token, pos)
+        nxt = jnp.argmax(logits[:, -1:, :], axis=-1).astype(token.dtype)
+        return nxt, logits, caches
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    """prefill(params, tokens) -> logits — full-sequence forward (no cache
+    materialization; used for prefill_32k lowering and perplexity eval)."""
+
+    def prefill(params, batch):
+        logits = lm.forward(params, cfg, batch["tokens"],
+                            batch.get("embeddings"), remat=True)
+        return logits
+
+    return prefill
+
+
+# ------------------------------------------------------------ shardings ----
+def _spec_of(names: tuple, shape: tuple):
+    return shd.named_sharding(names, shape)
+
+
+def batch_shardings(batch_shapes: dict) -> dict:
+    out = {}
+    for k, v in batch_shapes.items():
+        names = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = _spec_of(names, tuple(v.shape))
+    return out
+
+
+def param_sharding_tree(param_shapes: PyTree) -> PyTree:
+    logical = lm.param_logical_specs(param_shapes)
+    return jax.tree.map(
+        lambda names, leaf: _spec_of(names, tuple(leaf.shape)),
+        logical, param_shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def _opt_leaf_sharding(names: tuple, pshape: tuple, leaf) -> Any:
+    """Optimizer-state leaf sharding derived from its param's logical names.
+
+    AdamW/SGDm moments mirror the param exactly; Adafactor's factored stats
+    drop the last (vr) or second-to-last (vc) dim.
+    """
+    lshape = tuple(leaf.shape)
+    if lshape == pshape:
+        return _spec_of(names, lshape)
+    if lshape == pshape[:-1]:                      # adafactor vr
+        return _spec_of(names[:-1], lshape)
+    if lshape == pshape[:-2] + pshape[-1:]:        # adafactor vc
+        return _spec_of(names[:-2] + names[-1:], lshape)
+    return _spec_of((None,) * len(lshape), lshape)
+
+
+def state_shardings(state_shapes: TrainState) -> TrainState:
+    """Shardings for a TrainState (from jax.eval_shape output)."""
+    p_shard = param_sharding_tree(state_shapes.params)
+    logical = lm.param_logical_specs(state_shapes.params)
+    is_spec = lambda x: (isinstance(x, tuple) and all(       # noqa: E731
+        isinstance(e, (str, type(None))) for e in x))
+    flat_logical = jax.tree.leaves(logical, is_leaf=is_spec)
+    flat_pshapes = jax.tree.leaves(state_shapes.params)
+    ptreedef = jax.tree.structure(state_shapes.params)
+
+    def per_param_tree(tree):
+        """Map a pytree shaped like params (each param leaf replaced by an
+        arbitrary subtree of moment arrays) to shardings."""
+        flat_inner = ptreedef.flatten_up_to(tree)
+        out = [jax.tree.map(
+            lambda leaf: _opt_leaf_sharding(n, tuple(p.shape), leaf), sub)
+            for n, p, sub in zip(flat_logical, flat_pshapes, flat_inner)]
+        return ptreedef.unflatten(out)
+
+    inner = state_shapes.opt.inner
+    if isinstance(inner, dict) and set(inner) == {"mu", "nu"}:   # adamw
+        inner_sh = {k: per_param_tree(v) for k, v in inner.items()}
+    else:                                           # adafactor / sgdm
+        inner_sh = per_param_tree(inner)
+
+    return TrainState(
+        step=_spec_of((), ()),
+        params=p_shard,
+        opt=OptState(step=_spec_of((), ()), inner=inner_sh))
+
+
+_CACHE_RULES = {
+    # full-attention KV cache: sequence-sharded over 'model'
+    "k": ("layers", "batch", "seq_shard", None, None),
+    "v": ("layers", "batch", "seq_shard", None, None),
+    # nystrom cache
+    "psi": ("layers", "batch", "kv_heads", None, None),
+    "zeta": ("layers", "batch", "kv_heads", None),
+    "beta": ("layers", "batch", None),
+    "ginv": ("layers", None, None, None),
+    # mamba
+    "S": ("layers", "batch", "heads", None, None),
+    "conv_buf": ("layers", "batch", None, "mlp"),
+    # mlstm extras (S shared above), slstm
+    "z": ("layers", "batch", "heads", None),
+    "m": ("layers", "batch", None),
+    "c": ("layers", "batch", "mlp"),
+    "n": ("layers", "batch", "mlp"),
+    "h": ("layers", "batch", "mlp"),
+}
+
+
+def cache_shardings(cache_shapes: PyTree) -> PyTree:
+    def leaf_spec(path, leaf):
+        name = None
+        for k in reversed(path):
+            key = getattr(k, "key", getattr(k, "name", None))
+            if isinstance(key, str) and key in _CACHE_RULES:
+                name = key
+                break
+        shape = tuple(leaf.shape)
+        if name is None:
+            return _spec_of((None,) * len(shape), shape)
+        names = _CACHE_RULES[name][: len(shape)]
+        if len(names) < len(shape):
+            names = names + (None,) * (len(shape) - len(names))
+        return _spec_of(names, shape)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shapes)
+
+
+# --------------------------------------------------------- convenience -----
+def optimizer_for(arch_name: str) -> Optimizer:
+    if "kimi" in arch_name:
+        return make_optimizer("adafactor")
+    return make_optimizer("adamw")
+
+
+def schedule_for(arch_name: str, total: int = 10_000) -> Schedule:
+    kind = "wsd" if "minicpm" in arch_name else "cosine"
+    return make_schedule(ScheduleConfig(kind=kind, total=total))

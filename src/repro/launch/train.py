@@ -1,0 +1,123 @@
+"""End-to-end training driver.
+
+CPU-runnable (smoke/reduced configs) and structured the way the 512-chip
+launch would be: sharded state init under the mesh, step-indexed data (no
+loader state), async atomic checkpoints + resume, straggler heartbeats,
+optional streaming-KPCA spectral monitor on activations.
+
+    PYTHONPATH=src python -m repro.launch.train --arch minicpm_2b --smoke \
+        --steps 100 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.checkpoint import AsyncCheckpointer, latest_step, load_checkpoint
+from repro.data.synthetic import TokenStream, frontend_embeddings
+from repro.distributed import sharding as shd
+from repro.distributed.straggler import HeartbeatMonitor
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_host_mesh
+from repro.models import lm
+from repro.spectral import SpectralMonitor
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minicpm_2b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--monitor-spectra", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_config(args.arch, smoke=args.smoke)
+    mesh = make_host_mesh(model=args.model_axis)
+    optimizer = steps_lib.optimizer_for(args.arch)
+    schedule = steps_lib.schedule_for(args.arch, total=args.steps)
+    stream = TokenStream(vocab=cfg.vocab, seq_len=args.seq,
+                         global_batch=args.batch, seed=args.seed)
+    monitor = SpectralMonitor(capacity=96) if args.monitor_spectra else None
+    hb = HeartbeatMonitor(n_workers=1, timeout_s=300.0)
+    ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+
+    with shd.use_mesh(mesh):
+        state_shapes = jax.eval_shape(
+            partial(steps_lib.init_train_state, cfg=cfg, optimizer=optimizer),
+            jax.random.PRNGKey(args.seed))
+        state_sh = steps_lib.state_shardings(state_shapes)
+        init_fn = jax.jit(partial(steps_lib.init_train_state, cfg=cfg,
+                                  optimizer=optimizer),
+                          out_shardings=state_sh)
+        state = init_fn(jax.random.PRNGKey(args.seed))
+
+        start = 0
+        if args.resume and args.ckpt_dir:
+            last = latest_step(args.ckpt_dir)
+            if last is not None:
+                tgt = jax.tree.map(
+                    lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                                      sharding=s),
+                    state_shapes, state_sh)
+                state = load_checkpoint(args.ckpt_dir, last, tgt)
+                start = last
+                print(f"resumed from step {last}")
+
+        step_fn = jax.jit(
+            steps_lib.make_train_step(cfg, optimizer, schedule,
+                                      accum=args.accum),
+            in_shardings=(state_sh, None), out_shardings=(state_sh, None),
+            donate_argnums=(0,))
+
+        losses = []
+        t0 = time.time()
+        for step in range(start, args.steps):
+            batch = frontend_embeddings(cfg, stream.batch_at(jnp.int32(step)))
+            state, metrics = step_fn(state, batch)
+            hb.beat(0, step)
+            if monitor is not None and step % 20 == 0:
+                h = lm.embed_tokens(state.params, cfg, batch["tokens"],
+                                    batch.get("embeddings"))
+                feats = jax.device_get(h.mean(axis=1))  # (B, d) pooled
+                monitor.observe(feats)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                loss = float(metrics["loss"])
+                losses.append(loss)
+                extra = ""
+                if monitor is not None and monitor.history:
+                    extra = (" eff_rank="
+                             f"{monitor.history[-1]['effective_rank']:.1f}")
+                print(f"step {step:5d} loss={loss:.4f} "
+                      f"lr={float(metrics['lr']):.2e} "
+                      f"gnorm={float(metrics['grad_norm']):.2f}"
+                      f"{extra}", flush=True)
+            if ckpt and (step + 1) % args.ckpt_every == 0:
+                ckpt.save(step + 1, state)
+        wall = time.time() - t0
+
+    if ckpt:
+        ckpt.close()
+    result = {"first_loss": losses[0], "last_loss": losses[-1],
+              "steps": args.steps, "wall_s": wall,
+              "stragglers": hb.report()}
+    print(f"done: {result}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

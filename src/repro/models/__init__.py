@@ -1,0 +1,2 @@
+from repro.models.config import ArchConfig, MoEConfig, param_count, \
+    active_param_count

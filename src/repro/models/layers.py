@@ -1,0 +1,291 @@
+"""Shared transformer layers: norms, RoPE, GQA attention (+KV cache), MLP.
+
+Functional style: ``*_init(rng, cfg) -> params dict`` and
+``*_apply(params, x, ...) -> y``.  Param leaves carry a ``logical`` sharding
+via init-time metadata (see ``param_specs``) consumed by the launcher.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models.config import ArchConfig
+
+Array = jax.Array
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(rng, shape, scale: float = 1.0, dtype=jnp.float32):
+    fan_in = shape[0]
+    return (scale * jax.random.normal(rng, shape) / jnp.sqrt(fan_in)).astype(dtype)
+
+
+# ---------------------------------------------------------------- RMSNorm --
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(p: dict, x: Array, eps: float = 1e-6) -> Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- RoPE --
+def rope_freqs(hd: int, theta: float, fraction: float) -> Array:
+    rot = int(hd * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv  # (rot/2,)
+
+
+def apply_rope(x: Array, positions: Array, inv_freq: Array) -> Array:
+    """x: (..., T, H, hd); positions: (..., T) int32."""
+    rot2 = inv_freq.shape[0]
+    ang = positions[..., :, None].astype(jnp.float32) * inv_freq  # (..., T, rot/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x_rot = x[..., : 2 * rot2].astype(jnp.float32)
+    x1, x2 = x_rot[..., :rot2], x_rot[..., rot2:]
+    y = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([y.astype(x.dtype), x[..., 2 * rot2:]], axis=-1)
+
+
+# -------------------------------------------------------------- Attention --
+def attention_init(rng, cfg: ArchConfig) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    dt = _dtype(cfg)
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.n_heads * hd), dtype=dt),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads * hd), dtype=dt),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads * hd), dtype=dt),
+        "wo": dense_init(ks[3], (cfg.n_heads * hd, d), dtype=dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dt)
+        p["k_norm"] = rmsnorm_init(hd, dt)
+    return p
+
+
+def _qkv(p: dict, cfg: ArchConfig, x: Array, positions: Array):
+    B, T, _ = x.shape
+    hd = cfg.hd
+    q = (x @ p["wq"]).reshape(B, T, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(B, T, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(B, T, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q)
+        k = rmsnorm_apply(p["k_norm"], k)
+    inv_freq = rope_freqs(hd, cfg.rope_theta, cfg.rope_fraction)
+    q = apply_rope(q, positions, inv_freq)
+    k = apply_rope(k, positions, inv_freq)
+    q = shd.constrain(q, ("batch", "seq", "heads", None))
+    k = shd.constrain(k, ("batch", "seq", "kv_heads", None))
+    v = shd.constrain(v, ("batch", "seq", "kv_heads", None))
+    return q, k, v
+
+
+def _naive_attention(q: Array, k: Array, v: Array, positions: Array,
+                     hd: int) -> Array:
+    """Materializes the full (T, S) score matrix — the baseline path whose
+    O(T²) f32 temporaries dominate the prefill memory roofline."""
+    B, T = q.shape[:2]
+    logits = jnp.einsum("btkgh,bskh->bkgts", q, k) / jnp.sqrt(hd).astype(jnp.float32)
+    logits = logits.astype(jnp.float32)
+    mask = positions[:, None, None, :, None] >= positions[:, None, None, None, :]
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgts,bskh->btkgh", probs, v).reshape(B, T, -1)
+
+
+def _flash_attention(q: Array, k: Array, v: Array, positions: Array,
+                     hd: int, block: int) -> Array:
+    """Blockwise online-softmax attention (FlashAttention recurrence).
+
+    Structure chosen across two refuted attempts (§Perf log):
+    1. scanning over KV blocks with a full-length carry just moves the
+       O(T·hd·nk) traffic into the scan carry;
+    2. splitting heads into (kv_heads, group) kills the 16-way head
+       sharding (64 -> (8, 8) is not GSPMD-expressible), leaving the block
+       temporaries unsharded.
+    So: heads stay FUSED (KV expanded to full heads — a per-device-local
+    slice under head sharding), **Q blocks outside** (unrolled, small
+    static count), inner lax.scan over the j < i KV blocks with an O(Bq)
+    carry, one causal-masked diagonal block. The inner body is
+    checkpointed so backward recomputes probabilities.
+
+    q: (B, T, Hq, hd); k, v: (B, S, Hkv, hd) — expanded here.
+    Assumes causal layout with monotone positions (train/prefill).
+    """
+    B, T, Hq, _ = q.shape
+    S = k.shape[1]
+    Hkv = k.shape[2]
+    if Hkv != Hq:                       # GQA: local expansion under sharding
+        k = jnp.repeat(k, Hq // Hkv, axis=2)
+        v = jnp.repeat(v, Hq // Hkv, axis=2)
+    k = shd.constrain(k, ("batch", "seq", "heads", None))
+    v = shd.constrain(v, ("batch", "seq", "heads", None))
+    Bq = min(block, T)
+    assert T % Bq == 0 and S % Bq == 0, (T, S, Bq)
+    nq = T // Bq
+    scale = 1.0 / jnp.sqrt(hd)
+
+    kb = jnp.moveaxis(k.reshape(B, nq, Bq, Hq, hd), 1, 0)    # (nq,B,Bq,H,hd)
+    vb = jnp.moveaxis(v.reshape(B, nq, Bq, Hq, hd), 1, 0)
+    qb = jnp.moveaxis(q.reshape(B, nq, Bq, Hq, hd), 1, 0)
+    pb = jnp.moveaxis(positions.reshape(B, nq, Bq), 1, 0)
+
+    def make_off_diag(qi):
+        def off_diag(carry, inp):
+            m, l, acc = carry                   # (B,Bq,H[,hd]) f32
+            kj, vj = inp                        # fully-visible past block
+            s = jnp.einsum("bthd,bshd->bhts", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhts,bshd->bhtd", p, vj,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+        return off_diag
+
+    outs = []
+    for i in range(nq):
+        qi = qb[i]
+        m = jnp.full((B, Hq, Bq), -1e30, jnp.float32)
+        l = jnp.zeros((B, Hq, Bq), jnp.float32)
+        acc = jnp.zeros((B, Hq, Bq, hd), jnp.float32)
+        if i > 0:
+            (m, l, acc), _ = jax.lax.scan(
+                jax.checkpoint(make_off_diag(qi)), (m, l, acc),
+                (kb[:i], vb[:i]))
+        # diagonal block: causal mask within the block
+        s = jnp.einsum("bthd,bshd->bhts", qi, kb[i],
+                       preferred_element_type=jnp.float32) * scale
+        mask = (pb[i][:, None, :, None] >= pb[i][:, None, None, :])
+        s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhts,bshd->bhtd", p, vb[i], preferred_element_type=jnp.float32)
+        out_i = acc / jnp.maximum(l, 1e-30)[..., None]      # (B,H,Bq,hd)
+        outs.append(jnp.moveaxis(out_i, 1, 2).astype(q.dtype))
+    out = jnp.stack(outs, axis=1)               # (B,nq,Bq,H,hd)
+    return out.reshape(B, T, -1)
+
+
+def attention_apply(p: dict, cfg: ArchConfig, x: Array, positions: Array
+                    ) -> Array:
+    """Causal GQA self-attention (training/prefill path)."""
+    B, T, _ = x.shape
+    hd = cfg.hd
+    q, k, v = _qkv(p, cfg, x, positions)
+    if cfg.attn_impl == "flash":
+        out = _flash_attention(q, k, v, positions, hd, cfg.flash_block)
+    else:
+        groups = cfg.n_heads // cfg.n_kv_heads
+        q = q.reshape(B, T, cfg.n_kv_heads, groups, hd)
+        out = _naive_attention(q, k, v, positions, hd)
+    out = shd.constrain(out, ("batch", "seq", "heads"))
+    return out @ p["wo"]
+
+
+def attention_decode(p: dict, cfg: ArchConfig, x: Array, cache: dict,
+                     pos: Array) -> tuple[Array, dict]:
+    """One-token decode against a (B, S, Hkv, hd) KV cache.
+
+    The cache is sequence-sharded ('seq_shard' -> model axis); the softmax
+    reductions over the sharded S dim lower to flash-decode-style partial
+    max/sum collectives under GSPMD.
+    """
+    B = x.shape[0]
+    hd = cfg.hd
+    positions = jnp.broadcast_to(pos[None], (B, 1)) if pos.ndim == 0 else pos
+    q, k_new, v_new = _qkv(p, cfg, x, positions)
+
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), positions[0, 0], axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), positions[0, 0], axis=1)
+    # sequence-sharded KV cache (flash-decode-style partial softmax);
+    # kv_heads stays unsharded here — 'model' is taken by the seq dim.
+    k_cache = shd.constrain(k_cache, ("batch", "seq_shard", None, None))
+    v_cache = shd.constrain(v_cache, ("batch", "seq_shard", None, None))
+
+    S = k_cache.shape[1]
+    groups = cfg.n_heads // cfg.n_kv_heads
+    qh = q.reshape(B, 1, cfg.n_kv_heads, groups, hd)
+    logits = jnp.einsum("btkgh,bskh->bkgts", qh, k_cache) / jnp.sqrt(hd)
+    logits = logits.astype(jnp.float32)
+    valid = jnp.arange(S)[None, :] <= positions[:, 0][:, None]      # (B, S)
+    logits = jnp.where(valid[:, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgts,bskh->btkgh", probs, v_cache).reshape(B, 1, -1)
+    return out @ p["wo"], {"k": k_cache, "v": v_cache}
+
+
+def attention_cache_init(cfg: ArchConfig, batch: int, max_seq: int) -> dict:
+    dt = _dtype(cfg)
+    shape = (batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+# ------------------------------------------------------------------- MLP --
+def mlp_init(rng, cfg: ArchConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    d_ff = d_ff or cfg.d_ff
+    dt = _dtype(cfg)
+    ks = jax.random.split(rng, 3)
+    p = {"w_up": dense_init(ks[0], (d, d_ff), dtype=dt),
+         "w_down": dense_init(ks[1], (d_ff, d), dtype=dt)}
+    if cfg.act == "swiglu":
+        p["w_gate"] = dense_init(ks[2], (d, d_ff), dtype=dt)
+    return p
+
+
+def mlp_apply(p: dict, cfg: ArchConfig, x: Array) -> Array:
+    h = x @ p["w_up"]
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = shd.constrain(h, ("batch", "seq", "mlp"))
+    return h @ p["w_down"]
+
+
+# ------------------------------------------------------------- Embedding --
+def embed_init(rng, cfg: ArchConfig) -> dict:
+    dt = _dtype(cfg)
+    p = {"table": (jax.random.normal(rng, (cfg.vocab, cfg.d_model)) * 0.02
+                   ).astype(dt)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(jax.random.fold_in(rng, 1),
+                               (cfg.d_model, cfg.vocab), dtype=dt)
+    return p
+
+
+def embed_apply(p: dict, tokens: Array) -> Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def logits_apply(p: dict, cfg: ArchConfig, h: Array) -> Array:
+    if cfg.tie_embeddings:
+        logits = h @ p["table"].T
+    else:
+        logits = h @ p["head"]
+    logits = shd.constrain(logits, ("batch", "seq", "vocab"))
+    if cfg.logit_soft_cap > 0:
+        c = cfg.logit_soft_cap
+        logits = c * jnp.tanh(logits / c)
+    return logits

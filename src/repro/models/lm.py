@@ -1,0 +1,322 @@
+"""Full LM assembly over heterogeneous block patterns.
+
+A config's ``block_pattern`` defines one *period* of layers (e.g. jamba's
+7 mamba + 1 attention); the network is ``n_layers // period`` repetitions.
+Parameters for slot j are stacked over periods, and the forward pass is a
+``lax.scan`` over periods with the slots unrolled inside the body — HLO size
+stays O(period), compile time stays flat in depth, and remat applies at
+period granularity.
+
+Caches for decode mirror the same structure: per slot, a pytree stacked over
+periods, scanned jointly with the hidden state.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models import moe as moe_mod
+from repro.models import nystrom_attention as nys
+from repro.models import ssm, xlstm
+from repro.models.config import ArchConfig
+from repro.models.layers import (attention_apply, attention_cache_init,
+                                 attention_decode, attention_init,
+                                 embed_apply, embed_init, logits_apply,
+                                 mlp_apply, mlp_init, rmsnorm_apply,
+                                 rmsnorm_init)
+
+Array = jax.Array
+
+
+# ------------------------------------------------------------- init ---------
+def _mixer_init(rng, cfg: ArchConfig, kind: str) -> dict:
+    if kind == "attn":
+        if cfg.attention == "nystrom":
+            return nys.nystrom_attention_init(rng, cfg)
+        return attention_init(rng, cfg)
+    if kind == "mamba":
+        return ssm.mamba_init(rng, cfg)
+    if kind == "mlstm":
+        return xlstm.mlstm_init(rng, cfg)
+    if kind == "slstm":
+        return xlstm.slstm_init(rng, cfg)
+    raise ValueError(kind)
+
+
+def _slot_init(rng, cfg: ArchConfig, slot: int) -> dict:
+    kind = cfg.block_kind(slot)
+    ffn = cfg.ffn_kind(slot)
+    ks = jax.random.split(rng, 3)
+    p: dict[str, Any] = {
+        "norm1": rmsnorm_init(cfg.d_model, jnp.dtype(cfg.dtype)),
+        "mixer": _mixer_init(ks[0], cfg, kind),
+    }
+    if ffn != "none" and not cfg.parallel_block:
+        p["norm2"] = rmsnorm_init(cfg.d_model, jnp.dtype(cfg.dtype))
+    if ffn == "dense":
+        p["ffn"] = mlp_init(ks[1], cfg)
+    elif ffn == "moe":
+        p["ffn"] = moe_mod.moe_init(ks[2], cfg)
+    return p
+
+
+def n_periods(cfg: ArchConfig) -> int:
+    assert cfg.n_layers % cfg.period == 0, (cfg.n_layers, cfg.period)
+    return cfg.n_layers // cfg.period
+
+
+def init_params(rng, cfg: ArchConfig) -> dict:
+    """{'embed', 'slots': {slot_j: stacked-over-periods params}, 'final_norm'}."""
+    np_ = n_periods(cfg)
+    k_embed, k_blocks = jax.random.split(rng)
+    slots = {}
+    for j in range(cfg.period):
+        rngs = jax.random.split(jax.random.fold_in(k_blocks, j), np_)
+        slots[f"slot{j}"] = jax.vmap(partial(_slot_init, cfg=cfg, slot=j))(rngs)
+    return {
+        "embed": embed_init(k_embed, cfg),
+        "slots": slots,
+        "final_norm": rmsnorm_init(cfg.d_model, jnp.dtype(cfg.dtype)),
+    }
+
+
+# ------------------------------------------------------------ forward -------
+def _mixer_apply(p: dict, cfg: ArchConfig, kind: str, h: Array,
+                 positions: Array) -> Array:
+    if kind == "attn":
+        if cfg.attention == "nystrom":
+            return nys.nystrom_attention_apply(p, cfg, h, positions)
+        return attention_apply(p, cfg, h, positions)
+    if kind == "mamba":
+        return ssm.mamba_apply(p, cfg, h)
+    if kind == "mlstm":
+        return xlstm.mlstm_apply(p, cfg, h)
+    if kind == "slstm":
+        return xlstm.slstm_apply(p, cfg, h)
+    raise ValueError(kind)
+
+
+def _ffn_apply(p: dict, cfg: ArchConfig, h: Array) -> Array:
+    if cfg.moe is not None and "router" in p:
+        return moe_mod.moe_apply(p, cfg, h)
+    return mlp_apply(p, cfg, h)
+
+
+def _block(p: dict, cfg: ArchConfig, slot: int, h: Array, positions: Array
+           ) -> Array:
+    kind = cfg.block_kind(slot)
+    ffn = cfg.ffn_kind(slot)
+    rs = cfg.residual_scale
+    hn = rmsnorm_apply(p["norm1"], h)
+    if cfg.parallel_block and ffn != "none":
+        # command-r style: attention and FFN read the same normed input.
+        h = h + rs * (_mixer_apply(p["mixer"], cfg, kind, hn, positions)
+                      + _ffn_apply(p["ffn"], cfg, hn))
+        return shd.constrain(h, ("batch", "seq", None))
+    h = h + rs * _mixer_apply(p["mixer"], cfg, kind, hn, positions)
+    if ffn != "none":
+        h = h + rs * _ffn_apply(p["ffn"], cfg, rmsnorm_apply(p["norm2"], h))
+    return shd.constrain(h, ("batch", "seq", None))
+
+
+def embed_tokens(params: dict, cfg: ArchConfig, tokens: Array,
+                 embeddings: Array | None = None) -> Array:
+    """Token embedding; modality frontends supply the first ``frontend_len``
+    positions as precomputed embeddings (the assignment's frontend STUB)."""
+    h = embed_apply(params["embed"], tokens)
+    if cfg.frontend == "embeddings" and embeddings is not None:
+        F = cfg.frontend_len
+        h = jnp.concatenate([embeddings.astype(h.dtype), h[:, F:]], axis=1)
+    return shd.constrain(h, ("batch", "seq", None))
+
+
+def forward(params: dict, cfg: ArchConfig, tokens: Array,
+            embeddings: Array | None = None, *,
+            remat: bool = True) -> Array:
+    """tokens: (B, T) -> logits (B, T, vocab)."""
+    B, T = tokens.shape
+    h = embed_tokens(params, cfg, tokens, embeddings)
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+
+    def period_body(h, period_params):
+        for j in range(cfg.period):
+            h = _block(period_params[f"slot{j}"], cfg, j, h, positions)
+        return h, None
+
+    body = period_body
+    if remat:
+        body = jax.checkpoint(
+            period_body,
+            policy=jax.checkpoint_policies.save_only_these_names())
+    h, _ = jax.lax.scan(body, h, params["slots"])
+    h = rmsnorm_apply(params["final_norm"], h)
+    return logits_apply(params["embed"], cfg, h)
+
+
+def loss_fn(params: dict, cfg: ArchConfig, batch: dict) -> tuple[Array, dict]:
+    """Next-token cross entropy; labels < 0 are masked (frontend/pad).
+
+    Written to stay *vocab-sharded*: the label logit is picked with a fused
+    one-hot reduction and the normalizer via explicit max/logsumexp — both
+    reduce over the sharded vocab dim locally plus a (B, T)-sized cross-
+    shard reduction, so the (B, T, V) tensor is never all-gathered (a
+    take_along_axis here costs a 13 GB/device all-gather at 50k vocab).
+    """
+    logits = forward(params, cfg, batch["tokens"],
+                     batch.get("embeddings"))
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+
+    l32 = logits.astype(jnp.float32)
+    vmax = jnp.max(l32, axis=-1)                               # (B, T)
+    lse = vmax + jnp.log(jnp.sum(jnp.exp(l32 - vmax[..., None]), axis=-1))
+    onehot = (jnp.arange(logits.shape[-1], dtype=labels.dtype)[None, None, :]
+              == labels_safe[..., None])                       # fused iota
+    label_logit = jnp.sum(jnp.where(onehot, l32, 0.0), axis=-1)
+    ll = label_logit - lse
+
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = -jnp.sum(ll * mask) / denom
+    acc = jnp.sum((jnp.argmax(logits, -1) == labels) * mask) / denom
+    return loss, {"loss": loss, "accuracy": acc, "tokens": jnp.sum(mask)}
+
+
+# ------------------------------------------------------------- decode -------
+def _slot_cache_init(params_slot: dict, cfg: ArchConfig, slot: int,
+                     batch: int, max_seq: int):
+    kind = cfg.block_kind(slot)
+    if kind == "attn":
+        if cfg.attention == "nystrom":
+            return jax.vmap(lambda p: nys.nystrom_cache_init(p, cfg, batch)
+                            )(params_slot["mixer"])
+        np_ = n_periods(cfg)
+        return jax.vmap(lambda _: attention_cache_init(cfg, batch, max_seq)
+                        )(jnp.arange(np_))
+    np_ = n_periods(cfg)
+    if kind == "mamba":
+        fn = lambda _: ssm.mamba_cache_init(cfg, batch)        # noqa: E731
+    elif kind == "mlstm":
+        fn = lambda _: xlstm.mlstm_cache_init(cfg, batch)      # noqa: E731
+    else:
+        fn = lambda _: xlstm.slstm_cache_init(cfg, batch)      # noqa: E731
+    return jax.vmap(fn)(jnp.arange(np_))
+
+
+def init_caches(params: dict, cfg: ArchConfig, batch: int, max_seq: int):
+    return {f"slot{j}": _slot_cache_init(params["slots"][f"slot{j}"], cfg, j,
+                                         batch, max_seq)
+            for j in range(cfg.period)}
+
+
+def _mixer_decode(p: dict, cfg: ArchConfig, kind: str, h: Array, cache,
+                  pos: Array):
+    if kind == "attn":
+        if cfg.attention == "nystrom":
+            return nys.nystrom_decode(p, cfg, h, cache, pos)
+        return attention_decode(p, cfg, h, cache, pos)
+    if kind == "mamba":
+        return ssm.mamba_decode(p, cfg, h, cache)
+    if kind == "mlstm":
+        return xlstm.mlstm_decode(p, cfg, h, cache)
+    return xlstm.slstm_decode(p, cfg, h, cache)
+
+
+def decode_step(params: dict, cfg: ArchConfig, caches: dict, token: Array,
+                pos: Array) -> tuple[Array, dict]:
+    """One decode step. token: (B, 1) int32; pos: (B, 1) positions.
+
+    Returns (logits (B, 1, vocab), updated caches).
+    """
+    h = embed_apply(params["embed"], token)
+    h = shd.constrain(h, ("batch", None, None))
+
+    def period_body(h, xs):
+        period_params, period_caches = xs
+        new_caches = {}
+        for j in range(cfg.period):
+            p = period_params[f"slot{j}"]
+            kind = cfg.block_kind(j)
+            ffn = cfg.ffn_kind(j)
+            rs = cfg.residual_scale
+            hn = rmsnorm_apply(p["norm1"], h)
+            y, new_caches[f"slot{j}"] = _mixer_decode(
+                p["mixer"], cfg, kind, hn, period_caches[f"slot{j}"], pos)
+            if cfg.parallel_block and ffn != "none":
+                h = h + rs * (y + _ffn_apply(p["ffn"], cfg, hn))
+            else:
+                h = h + rs * y
+                if ffn != "none":
+                    h = h + rs * _ffn_apply(p["ffn"], cfg,
+                                            rmsnorm_apply(p["norm2"], h))
+        return h, new_caches
+
+    h, new_caches = jax.lax.scan(period_body, h, (params["slots"], caches))
+    h = rmsnorm_apply(params["final_norm"], h)
+    return logits_apply(params["embed"], cfg, h), new_caches
+
+
+# --------------------------------------------------------- param specs ------
+_REVERSED = ("wo", "w_down", "out_proj", "w_o", "head")
+_REPLICATED_SUFFIX = ("scale", "bias", "dt_bias", "a_log", "d_skip", "f_bias")
+
+
+def _leaf_logical(path: tuple, shape: tuple) -> tuple:
+    """Map a param leaf to logical dim names (see distributed.sharding)."""
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    leaf = names[-1]
+    stacked = "slots" in names          # leading period dim
+    nd = len(shape) - (1 if stacked else 0)
+    if leaf in _REPLICATED_SUFFIX or nd <= 1:
+        spec: tuple = (None,) * nd
+    elif leaf == "table":
+        # vocab rows over the TP axis: the tied-head matmul then yields
+        # vocab-sharded logits directly (matching the loss constraint);
+        # FSDP'ing the embed dim instead makes GSPMD materialize full
+        # (B,T,V) logits per device in the backward pass (~13 GB at 50k
+        # vocab) — measured in the xlstm dry-run.
+        spec = ("vocab_tp", None)
+    elif leaf == "router":
+        spec = ("fsdp", None)
+    elif leaf == "r_in":
+        # sLSTM recurrent weight: lives inside the T-step token scan, so
+        # its sharding is a dedicated logical pair — the §Perf xlstm
+        # iteration toggles it to replicated (--rule recurrent_in=none
+        # recurrent_out=none) to kill per-token weight collectives.
+        spec = ("recurrent_in", "recurrent_out")
+    elif leaf == "landmarks":
+        spec = ("kv_heads", None, None)
+    elif leaf == "conv_w":
+        spec = (None, "tp")
+    elif nd == 3:                       # MoE experts (E, d, f)
+        # EP layout (§Perf kimi iteration 3): experts over the data axis,
+        # d_ff over model — the expert bank is FULLY sharded at rest and
+        # used in place by the shard_map EP block (no FSDP all-gather of
+        # ~2 TB of expert weights per microbatch). The einsum-baseline
+        # layout is recovered with --rule experts_data=model expert_ff=none.
+        spec = ("experts_data", "expert_ff", None) if leaf in _REVERSED \
+            else ("experts_data", None, "expert_ff")
+    elif leaf in _REVERSED:
+        spec = ("tp", "fsdp")
+    else:
+        spec = ("fsdp", "tp")
+    if stacked:
+        spec = ("layers",) + spec
+    return spec
+
+
+def param_logical_specs(params: dict) -> dict:
+    """Pytree of logical-name tuples matching ``params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_logical(path, leaf.shape), params)
+
+
+def param_shardings(params_or_shapes) -> Any:
+    """Pytree of NamedShardings under the active mesh + rules."""
+    logical = param_logical_specs(params_or_shapes)
+    return jax.tree.map(lambda names: shd.named_sharding(names), logical,
+                        is_leaf=lambda x: isinstance(x, tuple))

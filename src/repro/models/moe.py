@@ -1,0 +1,308 @@
+"""Mixture-of-Experts FFN with three dispatch implementations.
+
+* ``impl='einsum'``  — GShard-style one-hot dispatch/combine einsums with a
+  per-expert capacity.  Robust and GSPMD-friendly, but dispatch flops scale
+  as O(T * E*C * d) ≈ O(top_k * T^2 * d / tokens-per-expert) — visible as
+  HLO_FLOPs above MODEL_FLOPS in the roofline table for large E (kimi
+  baseline: useful ratio 0.05).
+* ``impl='scatter'`` — position-computed scatter/gather dispatch under
+  GSPMD: kills the dispatch flops but GSPMD partitions the scatters
+  pathologically (§Perf kimi iteration 2: collective term 337 s → 2480 s).
+  Kept as the measured negative result.
+* ``impl='ep'``      — the §Perf winner: an explicit shard_map expert-
+  parallel block. Local scatter dispatch (bytes, no GSPMD choice),
+  all-to-all over the 'data' axis to the expert owners, expert FFN
+  TP-sharded over 'model' (weights E→data, d_ff→model: FULLY sharded, no
+  FSDP all-gather of the 2 TB expert bank), one psum over 'model', and the
+  reverse all-to-all. Falls back to 'einsum' when the mesh lacks the axes
+  (CPU smoke tests exercise it on a (1,1) mesh).
+
+All compute experts as block-diagonal grouped matmuls and drop overflow
+tokens beyond capacity (standard GShard semantics).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models.config import ArchConfig
+from repro.models.layers import dense_init
+
+Array = jax.Array
+
+
+def moe_init(rng, cfg: ArchConfig) -> dict:
+    mo = cfg.moe
+    d, f = cfg.d_model, mo.d_ff_expert
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": dense_init(ks[0], (d, mo.n_experts), dtype=jnp.float32),
+        "w_up": dense_init(ks[1], (mo.n_experts, d, f), dtype=dt),
+        "w_gate": dense_init(ks[2], (mo.n_experts, d, f), dtype=dt),
+        "w_down": dense_init(ks[3], (mo.n_experts, f, d), dtype=dt),
+    }
+    if mo.n_shared_experts:
+        fs = f * mo.n_shared_experts
+        p["shared"] = {
+            "w_up": dense_init(ks[4], (d, fs), dtype=dt),
+            "w_gate": dense_init(jax.random.fold_in(ks[4], 1), (d, fs), dtype=dt),
+            "w_down": dense_init(jax.random.fold_in(ks[4], 2), (fs, d), dtype=dt),
+        }
+    return p
+
+
+def _router(p: dict, cfg: ArchConfig, x2d: Array):
+    mo = cfg.moe
+    logits = (x2d.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, mo.top_k)           # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    return gate_vals, idx, probs
+
+
+def _capacity(cfg: ArchConfig, T: int) -> int:
+    mo = cfg.moe
+    c = int(T * mo.top_k / mo.n_experts * mo.capacity_factor)
+    return max(8, -(-c // 8) * 8)
+
+
+def _experts_ffn(p: dict, cfg: ArchConfig, xe: Array) -> Array:
+    """xe: (E, C, d) -> (E, C, d) block-diagonal grouped matmuls."""
+    xe = shd.constrain(xe, ("experts", "expert_cap", None))
+    h = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+    h = jax.nn.silu(g) * h
+    h = shd.constrain(h, ("experts", "expert_cap", None))
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+
+def _moe_einsum(p: dict, cfg: ArchConfig, x2d: Array) -> Array:
+    mo = cfg.moe
+    T, d = x2d.shape
+    E, K = mo.n_experts, mo.top_k
+    C = _capacity(cfg, T)
+    gate_vals, idx, _ = _router(p, cfg, x2d)
+
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)          # (T, K, E)
+    pos_in_e = jnp.cumsum(onehot.reshape(T * K, E), axis=0).reshape(T, K, E) - 1
+    pos = jnp.sum(pos_in_e * onehot, axis=-1)                 # (T, K)
+    keep = pos < C
+    # dispatch tensor (T, E, C): combines expert one-hot and capacity slot.
+    slot = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1,
+                          dtype=x2d.dtype)[..., :C]           # (T, K, C)
+    disp = jnp.einsum("tke,tkc->tec", onehot.astype(x2d.dtype), slot)
+    comb = jnp.einsum("tk,tke,tkc->tec",
+                      gate_vals.astype(x2d.dtype), onehot.astype(x2d.dtype),
+                      slot)
+    xe = jnp.einsum("td,tec->ecd", x2d, disp)                 # (E, C, d)
+    ye = _experts_ffn(p, cfg, xe)
+    return jnp.einsum("ecd,tec->td", ye, comb)
+
+
+def _moe_scatter(p: dict, cfg: ArchConfig, x2d: Array) -> Array:
+    mo = cfg.moe
+    T, d = x2d.shape
+    E, K = mo.n_experts, mo.top_k
+    C = _capacity(cfg, T)
+    gate_vals, idx, _ = _router(p, cfg, x2d)
+
+    flat_e = idx.reshape(T * K)                                # (TK,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)        # (TK, E) ints
+    pos = jnp.sum(onehot * (jnp.cumsum(onehot, axis=0) - 1), axis=-1)  # (TK,)
+    keep = pos < C
+    pos_c = jnp.where(keep, pos, C - 1)
+
+    # Scatter tokens into (E, C, d) — bytes, not matmul flops.
+    tok_idx = jnp.repeat(jnp.arange(T), K)
+    xe = jnp.zeros((E, C, d), x2d.dtype)
+    upd = x2d[tok_idx] * keep[:, None].astype(x2d.dtype)
+    xe = xe.at[flat_e, pos_c].add(upd)
+
+    ye = _experts_ffn(p, cfg, xe)
+
+    # Gather back and combine with gate weights.
+    out_tk = ye[flat_e, pos_c] * keep[:, None].astype(x2d.dtype)
+    out_tk = out_tk * gate_vals.reshape(T * K, 1).astype(x2d.dtype)
+    y = jnp.zeros((T, d), x2d.dtype).at[tok_idx].add(out_tk)
+    return y
+
+
+# ------------------------------------------------- explicit EP (shard_map) --
+def _ep_local(x_loc: Array, router_w: Array, w_up: Array, w_gate: Array,
+              w_down: Array, cfg: ArchConfig, *, axis_data, axis_model,
+              n_data: int, n_model: int) -> Array:
+    """Per-device body under shard_map (sequence-parallel EP + TP experts).
+
+    x_loc: (T_loc, d) — a DISTINCT token slice per device (tokens split
+           over data AND model: §Perf kimi iteration 4 — replicating the
+           dispatch over 'model' cost a 16× larger all-to-all).
+    w_*:   (E_loc, d, f_loc) / (E_loc, f_loc, d) — experts over 'data',
+           d_ff over 'model'.
+
+    Wire per device per call: 2 all-to-alls of (E, C, d) + one model-axis
+    all-gather and one psum-scatter of the owner-row buffer — all sized by
+    the actual dispatched tokens (T_loc·K·d·cf), never by the expert bank.
+    """
+    mo = cfg.moe
+    T_loc, d = x_loc.shape
+    E, K = mo.n_experts, mo.top_k
+    E_loc = w_up.shape[0]
+    C = _capacity(cfg, T_loc)
+
+    gate_vals, idx, _ = _router({"router": router_w}, cfg, x_loc)
+
+    # --- local scatter dispatch into (E, C, d): bytes, not matmul flops ---
+    flat_e = idx.reshape(T_loc * K)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos = jnp.sum(onehot * (jnp.cumsum(onehot, axis=0) - 1), axis=-1)
+    keep = pos < C
+    pos_c = jnp.where(keep, pos, C - 1)
+    tok_idx = jnp.repeat(jnp.arange(T_loc), K)
+    upd = x_loc[tok_idx] * keep[:, None].astype(x_loc.dtype)
+    buf = jnp.zeros((E, C, d), x_loc.dtype).at[flat_e, pos_c].add(upd)
+
+    # --- all-to-all over 'data': expert rows -> their owners --------------
+    buf = buf.reshape(n_data, E_loc, C, d)
+    recv = jax.lax.all_to_all(buf, axis_data, split_axis=0, concat_axis=0,
+                              tiled=False)          # (n_data, E_loc, C, d)
+    xe = jnp.moveaxis(recv, 0, 1).reshape(E_loc, n_data * C, d)
+
+    # --- owner row: gather the 16 model columns' token sets, TP the FFN ---
+    if n_model > 1:
+        xe = jax.lax.all_gather(xe, axis_model, axis=1, tiled=True)
+    # xe: (E_loc, n_model*n_data*C, d); each column computes its f_loc slice
+    h = jnp.einsum("ecd,edf->ecf", xe, w_up)
+    g = jnp.einsum("ecd,edf->ecf", xe, w_gate)
+    h = jax.nn.silu(g) * h
+    ye = jnp.einsum("ecf,efd->ecd", h, w_down)      # PARTIAL over 'model'
+    if n_model > 1:
+        # reduce over 'model' AND return each column its own token slice
+        ye = jax.lax.psum_scatter(ye, axis_model, scatter_dimension=1,
+                                  tiled=True)       # (E_loc, n_data*C, d)
+
+    # --- reverse all-to-all + local combine --------------------------------
+    ye = jnp.moveaxis(ye.reshape(E_loc, n_data, C, d), 1, 0)
+    back = jax.lax.all_to_all(ye, axis_data, split_axis=0, concat_axis=0,
+                              tiled=False)          # (n_data, E_loc, C, d)
+    ye_loc = back.reshape(E, C, d)
+    out_tk = ye_loc[flat_e, pos_c] * keep[:, None].astype(x_loc.dtype)
+    out_tk = out_tk * gate_vals.reshape(T_loc * K, 1).astype(x_loc.dtype)
+    return jnp.zeros((T_loc, d), x_loc.dtype).at[tok_idx].add(out_tk)
+
+
+def _ep_decode_local(x_all: Array, router_w: Array, w_up: Array,
+                     w_gate: Array, w_down: Array, cfg: ArchConfig, *,
+                     axis_data, axis_model) -> Array:
+    """Decode-time EP body: tokens REPLICATED (few at decode), experts
+    sharded. Each device runs its local experts over every token, masked
+    by the routing gates; one psum over (data, model) assembles the
+    result. No dispatch, no all-to-all — wire cost is one (T, d) psum.
+    """
+    mo = cfg.moe
+    T, d = x_all.shape
+    E = mo.n_experts
+    E_loc = w_up.shape[0]
+    didx = jax.lax.axis_index(axis_data)
+
+    gate_vals, idx, _ = _router({"router": router_w}, cfg, x_all)
+    dense_gates = jnp.sum(
+        jax.nn.one_hot(idx, E, dtype=x_all.dtype)
+        * gate_vals[..., None].astype(x_all.dtype), axis=1)     # (T, E)
+    my_gates = jax.lax.dynamic_slice_in_dim(dense_gates, didx * E_loc,
+                                            E_loc, axis=1)      # (T, E_loc)
+
+    h = jnp.einsum("td,edf->etf", x_all, w_up)
+    g = jnp.einsum("td,edf->etf", x_all, w_gate)
+    ye = jnp.einsum("etf,efd->etd", jax.nn.silu(g) * h, w_down)
+    y = jnp.einsum("etd,te->td", ye, my_gates)      # partial: local experts
+    return jax.lax.psum(y, axis_data + (axis_model,))
+
+
+# tokens-per-call threshold below which the replicated decode path wins
+_EP_DECODE_MAX_TOKENS = 4096
+
+
+def _moe_ep(p: dict, cfg: ArchConfig, x: Array) -> Array | None:
+    """x: (B, T, d). Returns None when the mesh/shapes can't EP.
+
+    The shard_map consumes the NATURAL activation layout — batch over
+    'data', seq over 'model' (sequence parallelism) — so entering the
+    region is a local slice.  (Fusing (B·T) rows and resharding instead
+    triggered GSPMD's 'involuntary full rematerialization' path: the whole
+    activation was replicated per layer; §Perf kimi iteration 4.)
+    """
+    mesh = shd.get_mesh()
+    axes = set(mesh.axis_names)
+    data_axes = tuple(a for a in ("pod", "data") if a in axes)
+    n_data = 1
+    for a in data_axes:
+        n_data *= mesh.shape[a]
+    n_model = mesh.shape.get("model", 1) if "model" in axes else 1
+    B, T, d = x.shape
+    if cfg.moe.n_experts % max(n_data, 1):
+        return None                                 # mesh can't EP
+
+    # Decode / tiny-token path: replicated tokens, local-expert compute.
+    if B * T <= _EP_DECODE_MAX_TOKENS or B % max(n_data, 1):
+        body = partial(_ep_decode_local, cfg=cfg, axis_data=data_axes,
+                       axis_model="model")
+
+        def body3d(x_rep, router_w, w_up, w_gate, w_down):
+            return body(x_rep.reshape(B * T, d), router_w, w_up, w_gate,
+                        w_down).reshape(B, T, d)
+
+        fn = jax.shard_map(
+            body3d, mesh=mesh,
+            in_specs=(P(None, None, None),          # x replicated
+                      P(),
+                      P(data_axes, None, "model"),
+                      P(data_axes, None, "model"),
+                      P(data_axes, "model", None)),
+            out_specs=P(None, None, None),
+            check_vma=False)
+        return fn(x, p["router"], p["w_up"], p["w_gate"], p["w_down"])
+
+    def body(x_loc, router_w, w_up, w_gate, w_down):
+        Bl, Tl, _ = x_loc.shape
+        y = _ep_local(x_loc.reshape(Bl * Tl, d), router_w, w_up, w_gate,
+                      w_down, cfg, axis_data=data_axes, axis_model="model",
+                      n_data=n_data, n_model=n_model)
+        return y.reshape(Bl, Tl, d)
+
+    seq_axis = "model" if (n_model > 1 and T % n_model == 0) else None
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(data_axes, seq_axis, None),     # x: batch×seq split
+                  P(),                              # router (replicated)
+                  P(data_axes, None, "model"),      # w_up
+                  P(data_axes, None, "model"),      # w_gate
+                  P(data_axes, "model", None)),     # w_down
+        out_specs=P(data_axes, seq_axis, None),
+        check_vma=False)
+    return fn(x, p["router"], p["w_up"], p["w_gate"], p["w_down"])
+
+
+def moe_apply(p: dict, cfg: ArchConfig, x: Array) -> Array:
+    B, T, d = x.shape
+    x2d = x.reshape(B * T, d)
+    impl = cfg.moe.impl
+    y = None
+    if impl == "ep" and shd.get_mesh() is not None:
+        y3d = _moe_ep(p, cfg, x)
+        y = None if y3d is None else y3d.reshape(B * T, d)
+    if y is None:
+        if impl == "scatter":
+            y = _moe_scatter(p, cfg, x2d)
+        else:
+            y = _moe_einsum(p, cfg, x2d)
+    if cfg.moe.n_shared_experts:
+        sp = p["shared"]
+        h = jax.nn.silu(x2d @ sp["w_gate"]) * (x2d @ sp["w_up"])
+        y = y + h @ sp["w_down"]
+    return y.reshape(B, T, d)

@@ -1,0 +1,271 @@
+"""Nyström attention — the paper's technique as a first-class LM feature.
+
+The softmax-attention kernel factorizes through the paper's RBF kernel:
+
+    exp(q·k/√hd) = c(q) · g(q, k) · c(k),
+    g(x, y) = exp(-‖x-y‖²/σ),  σ = 2√hd,   c(x) = exp(‖x‖²/σ).
+
+so a Nyström approximation of the attention gram matrix over a set of m
+landmark keys L (paper §4) gives
+
+    Σ_s exp(q·k_s/√hd) v_s ≈ c(q) · g(q,L) · G_LL⁻¹ · Ψ,
+        Ψ = Σ_s g(L, k_s) c(k_s) v_sᵀ            (m × dv running statistic)
+        ζ = Σ_s g(L, k_s) c(k_s)                 (m   running normalizer)
+
+G_LL = g(L, L) is the landmark gram matrix — exactly the K_{m,m} whose
+eigendecomposition the paper maintains incrementally (Algorithm 1), and
+``grow_landmark`` adds serve-time landmarks with that machinery (the
+incremental-Nyström "empirical subset-size" loop, applied to KV caches).
+
+Numerics: all k-side weights carry c̃(k) = exp(‖k‖²/σ − β) with a running
+flash-style shift β (the running max of ‖k‖²/σ), so every factor is ≤ 1;
+the q-side c̃(q) cancels in the num/den ratio. Exact intra-chunk attention
+is combined with the Nyström inter-chunk terms in the same c̃-scaled space,
+so prefill is *exact within a chunk* and Nyström-approximate across chunks.
+
+Memory: decode state is O(m·(dv+2)) per head — independent of context
+length. This is the sub-quadratic path that makes ``long_500k`` lowerable
+for dense architectures (recorded as a beyond-paper extra in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models.config import ArchConfig
+from repro.models.layers import (apply_rope, attention_init, dense_init,
+                                 rmsnorm_apply, rope_freqs)
+
+Array = jax.Array
+
+_JITTER = 1e-4
+
+
+def nystrom_attention_init(rng, cfg: ArchConfig) -> dict:
+    """Regular GQA projections + learned landmark keys (inducing points)."""
+    p = attention_init(rng, cfg)
+    m = cfg.nystrom_landmarks
+    p["landmarks"] = dense_init(jax.random.fold_in(rng, 7),
+                                (cfg.n_kv_heads, m, cfg.hd),
+                                dtype=jnp.float32) * jnp.sqrt(cfg.hd)
+    return p
+
+
+def _sigma(hd: int) -> float:
+    return 2.0 * float(hd) ** 0.5
+
+
+def _rbf(x: Array, y: Array, sigma: float) -> Array:
+    """g(x, y) over trailing feature dim; broadcast-friendly."""
+    d2 = (jnp.sum(x * x, -1)[..., :, None] + jnp.sum(y * y, -1)[..., None, :]
+          - 2.0 * jnp.einsum("...qd,...sd->...qs", x, y))
+    return jnp.exp(-jnp.maximum(d2, 0.0) / sigma)
+
+
+def _ginv(landmarks: Array, sigma: float) -> Array:
+    """(H, m, m) inverse of the jittered landmark gram.
+
+    The train path uses a plain differentiable inverse (eigh gradients are
+    unstable near degenerate spectra); at serve time this matrix is
+    *maintained incrementally* by the paper's Algorithm 1 instead of being
+    recomputed (see ``grow_landmark`` / ``ginv_from_eig``).
+    """
+    G = _rbf(landmarks, landmarks, sigma)
+    G = G + _JITTER * jnp.eye(G.shape[-1], dtype=G.dtype)
+    return jnp.linalg.inv(G)
+
+
+class NystromChunkCarry(NamedTuple):
+    psi: Array    # (B, Hkv, m, dv)
+    zeta: Array   # (B, Hkv, m)
+    beta: Array   # (B, Hkv) running shift (max ‖k‖²/σ)
+
+
+def nystrom_attention_apply(p: dict, cfg: ArchConfig, x: Array,
+                            positions: Array, *, chunk: int = 0) -> Array:
+    """Chunk-causal Nyström attention (train / prefill path).
+
+    Exact softmax attention within each chunk; Nyström-approximate over all
+    previous chunks via the (Ψ, ζ) running statistics. chunk=0 picks
+    max(landmarks, 128).
+    """
+    B, T, _ = x.shape
+    hd = cfg.hd
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    groups = Hq // Hkv
+    sigma = _sigma(hd)
+    Q = chunk or max(cfg.nystrom_landmarks, 128)
+    Q = min(Q, T)
+    assert T % Q == 0, (T, Q)
+    nc = T // Q
+
+    # Projections identical to the dense path.
+    q = (x @ p["wq"]).reshape(B, T, Hq, hd)
+    k = (x @ p["wk"]).reshape(B, T, Hkv, hd)
+    v = (x @ p["wv"]).reshape(B, T, Hkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q)
+        k = rmsnorm_apply(p["k_norm"], k)
+    inv_freq = rope_freqs(hd, cfg.rope_theta, cfg.rope_fraction)
+    q = apply_rope(q, positions, inv_freq)
+    k = apply_rope(k, positions, inv_freq)
+
+    lm = p["landmarks"].astype(jnp.float32)            # (Hkv, m, hd)
+    m = lm.shape[1]
+    Ginv = _ginv(lm, sigma)                            # (Hkv, m, m)
+
+    qf = jnp.moveaxis(q.reshape(B, nc, Q, Hq, hd), 1, 0).astype(jnp.float32)
+    kf = jnp.moveaxis(k.reshape(B, nc, Q, Hkv, hd), 1, 0).astype(jnp.float32)
+    vf = jnp.moveaxis(v.reshape(B, nc, Q, Hkv, hd), 1, 0).astype(jnp.float32)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def step(carry: NystromChunkCarry, inp):
+        qb, kb, vb = inp                               # (B,Q,H*,hd)
+        knorm = jnp.sum(kb * kb, -1) / sigma           # (B,Q,Hkv)
+        beta_new = jnp.maximum(carry.beta, jnp.max(knorm, axis=1))
+        scale = jnp.exp(carry.beta - beta_new)         # ≤ 1
+        psi = carry.psi * scale[..., None, None]
+        zeta = carry.zeta * scale[..., None]
+
+        ck = jnp.exp(knorm - beta_new[:, None, :])     # c̃(k) ≤ 1
+        # Nyström inter-chunk read-out for this chunk's queries.
+        phiq = _rbf(jnp.moveaxis(qb.reshape(B, Q, Hkv, groups, hd), 1, 3),
+                    lm[None, :, None], sigma)          # (B,Hkv,groups,Q,m)
+        r = jnp.einsum("bhgqm,hmn->bhgqn", phiq, Ginv)
+        num_nys = jnp.einsum("bhgqn,bhnv->bhgqv", r, psi)
+        den_nys = jnp.einsum("bhgqn,bhn->bhgq", r, zeta)
+
+        # Exact intra-chunk attention, in the same c̃-scaled space:
+        # exp(q·k/σq) · e^{-‖q‖²/σ-‖k‖²/σ+...} — equivalently g(q,k)·c̃(k).
+        g_qk = _rbf(jnp.moveaxis(qb.reshape(B, Q, Hkv, groups, hd), 1, 3),
+                    jnp.moveaxis(kb, 1, 2)[:, :, None], sigma)  # (B,Hkv,g,Q,S)
+        w_intra = g_qk * jnp.moveaxis(ck, 1, 2)[:, :, None, None, :]
+        w_intra = jnp.where(causal[None, None, None], w_intra, 0.0)
+        num_intra = jnp.einsum("bhgqs,bshv->bhgqv", w_intra, vb)
+        den_intra = jnp.sum(w_intra, -1)
+
+        num = num_intra + num_nys                      # c̃(q) cancels in ratio
+        den = den_intra + den_nys
+        out = num / jnp.maximum(den, 1e-9)[..., None]  # (B,Hkv,g,Q,hd)
+        out = jnp.moveaxis(out, 3, 1).reshape(B, Q, Hq, hd)
+
+        # Fold this chunk's keys into the running statistics.
+        phik = _rbf(lm[None], jnp.moveaxis(kb, 1, 2), sigma)  # (B,Hkv,m,Q)
+        wk = phik * ck.transpose(0, 2, 1)[:, :, None, :]
+        psi = psi + jnp.einsum("bhms,bshv->bhmv", wk, vb)
+        zeta = zeta + jnp.sum(wk, -1)
+        return NystromChunkCarry(psi, zeta, beta_new), out
+
+    # beta starts at 0 (knorm >= 0): exp(beta-beta_new) stays differentiable
+    # (an -inf start produces 0·inf = NaN in the backward pass) and the
+    # initial psi/zeta are zero so the under-estimate is harmless.
+    carry0 = NystromChunkCarry(
+        psi=jnp.zeros((B, Hkv, m, hd), jnp.float32),
+        zeta=jnp.zeros((B, Hkv, m), jnp.float32),
+        beta=jnp.zeros((B, Hkv), jnp.float32))
+    _, outs = jax.lax.scan(step, carry0, (qf, kf, vf))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, T, Hq * hd).astype(x.dtype)
+    out = shd.constrain(out, ("batch", "seq", "heads"))
+    return out @ p["wo"]
+
+
+# ------------------------------------------------------------------ decode --
+class NystromCache(NamedTuple):
+    """O(m) per-head decode state — context-length independent."""
+    psi: Array     # (B, Hkv, m, hd)
+    zeta: Array    # (B, Hkv, m)
+    beta: Array    # (B, Hkv)
+    ginv: Array    # (Hkv, m, m) — maintained by Alg. 1 at serve time
+
+
+def nystrom_cache_init(p: dict, cfg: ArchConfig, batch: int) -> NystromCache:
+    m = cfg.nystrom_landmarks
+    hd = cfg.hd
+    lm = p["landmarks"].astype(jnp.float32)
+    return NystromCache(
+        psi=jnp.zeros((batch, cfg.n_kv_heads, m, hd), jnp.float32),
+        zeta=jnp.zeros((batch, cfg.n_kv_heads, m), jnp.float32),
+        beta=jnp.zeros((batch, cfg.n_kv_heads), jnp.float32),
+        ginv=_ginv(lm, _sigma(hd)))
+
+
+def nystrom_decode(p: dict, cfg: ArchConfig, x: Array, cache: NystromCache,
+                   pos: Array) -> tuple[Array, NystromCache]:
+    """One-token decode: O(m·hd) flops, O(m·hd) state. x: (B, 1, d)."""
+    B = x.shape[0]
+    hd = cfg.hd
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    groups = Hq // Hkv
+    sigma = _sigma(hd)
+    positions = jnp.broadcast_to(pos[None], (B, 1)) if pos.ndim == 0 else pos
+
+    q = (x @ p["wq"]).reshape(B, 1, Hq, hd)
+    k = (x @ p["wk"]).reshape(B, 1, Hkv, hd)
+    v = (x @ p["wv"]).reshape(B, 1, Hkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q)
+        k = rmsnorm_apply(p["k_norm"], k)
+    inv_freq = rope_freqs(hd, cfg.rope_theta, cfg.rope_fraction)
+    q = apply_rope(q, positions, inv_freq).astype(jnp.float32)[:, 0]
+    k = apply_rope(k, positions, inv_freq).astype(jnp.float32)[:, 0]
+    v = v.astype(jnp.float32)[:, 0]                    # (B,Hkv,hd)
+
+    lm = p["landmarks"].astype(jnp.float32)
+
+    # Fold the new key/value into (Ψ, ζ) with the flash-style shift update.
+    knorm = jnp.sum(k * k, -1) / sigma                 # (B,Hkv)
+    beta = jnp.maximum(cache.beta, knorm)
+    scale = jnp.exp(cache.beta - beta)
+    ck = jnp.exp(knorm - beta)
+    phik = _rbf(lm[None], k[:, :, None, :], sigma)[..., 0]   # (B,Hkv,m)
+    wk = phik * ck[..., None]
+    psi = cache.psi * scale[..., None, None] + wk[..., None] * v[:, :, None, :]
+    zeta = cache.zeta * scale[..., None] + wk
+
+    # Read out: num/den via the maintained G⁻¹ (c̃(q) cancels).
+    qg = q.reshape(B, Hkv, groups, hd)
+    phiq = _rbf(qg, lm[None], sigma)                   # (B,Hkv,groups,m)
+    r = jnp.einsum("bhgm,hmn->bhgn", phiq, cache.ginv)
+    num = jnp.einsum("bhgn,bhnv->bhgv", r, psi)
+    den = jnp.einsum("bhgn,bhn->bhg", r, zeta)
+    out = (num / jnp.maximum(den, 1e-9)[..., None]).reshape(B, 1, Hq * hd)
+    return (out.astype(x.dtype) @ p["wo"],
+            NystromCache(psi=psi, zeta=zeta, beta=beta, ginv=cache.ginv))
+
+
+# ----------------------------------------------- serve-time landmark growth --
+def grow_landmark(landmarks: Array, L: Array, U: Array, m_active: Array,
+                  new_lm: Array, sigma: float, *, iters: int = 62
+                  ) -> tuple[Array, Array, Array, Array]:
+    """Add one landmark with the paper's Algorithm 1 (incremental eigh of the
+    landmark gram K_{m,m}) — the incremental-Nyström loop of §4 applied to
+    attention. Returns updated (landmarks, L, U, m_active).
+
+    landmarks: (M, hd) fixed-capacity landmark buffer for one head;
+    (L, U): maintained eigendecomposition of g(landmarks, landmarks).
+    """
+    from repro.core import inkpca, kernels_fn as kf
+
+    M = landmarks.shape[0]
+    spec = kf.KernelSpec(name="rbf", sigma=float(sigma))
+    mask = jnp.arange(M) < m_active
+    a = jnp.where(mask, kf.kernel_row(new_lm, landmarks, spec=spec), 0.0)
+    k_new = jnp.asarray(1.0, L.dtype)                  # RBF diagonal
+    state = inkpca.KPCAState(L=L, U=U, m=m_active,
+                             S=jnp.zeros((), L.dtype),
+                             K1=jnp.zeros((M,), L.dtype), X=landmarks)
+    state = inkpca.update_unadjusted(state, a, k_new, new_lm, iters=iters)
+    return state.X, state.L, state.U, state.m
+
+
+def ginv_from_eig(L: Array, U: Array, m_active: Array,
+                  jitter: float = _JITTER) -> Array:
+    """G⁻¹ from maintained eigenpairs (paper eq. 7 rescaling pattern)."""
+    M = L.shape[0]
+    mask = jnp.arange(M) < m_active
+    inv = jnp.where(mask & (L > jitter), 1.0 / jnp.where(L > jitter, L, 1.0),
+                    0.0)
+    return (U * inv[None, :]) @ U.T

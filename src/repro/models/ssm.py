@@ -1,0 +1,170 @@
+"""Selective SSM block (Mamba), implemented in the SSD (Mamba-2) chunked
+matmul form — the TPU-native adaptation: the recurrence becomes dense
+(Q×Q)·(Q×P) matmuls that keep the MXU busy, instead of the element-wise
+parallel scan a GPU implementation would use.  Hardware-adaptation note in
+DESIGN.md §3.
+
+Train/prefill: chunked parallel form, lax.scan over T/Q chunk states.
+Decode: O(1) recurrent state update per token.
+
+Shapes: d_in = expand * d_model; heads H = d_in / head_dim(P); state N.
+Scalar-per-head decay a_t = exp(dt_t * A) (A < 0), shared B_t, C_t (N,).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models.config import ArchConfig
+from repro.models.layers import dense_init, rmsnorm_apply, rmsnorm_init
+
+Array = jax.Array
+
+
+def mamba_init(rng, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    H = d_in // cfg.ssm_head_dim
+    N = cfg.ssm_d_state
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in), dtype=dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, d_in)) * 0.1
+                   ).astype(dt),
+        "bc_proj": dense_init(ks[2], (d_in, 2 * N), dtype=dt),
+        "dt_proj": dense_init(ks[3], (d_in, H), dtype=dt),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "a_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32) / H + 0.5),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "out_norm": rmsnorm_init(d_in, dt),
+        "out_proj": dense_init(ks[4], (d_in, d), dtype=dt),
+    }
+
+
+def _causal_conv(x: Array, w: Array) -> Array:
+    """Depthwise causal conv over time; x: (B, T, C), w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    segs = [pad[:, i: i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(K)]
+    return sum(segs)
+
+
+def _ssd_scan(xh: Array, a_log: Array, B: Array, C: Array, chunk: int
+              ) -> Array:
+    """Chunked SSD: xh (B,T,H,P) pre-scaled by dt; a_log (B,T,H) = log decay;
+    B, C: (B,T,N).  Returns (B,T,H,P).
+
+    lax.scan over chunks with a checkpointed body: only ONE chunk's
+    (Q, Q, H) decay tensor is live at a time. (The all-chunks-at-once
+    vectorized form materialized nc of them — 174 GB/device temp on the
+    jamba train_4k dry-run; §Perf jamba iteration 1.)
+    """
+    Bb, T, H, P = xh.shape
+    N = B.shape[-1]
+    Q = min(chunk, T)
+    nc = T // Q
+    xc = jnp.moveaxis(xh.reshape(Bb, nc, Q, H, P), 1, 0)
+    ac = jnp.moveaxis(a_log.reshape(Bb, nc, Q, H), 1, 0)
+    Bc = jnp.moveaxis(B.reshape(Bb, nc, Q, N), 1, 0)
+    Cc = jnp.moveaxis(C.reshape(Bb, nc, Q, N), 1, 0)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def step(S_prev, inp):                           # S_prev: (B,H,N,P)
+        x_c, a_c, B_c, C_c = inp
+        cum = jnp.cumsum(a_c, axis=1)                # (B,Q,H)
+        total = cum[:, -1, :]                        # (B,H)
+
+        # Intra-chunk: M[t,s] = (C_t·B_s) exp(cum_t - cum_s), s <= t.
+        scores = jnp.einsum("bqn,bsn->bqs", C_c, B_c)
+        ldiff = cum[:, :, None, :] - cum[:, None, :, :]      # (B,Q,Q,H)
+        decay = jnp.where(causal[None, :, :, None], jnp.exp(ldiff), 0.0)
+        M = scores[..., None] * decay
+        y = jnp.einsum("bqsh,bshp->bqhp", M.astype(xh.dtype), x_c)
+
+        # Inter-chunk: y_t += C_t^T exp(cum_t) S_prev.
+        w_in = jnp.exp(cum).astype(xh.dtype)
+        y = y + jnp.einsum("bqn,bqh,bhnp->bqhp", C_c, w_in, S_prev)
+
+        # Advance the chunk state.
+        w_end = jnp.exp(total[:, None, :] - cum).astype(xh.dtype)
+        S_new = (jnp.exp(total)[..., None, None].astype(xh.dtype) * S_prev
+                 + jnp.einsum("bqh,bqn,bqhp->bhnp", w_end, B_c, x_c))
+        return S_new, y
+
+    S0 = jnp.zeros((Bb, H, N, P), xh.dtype)
+    _, ys = jax.lax.scan(jax.checkpoint(step), S0, (xc, ac, Bc, Cc))
+    return jnp.moveaxis(ys, 0, 1).reshape(Bb, T, H, P)
+
+
+def mamba_apply(p: dict, cfg: ArchConfig, x: Array) -> Array:
+    Bb, T, d = x.shape
+    d_in = cfg.ssm_expand * d
+    H = d_in // cfg.ssm_head_dim
+    P = cfg.ssm_head_dim
+
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = _causal_conv(xs, p["conv_w"])
+    xs = jax.nn.silu(xs)
+    xs = shd.constrain(xs, ("batch", "seq", "mlp"))
+
+    BC = xs @ p["bc_proj"]                           # (B,T,2N)
+    Bm, Cm = jnp.split(BC, 2, axis=-1)
+    dt_raw = xs @ p["dt_proj"] + p["dt_bias"].astype(xs.dtype)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32))            # (B,T,H)
+    A = -jnp.exp(p["a_log"])                                    # (H,) < 0
+    a_log_step = (dt * A[None, None, :]).astype(jnp.float32)    # log decay
+
+    xh = xs.reshape(Bb, T, H, P)
+    xh_dt = xh * dt[..., None].astype(xh.dtype)
+    y = _ssd_scan(xh_dt, a_log_step, Bm, Cm, cfg.ssm_chunk)
+    y = y + xh * p["d_skip"].astype(xh.dtype)[None, None, :, None]
+    y = y.reshape(Bb, T, d_in)
+    y = rmsnorm_apply(p["out_norm"], y) * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+# -------------------------------------------------------------- decoding --
+def mamba_cache_init(cfg: ArchConfig, batch: int) -> dict:
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "S": jnp.zeros((batch, H, cfg.ssm_d_state, cfg.ssm_head_dim), dt),
+        "conv_buf": jnp.zeros((batch, cfg.ssm_conv - 1, d_in), dt),
+    }
+
+
+def mamba_decode(p: dict, cfg: ArchConfig, x: Array, cache: dict
+                 ) -> tuple[Array, dict]:
+    """One-token recurrent step; x: (B, 1, d)."""
+    Bb, _, d = x.shape
+    d_in = cfg.ssm_expand * d
+    H = d_in // cfg.ssm_head_dim
+    P = cfg.ssm_head_dim
+
+    xz = x[:, 0] @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)                # (B, d_in)
+    window = jnp.concatenate([cache["conv_buf"], xs[:, None, :]], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"])
+    xs_c = jax.nn.silu(conv_out)
+
+    BC = xs_c @ p["bc_proj"]
+    Bm, Cm = jnp.split(BC, 2, axis=-1)               # (B, N)
+    dt = jax.nn.softplus((xs_c @ p["dt_proj"]
+                          + p["dt_bias"].astype(xs_c.dtype)).astype(jnp.float32))
+    A = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * A[None, :])                 # (B, H)
+
+    xh = xs_c.reshape(Bb, H, P) * dt[..., None].astype(xs_c.dtype)
+    S = (decay[..., None, None].astype(cache["S"].dtype) * cache["S"]
+         + jnp.einsum("bn,bhp->bhnp", Bm, xh))
+    y = jnp.einsum("bn,bhnp->bhp", Cm, S)
+    y = y + xs_c.reshape(Bb, H, P) * p["d_skip"].astype(xs_c.dtype)[None, :, None]
+    y = y.reshape(Bb, d_in)
+    y = rmsnorm_apply(p["out_norm"], y) * jax.nn.silu(z)
+    y = (y @ p["out_proj"])[:, None, :]
+    return y, {"S": S, "conv_buf": window[:, 1:, :]}

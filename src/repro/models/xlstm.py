@@ -1,0 +1,235 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential recurrence with exponential gating).
+
+TPU adaptation: mLSTM's parallel form is evaluated in the same chunked
+matmul style as SSD (see ssm.py) — linear attention with data-dependent
+decay — with the log-space stabilizer m_t folded into per-chunk weights.
+sLSTM is inherently sequential (recurrent h feedback); it lowers to
+lax.scan over time — its O(T) latency is why xLSTM-125m pairs a few sLSTM
+blocks with mostly-mLSTM blocks (we follow the paper's 1:~5 ratio).
+
+Simplifications vs the reference CUDA implementation (documented in
+DESIGN.md): scalar (per-head) gates, no head-wise causal conv front-end,
+GroupNorm -> RMSNorm.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models.config import ArchConfig
+from repro.models.layers import dense_init, rmsnorm_apply, rmsnorm_init
+
+Array = jax.Array
+
+
+# ------------------------------------------------------------------ mLSTM --
+def mlstm_init(rng, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    d_in = cfg.xlstm_expand * d
+    H = cfg.n_heads
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 7)
+    return {
+        "w_q": dense_init(ks[0], (d, d_in), dtype=dt),
+        "w_k": dense_init(ks[1], (d, d_in), dtype=dt),
+        "w_v": dense_init(ks[2], (d, d_in), dtype=dt),
+        "w_i": dense_init(ks[3], (d, H), dtype=jnp.float32),
+        "w_f": dense_init(ks[4], (d, H), dtype=jnp.float32),
+        "f_bias": jnp.full((H,), 3.0, jnp.float32),   # open forget gates
+        "w_gate": dense_init(ks[5], (d, d_in), dtype=dt),
+        "out_norm": rmsnorm_init(d_in, dt),
+        "w_o": dense_init(ks[6], (d_in, d), dtype=dt),
+    }
+
+
+def _mlstm_chunked(q, k, v, log_f, log_i, chunk: int):
+    """Stabilized chunked mLSTM (linear attention with data-dependent decay).
+
+    q,k,v: (B,T,H,P); log_f, log_i: (B,T,H) in fp32.
+
+    Exact log-space stabilization (matches ``mlstm_decode`` token-for-token):
+    with lc_t = within-chunk cumsum(log_f), g_s = log_i_s - lc_s and the
+    carried stabilizer m_in (relative to the chunk start),
+
+        Mx_t   = max(m_in, cummax_{s<=t} g_s)            (running stabilizer)
+        y_t    = e^{m_in-Mx_t} q_t·S_in
+                 + sum_{s<=t} e^{g_s-Mx_t} (q_t·k_s/√P) v_s
+        den_t  = same with z_in / k_s
+        h_t    = y_t / max(|den_t|, 1)
+
+    every exponent is ≤ 0 by construction, so the fp32 weights are bounded.
+    The chunk carry (S, z, m) advances with the end-of-chunk stabilizer, and
+    the scan over T/Q chunks is the only sequential dependence.
+    """
+    B, T, H, P = q.shape
+    Q = min(chunk, T)
+    nc = T // Q
+    dt = q.dtype
+    qc = jnp.moveaxis(q.reshape(B, nc, Q, H, P), 1, 0)     # (nc,B,Q,H,P)
+    kc = jnp.moveaxis(k.reshape(B, nc, Q, H, P), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nc, Q, H, P), 1, 0)
+    fc = jnp.moveaxis(log_f.reshape(B, nc, Q, H), 1, 0)    # (nc,B,Q,H) fp32
+    ic = jnp.moveaxis(log_i.reshape(B, nc, Q, H), 1, 0)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+    inv_sqrt_p = 1.0 / jnp.sqrt(P)
+
+    def step(carry, inp):
+        S_in, z_in, m_in = carry                # (B,H,P,P),(B,H,P),(B,H)
+        qb, kb, vb, fb, ib = inp
+        lc = jnp.cumsum(fb, axis=1)             # (B,Q,H)
+        g = ib - lc
+        Mx = jnp.maximum(jax.lax.cummax(g, axis=1), m_in[:, None, :])
+
+        # Intra-chunk: D[t,s] = exp(g_s - Mx_t) on the causal triangle.
+        dlog = g[:, None, :, :] - Mx[:, :, None, :]        # (B,Q,Q,H)
+        D = jnp.where(causal, jnp.exp(dlog), 0.0)
+        scores = jnp.einsum("bqhp,bshp->bqsh", qb, kb).astype(jnp.float32)
+        M = scores * inv_sqrt_p * D
+        y = jnp.einsum("bqsh,bshp->bqhp", M.astype(dt), vb)
+        den = jnp.sum(M, axis=2)                           # (B,Q,H)
+
+        # Inherited carry contribution.
+        cw = jnp.exp(m_in[:, None, :] - Mx)                # (B,Q,H) ≤ 1
+        qw = (qb * inv_sqrt_p * cw[..., None].astype(dt))
+        y = y + jnp.einsum("bqhp,bhpn->bqhn", qw, S_in)
+        den = den + jnp.einsum("bqhp,bhp->bqh", qw, z_in).astype(jnp.float32)
+
+        # Advance the carry with the end-of-chunk stabilizer.
+        Mx_end = Mx[:, -1, :]                              # (B,H)
+        wk = jnp.exp(g - Mx_end[:, None, :])[..., None].astype(dt) * kb
+        S_out = (jnp.exp(m_in - Mx_end)[..., None, None].astype(dt) * S_in
+                 + jnp.einsum("bshp,bshn->bhpn", wk, vb))
+        z_out = (jnp.exp(m_in - Mx_end)[..., None].astype(dt) * z_in
+                 + jnp.sum(wk, axis=1))
+
+        h = y / jnp.maximum(jnp.abs(den), 1.0)[..., None].astype(dt)
+        # Re-base the carried stabilizer to the next chunk's cum reference:
+        # m_in' = Mx_end + sum(log_f over this chunk).
+        return (S_out, z_out, Mx_end + lc[:, -1, :]), h
+
+    S0 = jnp.zeros((B, H, P, P), dt)
+    z0 = jnp.zeros((B, H, P), dt)
+    m0 = jnp.zeros((B, H), jnp.float32)   # m_0 = 0, as in mlstm_cache_init
+    _, hs = jax.lax.scan(step, (S0, z0, m0), (qc, kc, vc, fc, ic))
+    return jnp.moveaxis(hs, 0, 1).reshape(B, T, H * P)
+
+
+def mlstm_apply(p: dict, cfg: ArchConfig, x: Array) -> Array:
+    B, T, d = x.shape
+    d_in = cfg.xlstm_expand * d
+    H = cfg.n_heads
+    P = d_in // H
+    q = (x @ p["w_q"]).reshape(B, T, H, P)
+    k = (x @ p["w_k"]).reshape(B, T, H, P)
+    v = (x @ p["w_v"]).reshape(B, T, H, P)
+    log_i = (x.astype(jnp.float32) @ p["w_i"])
+    log_f = jax.nn.log_sigmoid(x.astype(jnp.float32) @ p["w_f"]
+                               + p["f_bias"])
+    y = _mlstm_chunked(q, k, v, log_f, log_i, cfg.ssm_chunk)
+    y = rmsnorm_apply(p["out_norm"], y)
+    y = y * jax.nn.silu(x @ p["w_gate"])
+    return y @ p["w_o"]
+
+
+def mlstm_cache_init(cfg: ArchConfig, batch: int) -> dict:
+    d_in = cfg.xlstm_expand * cfg.d_model
+    H = cfg.n_heads
+    P = d_in // H
+    dt = jnp.dtype(cfg.dtype)
+    return {"S": jnp.zeros((batch, H, P, P), dt),
+            "z": jnp.zeros((batch, H, P), dt),
+            "m": jnp.zeros((batch, H), jnp.float32)}
+
+
+def mlstm_decode(p: dict, cfg: ArchConfig, x: Array, cache: dict
+                 ) -> tuple[Array, dict]:
+    B, _, d = x.shape
+    d_in = cfg.xlstm_expand * d
+    H = cfg.n_heads
+    P = d_in // H
+    xt = x[:, 0]
+    q = (xt @ p["w_q"]).reshape(B, H, P) / jnp.sqrt(P).astype(x.dtype)
+    k = (xt @ p["w_k"]).reshape(B, H, P)
+    v = (xt @ p["w_v"]).reshape(B, H, P)
+    log_i = xt.astype(jnp.float32) @ p["w_i"]
+    log_f = jax.nn.log_sigmoid(xt.astype(jnp.float32) @ p["w_f"] + p["f_bias"])
+
+    m_new = jnp.maximum(log_f + cache["m"], log_i)
+    wf = jnp.exp(log_f + cache["m"] - m_new).astype(x.dtype)
+    wi = jnp.exp(log_i - m_new).astype(x.dtype)
+    S = wf[..., None, None] * cache["S"] + wi[..., None, None] * \
+        jnp.einsum("bhp,bhn->bhpn", k, v)
+    z = wf[..., None] * cache["z"] + wi[..., None] * k
+    num = jnp.einsum("bhp,bhpn->bhn", q, S)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", q, z)), 1.0)
+    y = (num / den[..., None]).reshape(B, d_in)
+    y = rmsnorm_apply(p["out_norm"], y) * jax.nn.silu(xt @ p["w_gate"])
+    return (y @ p["w_o"])[:, None, :], {"S": S, "z": z, "m": m_new}
+
+
+# ------------------------------------------------------------------ sLSTM --
+def slstm_init(rng, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 3)
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * d), dtype=dt),     # i, f, z, o
+        "r_in": dense_init(ks[1], (d, 4 * d), scale=0.5, dtype=dt),
+        "bias": jnp.zeros((4 * d,), jnp.float32),
+        "out_norm": rmsnorm_init(d, dt),
+        "w_o": dense_init(ks[2], (d, d), dtype=dt),
+    }
+
+
+def _slstm_cell(p, gx_t, h_dtype, state):
+    """One sLSTM step with exponential gating + stabilizer (paper eq.
+    13-20). ``gx_t`` is the *precomputed* input-gate projection x_t@W —
+    hoisted out of the token recurrence (§Perf xlstm iteration 1): the
+    input projection of all T tokens becomes one TP matmul instead of T
+    tiny per-token matmuls with per-token weight collectives."""
+    c, n, m, h = state
+    gates = (gx_t + h @ p["r_in"]).astype(jnp.float32) + p["bias"]
+    i_, f_, z_, o_ = jnp.split(gates, 4, axis=-1)
+    m_new = jnp.maximum(f_ + m, i_)
+    i_s = jnp.exp(i_ - m_new)
+    f_s = jnp.exp(f_ + m - m_new)
+    c_new = f_s * c + i_s * jnp.tanh(z_)
+    n_new = f_s * n + i_s
+    h_new = (jax.nn.sigmoid(o_) * c_new / jnp.maximum(n_new, 1.0)
+             ).astype(h_dtype)
+    return (c_new, n_new, m_new, h_new)
+
+
+def slstm_apply(p: dict, cfg: ArchConfig, x: Array) -> Array:
+    B, T, d = x.shape
+    gx = x @ p["w_in"]                    # hoisted input projection (B,T,4d)
+    gx = shd.constrain(gx, ("batch", "seq", None))
+    state = (jnp.zeros((B, d), jnp.float32), jnp.zeros((B, d), jnp.float32),
+             jnp.zeros((B, d), jnp.float32), jnp.zeros((B, d), x.dtype))
+
+    def step(state, gx_t):
+        state = _slstm_cell(p, gx_t, x.dtype, state)
+        return state, state[3]
+
+    _, hs = jax.lax.scan(step, state, jnp.moveaxis(gx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1)
+    return rmsnorm_apply(p["out_norm"], y) @ p["w_o"]
+
+
+def slstm_cache_init(cfg: ArchConfig, batch: int) -> dict:
+    d = cfg.d_model
+    return {"c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.zeros((batch, d), jnp.float32),
+            "h": jnp.zeros((batch, d), jnp.dtype(cfg.dtype))}
+
+
+def slstm_decode(p: dict, cfg: ArchConfig, x: Array, cache: dict
+                 ) -> tuple[Array, dict]:
+    state = (cache["c"], cache["n"], cache["m"], cache["h"])
+    gx = x[:, 0] @ p["w_in"]
+    c, n, m, h = _slstm_cell(p, gx, x.dtype, state)
+    y = rmsnorm_apply(p["out_norm"], h[:, None, :]) @ p["w_o"]
+    return y, {"c": c, "n": n, "m": m, "h": h}

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (OptState, adamw, adafactor, sgdm,
+                                    make_optimizer)
+from repro.optim.schedules import (constant, cosine, wsd, linear_warmup,
+                                   make_schedule)
+from repro.optim.compression import (compress_int8, decompress_int8,
+                                     compressed_psum, CompressionState)

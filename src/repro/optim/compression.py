@@ -1,0 +1,87 @@
+"""Int8 gradient compression with error feedback, for the slow pod axis.
+
+At 512+ chips the inter-pod (DCI) links are the scarcest bandwidth; the
+cross-pod gradient all-reduce is the dominant collective for pure-DP pod
+scaling.  We compress pod-axis gradient traffic 4× (f32 -> int8 blockwise)
+with an error-feedback accumulator (Seide et al. 2014; Karimireddy et al.
+2019) so the quantization bias does not accumulate in the optimizer:
+
+    e_t        <- residual from the previous step
+    q_t        =  Q(g_t + e_t)
+    e_{t+1}    =  (g_t + e_t) - DQ(q_t)
+    all-reduce over 'pod' runs on q_t (int8 payload + per-block scales).
+
+``compressed_psum`` is shard_map-compatible: inside a shard_map over the
+pod axis, call it instead of ``jax.lax.psum``.  Under jit-of-pjit the
+int8 cast happens before the collective, so the HLO all-reduce moves 1/4
+of the bytes (visible in the §Roofline collective term).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+BLOCK = 256
+
+
+class CompressionState(NamedTuple):
+    error: PyTree    # error-feedback residual, same structure as grads
+
+
+def init_state(grads_like: PyTree) -> CompressionState:
+    return CompressionState(error=jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def _pad_to_block(x: Array) -> tuple[Array, int]:
+    n = x.size
+    np_ = -(-n // BLOCK) * BLOCK
+    flat = jnp.pad(x.reshape(-1), (0, np_ - n))
+    return flat.reshape(-1, BLOCK), n
+
+
+def compress_int8(g: Array) -> tuple[Array, Array]:
+    """Blockwise symmetric int8 quantization. Returns (q, scales)."""
+    blocks, _ = _pad_to_block(g.astype(jnp.float32))
+    amax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def decompress_int8(q: Array, scale: Array, shape: tuple, n: int) -> Array:
+    deq = q.astype(jnp.float32) * scale[:, None]
+    return deq.reshape(-1)[:n].reshape(shape)
+
+
+def compressed_psum(grads: PyTree, state: CompressionState, axis: str,
+                    *, npods: int) -> tuple[PyTree, CompressionState]:
+    """Error-feedback int8 gradient mean over ``axis`` (inside shard_map).
+
+    Scheme: quantize locally, all-gather the int8 payload (+ f32 per-block
+    scales) over the pod axis, dequantize and average locally.  The wire
+    payload is 1 byte/element (+ 4/BLOCK bytes of scales) versus the ring
+    all-reduce's 2·(P-1)/P · 4 bytes/element — a ≥4× cut for P=2 pods,
+    visible in the dry-run's collective-bytes term.
+    """
+
+    def one(g: Array, e: Array) -> tuple[Array, Array]:
+        target = g.astype(jnp.float32) + e
+        q, scale = compress_int8(target)
+        q_all = jax.lax.all_gather(q, axis)          # (P, nblocks, BLOCK) i8
+        s_all = jax.lax.all_gather(scale, axis)      # (P, nblocks) f32
+        deq = jnp.sum(q_all.astype(jnp.float32) * s_all[..., None], axis=0)
+        mean = (deq.reshape(-1)[: g.size].reshape(g.shape) / npods)
+        new_e = target - decompress_int8(q, scale, g.shape, g.size)
+        return mean.astype(g.dtype), new_e
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(state.error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in outs]),
+            CompressionState(error=tdef.unflatten([o[1] for o in outs])))

@@ -1,0 +1,177 @@
+"""Optimizers, functional-style (no optax dependency).
+
+* ``adamw``     — fp32 moments; the default for ≤132B-param archs, with
+  moments FSDP-sharded like the params (ZeRO-1/3 by construction: the
+  optimizer state inherits the param sharding).
+* ``adafactor`` — factored second moment (row/col statistics), the memory
+  plan for kimi-k2-1t: no fp32 master copy, state is O(r+c) per matrix.
+* ``sgdm``      — baseline.
+
+All expose  init(params) -> state  and
+update(grads, state, params, lr) -> (new_params, new_state).
+Gradient clipping is a separate combinator so it composes with the int8
+pod-axis compression in ``compression.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: Array
+    inner: PyTree
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], OptState]
+    update: Callable[..., tuple[PyTree, OptState]]
+    name: str = "opt"
+
+
+def global_norm(tree: PyTree) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+# ------------------------------------------------------------------ AdamW --
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)       # noqa: E731
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        inner={"mu": jax.tree.map(zeros, params),
+                               "nu": jax.tree.map(zeros, params)})
+
+    def update(grads, state, params, lr):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * g * g
+            u = (mu / c1) / (jnp.sqrt(nu / c2) + eps)
+            if p.ndim >= 2:                      # decoupled wd, matrices only
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), mu, nu
+
+        out = jax.tree.map(upd, grads, state.inner["mu"], state.inner["nu"],
+                           params)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, OptState(step=step, inner={"mu": mu, "nu": nu})
+
+    return Optimizer(init=init, update=update, name="adamw")
+
+
+# --------------------------------------------------------------- Adafactor --
+def adafactor(eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay_pow: float = 0.8, weight_decay: float = 0.0) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern 2018), the
+    O(r+c)-state memory plan for the 1T-param arch."""
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2 and p.shape[-1] >= 2 and p.shape[-2] >= 2
+
+    def init(params):
+        def st(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        inner=jax.tree.map(st, params,
+                                           is_leaf=lambda x: hasattr(x, "shape")))
+
+    def update(grads, state, params, lr):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay_pow)
+
+        def upd(g, v, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                    eps)[..., None]       # (..., 1, 1)
+                u = g * jax.lax.rsqrt(vr[..., None] / denom) \
+                    * jax.lax.rsqrt(vc[..., None, :])
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv = {"v": beta * v["v"] + (1 - beta) * g2}
+                u = g * jax.lax.rsqrt(nv["v"])
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay and p.ndim >= 2:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), nv
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_v = treedef.flatten_up_to(state.inner)
+        outs = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+        new_params = treedef.unflatten([o[0] for o in outs])
+        new_inner = treedef.unflatten([o[1] for o in outs])
+        return new_params, OptState(step=step, inner=new_inner)
+
+    return Optimizer(init=init, update=update, name="adafactor")
+
+
+# -------------------------------------------------------------------- SGDm --
+def sgdm(momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        inner=jax.tree.map(
+                            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def update(grads, state, params, lr):
+        step = state.step + 1
+
+        def upd(g, m, p):
+            m = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+
+        out = jax.tree.map(upd, grads, state.inner, params)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, OptState(step=step, inner=m)
+
+    return Optimizer(init=init, update=update, name="sgdm")
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    if name == "sgdm":
+        return sgdm(**kw)
+    raise ValueError(name)

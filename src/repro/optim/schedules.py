@@ -1,0 +1,72 @@
+"""Learning-rate schedules.
+
+WSD (warmup–stable–decay) is a first-class citizen because the assigned
+minicpm-2b architecture trains with it (arXiv:2404.06395): LR warms up,
+holds at peak for the bulk of training, then decays rapidly in the final
+``decay_frac`` of steps (we use the paper's exponential-to-floor form).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup: int) -> Schedule:
+    def fn(step):
+        frac = jnp.minimum(step.astype(jnp.float32) / max(warmup, 1), 1.0)
+        return lr * frac
+    return fn
+
+
+def cosine(lr: float, warmup: int, total: int, floor: float = 0.1) -> Schedule:
+    def fn(step):
+        s = step.astype(jnp.float32)
+        wf = jnp.minimum(s / max(warmup, 1), 1.0)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return lr * wf * cos
+    return fn
+
+
+def wsd(lr: float, warmup: int, total: int, decay_frac: float = 0.1,
+        floor: float = 0.01) -> Schedule:
+    """Warmup–Stable–Decay (minicpm): stable at peak, exp decay at the end."""
+    decay_start = int(total * (1.0 - decay_frac))
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        wf = jnp.minimum(s / max(warmup, 1), 1.0)
+        prog = jnp.clip((s - decay_start) / max(total - decay_start, 1),
+                        0.0, 1.0)
+        decay = jnp.exp(jnp.log(floor) * prog)   # 1 -> floor exponentially
+        return lr * wf * decay
+    return fn
+
+
+@dataclass(frozen=True)
+class ScheduleConfig:
+    kind: str = "cosine"          # constant | cosine | wsd
+    lr: float = 3e-4
+    warmup: int = 100
+    total: int = 10_000
+    decay_frac: float = 0.1
+    floor: float = 0.1
+
+
+def make_schedule(cfg: ScheduleConfig) -> Schedule:
+    if cfg.kind == "constant":
+        return constant(cfg.lr)
+    if cfg.kind == "cosine":
+        return cosine(cfg.lr, cfg.warmup, cfg.total, cfg.floor)
+    if cfg.kind == "wsd":
+        return wsd(cfg.lr, cfg.warmup, cfg.total, cfg.decay_frac,
+                   floor=min(cfg.floor, 0.05))
+    raise ValueError(cfg.kind)

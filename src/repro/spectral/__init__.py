@@ -1,0 +1,1 @@
+from repro.spectral.monitor import SpectralMonitor

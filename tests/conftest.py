@@ -1,0 +1,10 @@
+import os
+
+# Tests exercise the Pallas kernel bodies on CPU via interpret mode.
+os.environ.setdefault("REPRO_PALLAS_FORCE", "ref")
+
+import jax  # noqa: E402
+
+# The numerics tests (rank-one updates, drift) need f64; model code pins its
+# dtypes explicitly so this is safe globally.
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,71 @@
+"""Per-assigned-architecture smoke tests: reduced same-family config, one
+forward/train step on CPU, output shapes + no NaNs (assignment req. (f))."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.data.synthetic import TokenStream, frontend_embeddings
+from repro.models import lm
+
+B, T = 2, 16
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_arch_smoke_forward_and_grad(arch):
+    cfg = configs.get_config(arch, smoke=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    stream = TokenStream(vocab=cfg.vocab, seq_len=T, global_batch=B)
+    batch = frontend_embeddings(cfg, stream.batch_at(jnp.int32(0)))
+
+    logits = lm.forward(params, cfg, batch["tokens"],
+                        batch.get("embeddings"), remat=False)
+    assert logits.shape == (B, T, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: lm.loss_fn(p, cfg, batch), has_aux=True)(params)
+    assert bool(jnp.isfinite(loss))
+    assert all(bool(jnp.isfinite(g.astype(jnp.float32)).all())
+               for g in jax.tree.leaves(grads))
+
+
+@pytest.mark.parametrize("arch", ["qwen3_32b", "jamba_1_5_large_398b",
+                                  "xlstm_125m", "kimi_k2_1t_a32b"])
+def test_arch_smoke_decode_step(arch):
+    cfg = configs.get_config(arch, smoke=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    caches = lm.init_caches(params, cfg, B, max_seq=8)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    for t in range(3):
+        pos = jnp.full((B, 1), t, jnp.int32)
+        logits, caches = lm.decode_step(params, cfg, caches, tok, pos)
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+def test_cells_enumeration():
+    cells = configs.cells(include_skipped=True)
+    assert len(cells) == 40                      # 10 archs × 4 shapes
+    runnable = [c for c in cells if not c[3]]
+    skipped = [c for c in cells if c[3]]
+    # long_500k skipped exactly for the 8 full-attention archs
+    assert len(skipped) == 8
+    assert all(s[1] == "long_500k" for s in skipped)
+    assert {("xlstm_125m", "long_500k"), ("jamba_1_5_large_398b",
+                                          "long_500k")} <= {
+        (c[0], c[1]) for c in runnable}
+
+
+def test_param_counts_match_assignment():
+    from repro.models.config import param_count
+    targets = {
+        "pixtral_12b": 12e9, "jamba_1_5_large_398b": 398e9,
+        "qwen3_32b": 32e9, "stablelm_12b": 12e9,
+        "command_r_plus_104b": 104e9, "kimi_k2_1t_a32b": 1.0e12,
+        "dbrx_132b": 132e9,
+    }
+    for arch, t in targets.items():
+        n = param_count(configs.get_config(arch))
+        assert 0.9 < n / t < 1.15, (arch, n, t)

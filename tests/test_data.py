@@ -1,0 +1,63 @@
+"""Data pipeline: determinism, label alignment, dataset stand-ins."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import TokenStream, load_dataset, magic_like, yeast_like
+
+
+def test_stream_deterministic():
+    s1 = TokenStream(vocab=100, seq_len=32, global_batch=4, seed=1)
+    s2 = TokenStream(vocab=100, seq_len=32, global_batch=4, seed=1)
+    b1 = s1.batch_at(jnp.int32(5))
+    b2 = s2.batch_at(jnp.int32(5))
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = s1.batch_at(jnp.int32(6))
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+
+
+def test_labels_are_shifted_tokens():
+    s = TokenStream(vocab=50, seq_len=16, global_batch=2, seed=0)
+    b = s.batch_at(jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(b["labels"][:, :-1]),
+                                  np.asarray(b["tokens"][:, 1:]))
+    assert (np.asarray(b["labels"][:, -1]) == -1).all()
+
+
+def test_stream_has_learnable_structure():
+    """~Half the transitions follow a fixed permutation."""
+    s = TokenStream(vocab=64, seq_len=256, global_batch=8, seed=2)
+    b = np.asarray(s.batch_at(jnp.int32(0))["tokens"])
+    # successor entropy must be far below uniform
+    pair_counts = {}
+    for row in b:
+        for a, c in zip(row[:-1], row[1:]):
+            pair_counts.setdefault(int(a), []).append(int(c))
+    top_frac = np.mean([
+        max(np.bincount(v).max() / len(v), 0.0)
+        for v in pair_counts.values() if len(v) >= 10])
+    assert top_frac > 0.35   # permutation followed ~50% of the time
+
+
+def test_tokens_in_range():
+    s = TokenStream(vocab=37, seq_len=64, global_batch=2, seed=3)
+    b = np.asarray(s.batch_at(jnp.int32(1))["tokens"])
+    assert b.min() >= 0 and b.max() < 37
+
+
+def test_uci_like_shapes_and_stats():
+    m = load_dataset("magic")
+    y = load_dataset("yeast")
+    assert m.shape == (19020, 10)
+    assert y.shape == (1484, 8)
+    # standardized
+    np.testing.assert_allclose(m.mean(0), 0.0, atol=1e-9)
+    np.testing.assert_allclose(m.std(0), 1.0, atol=1e-6)
+    # deterministic
+    np.testing.assert_array_equal(load_dataset("magic"), m)
+
+
+def test_raw_generators():
+    assert magic_like(n=100).shape[0] == 100 or magic_like().shape[0] == 19020
+    assert yeast_like().shape == (1484, 8)

@@ -1,0 +1,160 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp ref."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.eigvec_update.eigvec_update import eigvec_rotate
+from repro.kernels.eigvec_update.ref import eigvec_rotate_ref
+from repro.kernels.nystrom_recon.nystrom_recon import scaled_gram
+from repro.kernels.nystrom_recon.ref import scaled_gram_ref
+from repro.kernels.rbf_gram.rbf_gram import rbf_gram
+from repro.kernels.rbf_gram.ref import rbf_gram_ref
+
+RNG = np.random.default_rng(3)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("M", [32, 128, 200, 257])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_eigvec_rotate_sweep(M, dtype):
+    u = jnp.asarray(RNG.normal(size=(M, M)), dtype)
+    z = jnp.asarray(RNG.normal(size=M), dtype)
+    d = jnp.asarray(np.sort(RNG.normal(size=M)), dtype)
+    lam = d + 0.4
+    inv = jnp.asarray(RNG.uniform(0.5, 2.0, size=M), dtype)
+    out = eigvec_rotate(u, z, d, lam, inv, interpret=True, block=128)
+    ref = eigvec_rotate_ref(u, z, d, lam, inv)
+    np.testing.assert_allclose(np.asarray(out, np.float64),
+                               np.asarray(ref, np.float64),
+                               rtol=5e-3, atol=5e-3)
+    assert np.isfinite(np.asarray(out, np.float64)).all()
+
+
+@pytest.mark.parametrize("n,m,d", [(64, 64, 8), (150, 90, 17), (129, 257, 33)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rbf_gram_sweep(n, m, d, dtype):
+    x = jnp.asarray(RNG.normal(size=(n, d)), dtype)
+    y = jnp.asarray(RNG.normal(size=(m, d)), dtype)
+    sigma = jnp.asarray(2.5, jnp.float32)
+    g = rbf_gram(x, y, sigma, interpret=True)
+    ref = rbf_gram_ref(x, y, sigma)
+    np.testing.assert_allclose(np.asarray(g, np.float64),
+                               np.asarray(ref, np.float64), **_tol(dtype))
+    assert g.dtype == dtype
+
+
+def test_rbf_gram_diagonal_is_one():
+    x = jnp.asarray(RNG.normal(size=(40, 7)), jnp.float32)
+    g = rbf_gram(x, x, jnp.asarray(3.0, jnp.float32), interpret=True)
+    np.testing.assert_allclose(np.diag(np.asarray(g)), 1.0, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,m", [(64, 32), (170, 60), (130, 129)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_scaled_gram_sweep(n, m, dtype):
+    b = jnp.asarray(RNG.normal(size=(n, m)), dtype)
+    s = jnp.asarray(RNG.uniform(0.1, 1.0, size=m), dtype)
+    k = scaled_gram(b, s, interpret=True)
+    ref = scaled_gram_ref(b, s)
+    np.testing.assert_allclose(np.asarray(k, np.float64),
+                               np.asarray(ref, np.float64),
+                               rtol=1e-3, atol=1e-3)
+    # symmetry
+    np.testing.assert_allclose(np.asarray(k), np.asarray(k).T, atol=1e-5)
+
+
+@pytest.mark.parametrize("BH,T,hd", [(2, 64, 32), (3, 128, 64), (1, 64, 100)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_kernel_sweep(BH, T, hd, dtype):
+    from repro.kernels.flash_attn.flash_attn import flash_attention
+    from repro.kernels.flash_attn.ref import flash_attention_ref
+    q = jnp.asarray(RNG.normal(size=(BH, T, hd)) * 0.5, dtype)
+    k = jnp.asarray(RNG.normal(size=(BH, T, hd)) * 0.5, dtype)
+    v = jnp.asarray(RNG.normal(size=(BH, T, hd)), dtype)
+    out = flash_attention(q, k, v, block_q=32, block_k=32, interpret=True)
+    ref = flash_attention_ref(q, k, v)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(out, np.float64),
+                               np.asarray(ref, np.float64),
+                               rtol=tol, atol=tol)
+    assert out.dtype == dtype
+
+
+def test_flash_attention_kernel_causality():
+    from repro.kernels.flash_attn.flash_attn import flash_attention
+    q = jnp.asarray(RNG.normal(size=(1, 64, 32)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 64, 32)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 64, 32)), jnp.float32)
+    o1 = flash_attention(q, k, v, block_q=32, block_k=32, interpret=True)
+    k2 = k.at[:, -1].add(10.0)
+    v2 = v.at[:, -1].add(10.0)
+    o2 = flash_attention(q, k2, v2, block_q=32, block_k=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1[:, :-1]),
+                               np.asarray(o2[:, :-1]), atol=1e-6)
+
+
+@pytest.mark.parametrize("G,Q,N,H,P", [(2, 16, 8, 2, 16), (3, 32, 16, 4, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_ssd_chunk_kernel_sweep(G, Q, N, H, P, dtype):
+    from repro.kernels.ssd_chunk.ssd_chunk import ssd_intra_chunk
+    from repro.kernels.ssd_chunk.ref import ssd_intra_chunk_ref
+    c = jnp.asarray(RNG.normal(size=(G, Q, N)) * 0.3, dtype)
+    b = jnp.asarray(RNG.normal(size=(G, Q, N)) * 0.3, dtype)
+    x = jnp.asarray(RNG.normal(size=(G, Q, H, P)), dtype)
+    cum = jnp.asarray(-np.abs(np.cumsum(RNG.uniform(0, 0.2, (G, Q, H)),
+                                        axis=1)), jnp.float32)
+    out = ssd_intra_chunk(c, b, x, cum, interpret=True)
+    ref = ssd_intra_chunk_ref(c, b, x, cum)
+    np.testing.assert_allclose(np.asarray(out, np.float64),
+                               np.asarray(ref, np.float64),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunk_kernel_causality():
+    from repro.kernels.ssd_chunk.ssd_chunk import ssd_intra_chunk
+    G, Q, N, H, P = 1, 16, 8, 2, 8
+    c = jnp.asarray(RNG.normal(size=(G, Q, N)), jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(G, Q, N)), jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(G, Q, H, P)), jnp.float32)
+    cum = jnp.zeros((G, Q, H), jnp.float32)
+    o1 = ssd_intra_chunk(c, b, x, cum, interpret=True)
+    x2 = x.at[:, -1].add(5.0)
+    o2 = ssd_intra_chunk(c, b, x2, cum, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1[:, :-1]),
+                               np.asarray(o2[:, :-1]), atol=1e-6)
+
+
+def test_eigvec_rotate_used_in_rank_one_update():
+    """End-to-end: rank_one_update(matmul='pallas') == 'jnp' (interpret)."""
+    import os
+    import jax
+    from repro.core import rankone
+    os.environ["REPRO_PALLAS_FORCE"] = "interpret"
+    try:
+        m, M = 10, 16
+        A = RNG.normal(size=(m, m))
+        A = A @ A.T
+        lam, vec = np.linalg.eigh(A)
+        L = np.zeros(M); U = np.eye(M)
+        L[:m] = lam; U[:m, :m] = vec
+        L = rankone.sentinelize(jnp.asarray(L, jnp.float32), jnp.int32(m),
+                                jnp.float32(0.0))
+        v = np.zeros(M); v[:m] = RNG.normal(size=m)
+        with jax.disable_jit():
+            La, Ua = rankone.rank_one_update(
+                jnp.asarray(L, jnp.float32), jnp.asarray(U, jnp.float32),
+                jnp.asarray(v, jnp.float32), jnp.float32(0.9), jnp.int32(m),
+                matmul="pallas", precise=False)
+        Lb, Ub = rankone.rank_one_update(
+            jnp.asarray(L, jnp.float32), jnp.asarray(U, jnp.float32),
+            jnp.asarray(v, jnp.float32), jnp.float32(0.9), jnp.int32(m),
+            matmul="jnp", precise=False)
+        np.testing.assert_allclose(np.asarray(La), np.asarray(Lb), atol=1e-5)
+        np.testing.assert_allclose(np.abs(np.asarray(Ua[:m, :m])),
+                                   np.abs(np.asarray(Ub[:m, :m])), atol=1e-3)
+    finally:
+        os.environ["REPRO_PALLAS_FORCE"] = "ref"

@@ -1,0 +1,76 @@
+"""Incremental Nyström (paper §4): exactness vs batch, error behaviour."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import inkpca, kernels_fn as kf, nystrom
+
+RNG = np.random.default_rng(2)
+
+
+def _setup(n=40, d=4, m0=5):
+    X = RNG.normal(size=(n, d))
+    sigma = float(np.median(((X[:, None] - X[None]) ** 2).sum(-1)))
+    spec = kf.KernelSpec(name="rbf", sigma=sigma)
+    K = np.asarray(kf.gram_block(jnp.asarray(X), jnp.asarray(X), spec=spec))
+    state = nystrom.init_nystrom(jnp.asarray(X), jnp.asarray(X[:m0]),
+                                 capacity=24, spec=spec, dtype=jnp.float64)
+    return X, spec, K, state
+
+
+def _batch_nystrom(K, m):
+    Knm = K[:, :m]
+    Kmm = K[:m, :m]
+    return Knm @ np.linalg.solve(Kmm, Knm.T)
+
+
+def test_incremental_equals_batch_at_every_m():
+    X, spec, K, state = _setup()
+    for m in range(5, 15):
+        Kt = np.asarray(nystrom.reconstruct_tilde(state))
+        ref = _batch_nystrom(K, m)
+        assert np.abs(Kt - ref).max() < 1e-7, m
+        state = nystrom.add_landmark(state, jnp.asarray(X),
+                                     jnp.asarray(X[m]), spec)
+
+
+def test_nystrom_eigpair_rescaling():
+    """Paper eq. (7): U_nys Λ_nys U_nysᵀ == K_nm K_mm⁻¹ K_mn."""
+    X, spec, K, state = _setup()
+    for m in range(5, 10):
+        state = nystrom.add_landmark(state, jnp.asarray(X),
+                                     jnp.asarray(X[m]), spec)
+    n = X.shape[0]
+    lam, U = nystrom.nystrom_eigpairs(state, n)
+    lam = np.asarray(lam)
+    U = np.asarray(U)
+    Kt = (U * lam[None, :]) @ U.T
+    ref = _batch_nystrom(K, 10)
+    assert np.abs(Kt - ref).max() < 1e-6
+
+
+def test_error_norms_decrease_with_m():
+    X, spec, K, state = _setup(n=60)
+    errs = []
+    for m in range(5, 20):
+        Kt = np.asarray(nystrom.reconstruct_tilde(state))
+        errs.append(nystrom.approximation_error(jnp.asarray(K),
+                                                jnp.asarray(Kt)).fro)
+        state = nystrom.add_landmark(state, jnp.asarray(X),
+                                     jnp.asarray(X[m]), spec)
+    # overall trend must be decreasing (paper Fig. 2)
+    assert errs[-1] < errs[0] * 0.9
+    assert min(errs) == errs[-1] or errs[-1] < 1.05 * min(errs)
+
+
+def test_full_landmark_set_is_exact():
+    X, spec, K, state = _setup(n=20, m0=5)
+    for m in range(5, 20):
+        state = nystrom.add_landmark(state, jnp.asarray(X),
+                                     jnp.asarray(X[m]), spec)
+    Kt = np.asarray(nystrom.reconstruct_tilde(state))
+    assert np.abs(Kt - K).max() < 1e-6
+
+
+def test_error_norms_fields():
+    e = nystrom.approximation_error(jnp.eye(4), jnp.zeros((4, 4)))
+    assert e.fro == 2.0 and e.spectral == 1.0 and e.trace == 4.0

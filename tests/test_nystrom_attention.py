@@ -1,0 +1,134 @@
+"""Nyström attention: kernel factorization identity, approximation quality,
+serve-time landmark growth via the paper's Algorithm 1."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kernels_fn as kf
+from repro.models import nystrom_attention as nys
+from repro.models.config import ArchConfig
+from repro.models.layers import attention_apply
+
+RNG = np.random.default_rng(9)
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=1, d_model=32, n_heads=4,
+                n_kv_heads=2, d_ff=64, vocab=64, attention="nystrom",
+                nystrom_landmarks=16, dtype="float32")
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+def test_softmax_kernel_rbf_factorization():
+    """exp(q·k/√d) == c(q)·g(q,k)·c(k) with σ = 2√d (the paper's RBF)."""
+    d = 16
+    q = jnp.asarray(RNG.normal(size=(5, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(7, d)), jnp.float32)
+    sigma = 2.0 * np.sqrt(d)
+    g = nys._rbf(q, k, sigma)
+    cq = jnp.exp(jnp.sum(q * q, -1) / sigma)
+    ck = jnp.exp(jnp.sum(k * k, -1) / sigma)
+    lhs = jnp.exp(q @ k.T / np.sqrt(d))
+    rhs = cq[:, None] * g * ck[None, :]
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-4)
+
+
+def test_prefill_finite_and_causal():
+    cfg = _cfg()
+    B, T = 2, 32
+    p = nys.nystrom_attention_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(RNG.normal(size=(B, T, cfg.d_model)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    y = nys.nystrom_attention_apply(p, cfg, x, pos, chunk=8)
+    assert y.shape == (B, T, cfg.d_model)
+    assert bool(jnp.isfinite(y).all())
+    # chunk-causality: future chunks don't affect past outputs
+    x2 = x.at[:, -8:].add(1.0)
+    y2 = nys.nystrom_attention_apply(p, cfg, x2, pos, chunk=8)
+    np.testing.assert_allclose(np.asarray(y[:, :-8]), np.asarray(y2[:, :-8]),
+                               atol=1e-5)
+
+
+def test_first_chunk_matches_exact_attention():
+    """Within the first chunk there is no Nyström term — the output must be
+    EXACT softmax attention."""
+    cfg = _cfg(nystrom_landmarks=8)
+    B, T = 2, 8
+    p = nys.nystrom_attention_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(RNG.normal(size=(B, T, cfg.d_model)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    y_nys = nys.nystrom_attention_apply(p, cfg, x, pos, chunk=T)
+    y_full = attention_apply(p, cfg, x, pos)
+    np.testing.assert_allclose(np.asarray(y_nys), np.asarray(y_full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_decode_state_is_context_length_independent():
+    cfg = _cfg()
+    B = 2
+    p = nys.nystrom_attention_init(jax.random.PRNGKey(0), cfg)
+    cache = nys.nystrom_cache_init(p, cfg, B)
+    m = cfg.nystrom_landmarks
+    assert cache.psi.shape == (B, cfg.n_kv_heads, m, cfg.hd)
+    for t in range(12):
+        x = jnp.asarray(RNG.normal(size=(B, 1, cfg.d_model)), jnp.float32)
+        y, cache = nys.nystrom_decode(p, cfg, x, cache,
+                                      jnp.full((B, 1), t, jnp.int32))
+        assert cache.psi.shape == (B, cfg.n_kv_heads, m, cfg.hd)
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_grow_landmark_uses_alg1_and_matches_batch():
+    """grow_landmark (Algorithm 1 on the landmark gram) must reproduce the
+    batch eigendecomposition of the grown landmark set."""
+    from repro.core import inkpca
+    hd = 8
+    sigma = 2.0 * np.sqrt(hd)
+    M = 12
+    m0 = 6
+    lms = np.zeros((M, hd))
+    lms[:m0] = RNG.normal(size=(m0, hd))
+    spec = kf.KernelSpec(name="rbf", sigma=float(sigma))
+    st = inkpca.init_state(jnp.asarray(lms[:m0]), M, spec, adjusted=False,
+                           dtype=jnp.float64)
+    L, U, mact, X = st.L, st.U, st.m, jnp.asarray(lms)
+    new1 = jnp.asarray(RNG.normal(size=hd))
+    X2, L2, U2, m2 = nys.grow_landmark(X, L, U, mact, new1, sigma)
+    assert int(m2) == m0 + 1
+    grown = np.vstack([lms[:m0], np.asarray(new1)[None]])
+    G = np.asarray(kf.gram_block(jnp.asarray(grown), jnp.asarray(grown),
+                                 spec=spec))
+    lam_ref = np.linalg.eigh(G)[0]
+    lam_inc = np.sort(np.asarray(L2[: m0 + 1]))
+    np.testing.assert_allclose(lam_inc, lam_ref, atol=1e-8)
+    # and the maintained G^{-1} matches the direct inverse
+    Ginv = np.asarray(nys.ginv_from_eig(L2, U2, m2, jitter=0.0))
+    np.testing.assert_allclose(Ginv[: m0 + 1, : m0 + 1], np.linalg.inv(G),
+                               rtol=1e-6, atol=1e-8)
+
+
+def test_nystrom_read_out_approximates_full_attention_decode():
+    """With landmarks covering the key distribution, the Nyström decode
+    read-out approximates exact softmax attention over the history."""
+    hd = 8
+    sigma = 2.0 * np.sqrt(hd)
+    S = 64
+    keys = RNG.normal(size=(S, hd)) * 0.5
+    vals = RNG.normal(size=(S, hd))
+    q = RNG.normal(size=(hd,)) * 0.5
+    # landmarks = a subset of the keys themselves (good coverage)
+    lms = keys[:: S // 16][:16]
+    g_lk = np.exp(-((lms[:, None] - keys[None]) ** 2).sum(-1) / sigma)
+    ck = np.exp((keys ** 2).sum(-1) / sigma)
+    G = np.exp(-((lms[:, None] - lms[None]) ** 2).sum(-1) / sigma)
+    psi = (g_lk * ck[None, :]) @ vals
+    zeta = (g_lk * ck[None, :]).sum(1)
+    phiq = np.exp(-((q[None] - lms) ** 2).sum(-1) / sigma)
+    r = phiq @ np.linalg.inv(G + 1e-6 * np.eye(16))
+    approx = (r @ psi) / (r @ zeta)
+    w = np.exp(keys @ q / np.sqrt(hd))
+    exact = (w @ vals) / w.sum()
+    err = np.abs(approx - exact).max() / np.abs(exact).max()
+    assert err < 0.15, err

@@ -1,0 +1,115 @@
+"""Optimizers, schedules, clipping, int8 error-feedback compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (adamw, adafactor, sgdm, compress_int8,
+                         decompress_int8)
+from repro.optim.compression import CompressionState, init_state
+from repro.optim.optimizers import clip_by_global_norm, global_norm
+from repro.optim.schedules import ScheduleConfig, make_schedule
+
+
+@pytest.mark.parametrize("opt_fn", [adamw, adafactor, sgdm])
+def test_optimizer_decreases_quadratic(opt_fn):
+    opt = opt_fn()
+    params = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(8, 6)),
+                               jnp.float32)}
+    target = jnp.ones((8, 6), jnp.float32)
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(60):
+        grads = jax.grad(loss)(params)
+        params, state = opt.update(grads, state, params,
+                                   jnp.asarray(0.05, jnp.float32))
+    assert float(loss(params)) < 0.2 * l0
+    assert int(state.step) == 60
+
+
+def test_adafactor_state_is_factored():
+    opt = adafactor()
+    params = {"w": jnp.zeros((16, 8)), "b": jnp.zeros((8,)),
+              "e": jnp.zeros((4, 16, 8))}
+    st = opt.init(params)
+    assert st.inner["w"]["vr"].shape == (16,)
+    assert st.inner["w"]["vc"].shape == (8,)
+    assert st.inner["e"]["vr"].shape == (4, 16)
+    assert st.inner["e"]["vc"].shape == (4, 8)
+    assert st.inner["b"]["v"].shape == (8,)
+
+
+def test_adafactor_nd_param_update_shapes():
+    opt = adafactor()
+    params = {"e": jnp.ones((3, 5, 4), jnp.float32)}
+    st = opt.init(params)
+    g = {"e": jnp.full((3, 5, 4), 0.1, jnp.float32)}
+    p2, st2 = opt.update(g, st, params, jnp.asarray(0.01))
+    assert p2["e"].shape == (3, 5, 4)
+    assert jnp.isfinite(p2["e"]).all()
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((10,), 3.0, jnp.float32)}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(90.0), rel=1e-5)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-4)
+    # small grads untouched
+    grads = {"a": jnp.full((4,), 0.01, jnp.float32)}
+    clipped, _ = clip_by_global_norm(grads, 1.0)
+    np.testing.assert_allclose(np.asarray(clipped["a"]), 0.01, rtol=1e-6)
+
+
+def test_wsd_schedule_shape():
+    sched = make_schedule(ScheduleConfig(kind="wsd", lr=1.0, warmup=10,
+                                         total=100, decay_frac=0.2))
+    lr = [float(sched(jnp.asarray(s))) for s in range(100)]
+    assert lr[0] < 0.2                      # warmup starts low
+    assert lr[10] == pytest.approx(1.0)     # warmed up
+    assert lr[50] == pytest.approx(1.0)     # stable plateau
+    assert lr[79] == pytest.approx(1.0)     # still stable
+    assert lr[99] < 0.1                     # decayed fast at the end
+
+
+def test_cosine_schedule_monotone_decay():
+    sched = make_schedule(ScheduleConfig(kind="cosine", lr=1.0, warmup=5,
+                                         total=50, floor=0.1))
+    lr = [float(sched(jnp.asarray(s))) for s in range(50)]
+    assert lr[4] <= 1.0 and lr[5] == pytest.approx(1.0, abs=1e-6)
+    assert all(a >= b - 1e-9 for a, b in zip(lr[5:], lr[6:]))
+    assert lr[-1] >= 0.09
+
+
+def test_int8_roundtrip_accuracy():
+    rng = np.random.default_rng(5)
+    g = jnp.asarray(rng.normal(size=(1000,)) * 0.01, jnp.float32)
+    q, s = compress_int8(g)
+    assert q.dtype == jnp.int8
+    deq = decompress_int8(q, s, g.shape, g.size)
+    rel = float(jnp.max(jnp.abs(deq - g)) / jnp.max(jnp.abs(g)))
+    assert rel < 0.01   # blockwise int8: <1% of block max
+
+
+def test_error_feedback_compensates_bias():
+    """EF property: accumulated quantization error stays bounded, and the
+    running sum of dequantized values tracks the true running sum."""
+    rng = np.random.default_rng(6)
+    state = init_state({"g": jnp.zeros((256,), jnp.float32)})
+    true_sum = np.zeros(256)
+    deq_sum = np.zeros(256)
+    for t in range(50):
+        g = rng.normal(size=256).astype(np.float32) * 0.1
+        true_sum += g
+        target = jnp.asarray(g) + state.error["g"]
+        q, s = compress_int8(target)
+        deq = decompress_int8(q, s, (256,), 256)
+        state = CompressionState(error={"g": target - deq})
+        deq_sum += np.asarray(deq)
+    # without EF the bias would accumulate ~ t * quantization_error
+    drift = np.abs(deq_sum - true_sum).max()
+    assert drift < 0.02, drift
+    assert float(jnp.abs(state.error["g"]).max()) < 0.01

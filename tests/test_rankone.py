@@ -1,0 +1,126 @@
+"""Unit + property tests for the rank-one eigendecomposition update (§3.2)."""
+import numpy as np
+import jax.numpy as jnp
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rankone
+
+RNG = np.random.default_rng(0)
+
+
+def _padded_eigensystem(m, M, scale=1.0):
+    A = RNG.normal(size=(m, m)) * scale
+    A = A @ A.T
+    lam, vec = np.linalg.eigh(A)
+    L = np.zeros(M)
+    U = np.eye(M)
+    L[:m] = lam
+    U[:m, :m] = vec
+    L = rankone.sentinelize(jnp.asarray(L), jnp.int32(m), jnp.float64(0.0))
+    return A, jnp.asarray(L), jnp.asarray(U)
+
+
+@pytest.mark.parametrize("sigma", [0.5, -0.5, 4.0, -4.0])
+@pytest.mark.parametrize("m,M", [(6, 8), (10, 10), (17, 32)])
+def test_rank_one_update_matches_eigh(sigma, m, M):
+    A, L, U = _padded_eigensystem(m, M)
+    v = np.zeros(M)
+    v[:m] = RNG.normal(size=m)
+    L2, U2 = rankone.rank_one_update(L, U, jnp.asarray(v),
+                                     jnp.float64(sigma), jnp.int32(m))
+    B = A + sigma * np.outer(v[:m], v[:m])
+    lam_ref = np.linalg.eigh(B)[0]
+    np.testing.assert_allclose(np.sort(np.asarray(L2[:m])), lam_ref,
+                               rtol=1e-9, atol=1e-9)
+    rec = np.asarray(rankone.reconstruct(L2, U2, jnp.int32(m)))[:m, :m]
+    np.testing.assert_allclose(rec, B, rtol=1e-8, atol=1e-8)
+
+
+@pytest.mark.parametrize("method", ["gu", "bns"])
+def test_orthogonality_after_update(method):
+    m, M = 12, 16
+    _, L, U = _padded_eigensystem(m, M)
+    v = np.zeros(M)
+    v[:m] = RNG.normal(size=m)
+    L2, U2 = rankone.rank_one_update(L, U, jnp.asarray(v), jnp.float64(1.3),
+                                     jnp.int32(m), method=method)
+    G = np.asarray(U2[:m, :m]).T @ np.asarray(U2[:m, :m])
+    assert np.abs(G - np.eye(m)).max() < 1e-8
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(3, 12), sigma=st.floats(-5.0, 5.0),
+       seed=st.integers(0, 10_000))
+def test_interlacing_bounds(m, sigma, seed):
+    """Paper eq. (5): updated eigenvalues interlace the old ones."""
+    if abs(sigma) < 1e-3:
+        sigma = 1e-3
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(m, m))
+    A = A @ A.T
+    lam, vec = np.linalg.eigh(A)
+    v = rng.normal(size=m)
+    z = vec.T @ v
+    lam2 = np.linalg.eigh(A + sigma * np.outer(v, v))[0]
+    tol = 1e-8 * max(1.0, np.abs(lam).max())
+    if sigma > 0:
+        for i in range(m - 1):
+            assert lam[i] - tol <= lam2[i] <= lam[i + 1] + tol
+        assert lam[-1] - tol <= lam2[-1] <= lam[-1] + sigma * z @ z + tol
+    else:
+        for i in range(1, m):
+            assert lam[i - 1] - tol <= lam2[i] <= lam[i] + tol
+        assert lam[0] + sigma * z @ z - tol <= lam2[0] <= lam[0] + tol
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(2, 10), seed=st.integers(0, 10_000),
+       sigma=st.sampled_from([0.7, -0.7, 2.5, -2.5]))
+def test_update_matches_eigh_property(m, seed, sigma):
+    rng = np.random.default_rng(seed)
+    M = m + rng.integers(0, 4)
+    A = rng.normal(size=(m, m))
+    A = A @ A.T
+    lam, vec = np.linalg.eigh(A)
+    L = np.zeros(M); U = np.eye(M)
+    L[:m] = lam; U[:m, :m] = vec
+    L = rankone.sentinelize(jnp.asarray(L), jnp.int32(m), jnp.float64(0.0))
+    v = np.zeros(M); v[:m] = rng.normal(size=m)
+    L2, _ = rankone.rank_one_update(jnp.asarray(L), jnp.asarray(U),
+                                    jnp.asarray(v), jnp.float64(sigma),
+                                    jnp.int32(m))
+    lam_ref = np.linalg.eigh(A + sigma * np.outer(v[:m], v[:m]))[0]
+    np.testing.assert_allclose(np.sort(np.asarray(L2[:m])), lam_ref,
+                               rtol=1e-7, atol=1e-7)
+
+
+def test_expand_eigensystem():
+    m, M = 5, 8
+    A, L, U = _padded_eigensystem(m, M)
+    L2, U2, m2 = rankone.expand_eigensystem(L, U, jnp.float64(0.33),
+                                            jnp.int32(m))
+    assert int(m2) == m + 1
+    rec = np.asarray(rankone.reconstruct(L2, U2, m2))[:m + 1, :m + 1]
+    ref = np.zeros((m + 1, m + 1))
+    ref[:m, :m] = A
+    ref[m, m] = 0.33
+    np.testing.assert_allclose(rec, ref, atol=1e-10)
+
+
+def test_deflation_clamp_tiny_z():
+    """v orthogonal to U's range (z ~ 0) must not produce NaNs."""
+    m, M = 6, 8
+    _, L, U = _padded_eigensystem(m, M)
+    v = np.zeros(M)  # exactly zero update
+    L2, U2 = rankone.rank_one_update(L, U, jnp.asarray(v), jnp.float64(2.0),
+                                     jnp.int32(m))
+    assert np.isfinite(np.asarray(L2)).all()
+    assert np.isfinite(np.asarray(U2)).all()
+
+
+def test_sentinelize_keeps_active_sorted_top():
+    L = jnp.asarray([3.0, 1.0, 0.0, 0.0])
+    Ls = rankone.sentinelize(L, jnp.int32(2), jnp.float64(0.0))
+    assert float(Ls[2]) > 3.0 and float(Ls[3]) > float(Ls[2])

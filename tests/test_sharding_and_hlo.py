@@ -1,0 +1,157 @@
+"""Sharding rules, HLO parser, straggler monitor, distributed KPCA."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.distributed.straggler import HeartbeatMonitor, StepTimer
+from repro.launch import hlo_parse
+
+
+# ------------------------------------------------------------- sharding ----
+def test_logical_to_spec_divisibility_drop():
+    mesh = jax.make_mesh((1,), ("model",))
+    with shd.use_mesh(mesh, rules={"heads": "model", "batch": "data"}):
+        # 'data' axis absent from mesh -> dropped by use_mesh filtering
+        spec = shd.logical_to_spec(("batch", "heads"), (4, 8))
+        assert spec == P(None, "model")
+
+
+def test_logical_to_spec_dedup_axes():
+    mesh = jax.make_mesh((1,), ("model",))
+    with shd.use_mesh(mesh, rules={"a": "model", "b": "model"}):
+        spec = shd.logical_to_spec(("a", "b"), (4, 4))
+        assert spec == P("model", None)   # first dim wins
+
+
+def test_constrain_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    y = shd.constrain(x, ("batch", None))
+    assert y is x
+
+
+def test_use_mesh_restores_state():
+    mesh = jax.make_mesh((1,), ("data",))
+    assert shd.get_mesh() is None
+    with shd.use_mesh(mesh):
+        assert shd.get_mesh() is mesh
+    assert shd.get_mesh() is None
+
+
+# ------------------------------------------------------------ hlo parser ---
+def test_hlo_parse_counts_real_matmul_flops():
+    m, k, n = 64, 32, 48
+
+    def f(a, b):
+        return a @ b
+
+    hlo = (jax.jit(f)
+           .lower(jnp.zeros((m, k)), jnp.zeros((k, n))).compile().as_text())
+    stats = hlo_parse.analyze(hlo)
+    expect = 2.0 * m * k * n
+    assert stats.flops == expect, (stats.flops, expect)
+
+
+def test_hlo_parse_scan_trip_multiplication():
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+
+    hlo = jax.jit(f).lower(jnp.zeros((16, 16))).compile().as_text()
+    stats = hlo_parse.analyze(hlo)
+    assert stats.flops == 7 * 2.0 * 16 ** 3, stats.flops
+
+
+def test_hlo_parse_bytes_reasonable():
+    n = 256
+
+    def f(a, b):
+        return a @ b
+
+    hlo = (jax.jit(f)
+           .lower(jnp.zeros((n, n), jnp.float32),
+                  jnp.zeros((n, n), jnp.float32)).compile().as_text())
+    stats = hlo_parse.analyze(hlo)
+    raw = 3 * n * n * 4
+    assert raw <= stats.bytes <= 5 * raw
+
+
+def test_collective_wire_model():
+    line = ("  %all-reduce.1 = f32[1024]{0} all-reduce(%x), "
+            "replica_groups={{0,1,2,3}}, to_apply=%add")
+    comps = {"c": hlo_parse.Computation(name="c")}
+    op = hlo_parse.Op(name="all-reduce.1", opcode="all-reduce",
+                      result_bytes=4096.0, line=line,
+                      result_seg="f32[1024]{0}")
+    kind, wire, payload = hlo_parse._collective_wire(op)
+    assert kind == "all-reduce"
+    assert wire == 2.0 * 3 / 4 * 4096
+    assert payload == 4096
+
+
+# ------------------------------------------------------------- straggler ---
+def test_heartbeat_flags_timeout():
+    hb = HeartbeatMonitor(n_workers=2, timeout_s=10.0)
+    hb.beat(0, step=5, t=100.0)
+    hb.beat(1, step=5, t=100.0)
+    assert hb.healthy(now=105.0)
+    flagged = hb.flagged(now=150.0)
+    assert len(flagged) == 2 and flagged[0]["reason"] == "timeout"
+
+
+def test_heartbeat_flags_lag():
+    hb = HeartbeatMonitor(n_workers=3, timeout_s=1e9, max_step_lag=5)
+    hb.beat(0, step=100, t=0.0)
+    hb.beat(1, step=100, t=0.0)
+    hb.beat(2, step=50, t=0.0)
+    flagged = hb.flagged(now=1.0)
+    assert [f["worker"] for f in flagged] == [2]
+    assert flagged[0]["reason"] == "lagging"
+
+
+def test_heartbeat_never_beat():
+    hb = HeartbeatMonitor(n_workers=2)
+    hb.beat(0, step=1)
+    assert any(f["reason"] == "never-beat" for f in hb.flagged())
+
+
+def test_step_timer_spike_detection():
+    st = StepTimer(alpha=0.5, spike_factor=2.0)
+    st.ewma = 1.0
+    st._t0 = 0.0
+    import time as _t
+    real = _t.time
+    try:
+        _t.time = lambda: 10.0   # 10s step vs 1s ewma -> spike
+        st.stop()
+    finally:
+        _t.time = real
+    assert st.spikes == 1
+
+
+# ---------------------------------------------------- distributed KPCA -----
+def test_sharded_rank_one_update_matches_local():
+    from repro.core import distributed as dkpca, rankone
+
+    rng = np.random.default_rng(7)
+    m, M = 10, 16
+    A = rng.normal(size=(m, m)); A = A @ A.T
+    lam, vec = np.linalg.eigh(A)
+    L = np.zeros(M); U = np.eye(M)
+    L[:m] = lam; U[:m, :m] = vec
+    L = rankone.sentinelize(jnp.asarray(L), jnp.int32(m), jnp.float64(0.0))
+    v = np.zeros(M); v[:m] = rng.normal(size=m)
+
+    mesh = jax.make_mesh((1,), ("data",))
+    upd = dkpca.make_sharded_update(mesh)
+    Ls, Us = upd(jnp.asarray(L), jnp.asarray(U), jnp.asarray(v),
+                 jnp.float64(1.7), jnp.int32(m))
+    Ll, Ul = rankone.rank_one_update(jnp.asarray(L), jnp.asarray(U),
+                                     jnp.asarray(v), jnp.float64(1.7),
+                                     jnp.int32(m))
+    np.testing.assert_allclose(np.asarray(Ls), np.asarray(Ll), atol=1e-10)
+    np.testing.assert_allclose(np.abs(np.asarray(Us)),
+                               np.abs(np.asarray(Ul)), atol=1e-8)

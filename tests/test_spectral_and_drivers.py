@@ -1,0 +1,60 @@
+"""Spectral monitor behaviour + end-to-end driver smoke tests."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.spectral import SpectralMonitor
+
+
+def test_monitor_tracks_rank():
+    rng = np.random.default_rng(0)
+    mon = SpectralMonitor(capacity=48)
+    # low-rank features: effective rank should come out low
+    basis = rng.normal(size=(3, 16))
+    feats = rng.normal(size=(32, 3)) @ basis + 0.01 * rng.normal(size=(32, 16))
+    stats = mon.observe(feats)
+    assert 1.0 <= stats["effective_rank"] <= 10.0
+    assert stats["m"] > 4
+    assert stats["explained_90"] <= 8
+
+
+def test_monitor_full_rank_higher():
+    rng = np.random.default_rng(1)
+    lo = SpectralMonitor(capacity=48)
+    hi = SpectralMonitor(capacity=48)
+    basis = rng.normal(size=(2, 16))
+    s_lo = lo.observe(rng.normal(size=(32, 2)) @ basis
+                      + 1e-3 * rng.normal(size=(32, 16)))
+    s_hi = hi.observe(rng.normal(size=(32, 16)))
+    assert s_hi["effective_rank"] > s_lo["effective_rank"]
+
+
+def test_monitor_incremental_updates():
+    rng = np.random.default_rng(2)
+    mon = SpectralMonitor(capacity=40)
+    mon.observe(rng.normal(size=(16, 8)))
+    m1 = mon.stats()["m"]
+    mon.observe(rng.normal(size=(16, 8)))
+    assert mon.stats()["m"] > m1
+    assert len(mon.history) == 2
+    ev = mon.eigenvalues()
+    assert (np.diff(ev) <= 1e-9).all()      # descending
+
+
+def test_train_driver_smoke(tmp_path):
+    from repro.launch.train import main as train_main
+    res = train_main(["--arch", "minicpm_2b", "--smoke", "--steps", "6",
+                      "--batch", "2", "--seq", "32", "--log-every", "2",
+                      "--ckpt-dir", str(tmp_path), "--ckpt-every", "3"])
+    assert np.isfinite(res["last_loss"])
+    assert res["stragglers"]["flagged"] == []
+    from repro.checkpoint import latest_step
+    assert latest_step(str(tmp_path)) == 6
+
+
+def test_serve_driver_smoke():
+    from repro.launch.serve import main as serve_main
+    res = serve_main(["--arch", "qwen3_32b", "--smoke", "--batch", "2",
+                      "--prompt-len", "4", "--gen", "4"])
+    assert res["finite"]
+    assert res["generated_shape"] == (2, 4)
