@@ -1,0 +1,23 @@
+# Developer entry points.  `make check` is the pre-push gate: the fast test
+# tier (slow-marked integration tests deselected) plus a smoke benchmark —
+# ~2 minutes on an unloaded CPU container (the slow tier alone is ~5 min).
+
+PYTHONPATH := src
+
+.PHONY: check test test-all bench bench-quick
+
+check:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -q -m "not slow" -x
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --quick --only flops_table
+
+test:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -q -m "not slow"
+
+test-all:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -q
+
+bench:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run
+
+bench-quick:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --quick

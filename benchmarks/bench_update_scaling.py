@@ -1,0 +1,109 @@
+"""Per-update cost vs active count m at fixed capacity M (the tentpole
+claim of the bucketed-dispatch work): the seed fixed-capacity path pays
+O(M³) per update regardless of m, while bucketed dispatch runs each update
+at the active power-of-two bucket M_b — per-step wall-clock should grow
+with the bucket, not sit flat at capacity.
+
+Three paths are timed per m:
+
+* ``fixed_jnp``      — seed path: ``inkpca.update_adjusted`` at capacity M
+* ``bucketed_jnp``   — ``buckets.update`` (slice → update at M_b → scatter)
+* ``bucketed_fused`` — same, with the fused ±sigma double-rotation pairs
+                       (``matmul='jnp2'``: one pass over U per pair)
+
+Emits ``BENCH_update_scaling.json`` at the repo root so the perf
+trajectory is tracked across PRs.  CPU wall-clock is indicative; the
+m-scaling shape (staircase across bucket crossings) is the claim.
+
+    PYTHONPATH=src python -m benchmarks.bench_update_scaling [--quick]
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import buckets, inkpca, kernels_fn as kf
+
+OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_update_scaling.json"
+
+
+def _time(fn, reps: int) -> float:
+    jax.block_until_ready(fn())          # compile + warm caches
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def _state_at(X, m: int, capacity: int, spec) -> inkpca.KPCAState:
+    """A capacity-``capacity`` adjusted state holding m active points."""
+    state = inkpca.init_state(jnp.asarray(X[:4]), capacity, spec,
+                              adjusted=True, dtype=jnp.float32)
+    # Grow with the bucketed path (fast) — the resulting state is identical
+    # to what the fixed path would produce, up to fp rounding.
+    state = buckets.update_block(state, jnp.asarray(X[4:m]), spec)
+    return state
+
+
+def main(capacity: int = 1024, reps: int = 3, quick: bool = False) -> dict:
+    if quick:
+        capacity, reps = 512, 2
+    rng = np.random.default_rng(0)
+    d = 16
+    spec = kf.KernelSpec(name="rbf", sigma=float(d))
+    ms = [m for m in (32, 64, 128, 256, 512) if m < capacity]
+    X = rng.normal(size=(max(ms) + 1, d)).astype(np.float32)
+
+    sweep = []
+    print(f"[update_scaling] capacity M={capacity} (CPU wall-clock per "
+          f"adjusted update)")
+    print(f"{'m':>6s} {'bucket':>7s} {'fixed_jnp_ms':>13s} "
+          f"{'bucketed_ms':>12s} {'fused_ms':>9s} {'speedup':>8s}")
+    for m in ms:
+        state = _state_at(X, m, capacity, spec)
+        x_new = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+        a, k_new = inkpca._masked_row(state, x_new, spec)
+
+        t_fixed = _time(lambda: inkpca.update_adjusted(
+            state, a, k_new, x_new).L, reps)
+        t_buck = _time(lambda: buckets.update(state, x_new, spec).L, reps)
+        t_fused = _time(lambda: buckets.update(
+            state, x_new, spec, matmul="jnp2").L, reps)
+        bucket = buckets.bucket_for(m + 1, capacity)
+        row = {"m": m, "bucket": bucket, "fixed_jnp_s": t_fixed,
+               "bucketed_jnp_s": t_buck, "bucketed_fused_s": t_fused,
+               "speedup_bucketed": t_fixed / t_buck}
+        sweep.append(row)
+        print(f"{m:6d} {bucket:7d} {t_fixed * 1e3:13.2f} "
+              f"{t_buck * 1e3:12.2f} {t_fused * 1e3:9.2f} "
+              f"{t_fixed / t_buck:7.2f}x")
+
+    at128 = next((r for r in sweep if r["m"] == 128), None)
+    result = {
+        "capacity": capacity,
+        "dtype": "float32",
+        "backend": jax.default_backend(),
+        "reps": reps,
+        "sweep": sweep,
+        "speedup_bucketed_at_m128": (at128 and at128["speedup_bucketed"]),
+    }
+    OUT_PATH.write_text(json.dumps(result, indent=2) + "\n")
+    print(f"[update_scaling] wrote {OUT_PATH}")
+    if at128:
+        print(f"[update_scaling] m=128 @ M={capacity}: bucketed is "
+              f"{at128['speedup_bucketed']:.1f}x the seed fixed-jnp path")
+    return result
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    main(quick=args.quick)

@@ -1,10 +1,12 @@
 """Benchmark harness entry point — one benchmark per paper table/figure:
 
-  fig1_drift    paper Fig. 1  incremental-KPCA reconstruction drift
-  fig2_nystrom  paper Fig. 2  incremental-Nyström approximation error
-  flops_table   paper §3      8m³-vs-20m³ efficiency claim
-  timing        (supporting)  measured incremental-vs-batch scaling
-  roofline      assignment    dry-run roofline table aggregation
+  fig1_drift      paper Fig. 1  incremental-KPCA reconstruction drift
+  fig2_nystrom    paper Fig. 2  incremental-Nyström approximation error
+  flops_table     paper §3      8m³-vs-20m³ efficiency claim
+  timing          (supporting)  measured incremental-vs-batch scaling
+  update_scaling  (supporting)  per-update cost vs active m: fixed-capacity
+                                vs bucketed dispatch (BENCH_update_scaling.json)
+  roofline        assignment    dry-run roofline table aggregation
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
 """
@@ -22,8 +24,8 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import fig1_drift, fig2_nystrom, flops_table, roofline, \
-        timing
+    from benchmarks import bench_update_scaling, fig1_drift, fig2_nystrom, \
+        flops_table, roofline, timing
 
     benches = {
         "flops_table": lambda: flops_table.main(),
@@ -33,6 +35,8 @@ def main() -> None:
         "fig2_nystrom": lambda: fig2_nystrom.main(
             runs=1 if args.quick else 3, n=400 if args.quick else 1000),
         "timing": lambda: timing.main(),
+        "update_scaling": lambda: bench_update_scaling.main(
+            quick=args.quick),
         "roofline": lambda: roofline.main(),
     }
     failures = []

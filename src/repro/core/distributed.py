@@ -25,56 +25,38 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import kernels_fn as kf, rankone
+from repro.distributed.sharding import shard_map as _shard_map
 
 Array = jax.Array
 
 
 def _rank_one_update_sharded(L, U_local, v_local, sigma, m, *, axis: str,
                              iters: int, method: str):
-    """Body run under shard_map: U_local is a row block of U."""
+    """Body run under shard_map: U_local is a row block of U.
+
+    The solve pipeline (deflation thresholds, flip identity, secular
+    bisection) is ``rankone._solve_factor`` — the same one the local and
+    fused paths use — run replicated on every device; no cluster-merge
+    (its reflector would need a second collective).  Only the row-block
+    rotation is local.
+    """
     M = L.shape[0]
     dtype = L.dtype
     mask = rankone.active_mask(M, m)
 
     z = jax.lax.psum(U_local.T @ v_local, axis)
-
-    # deflation, mirroring rankone.rank_one_update
-    sig_abs = jnp.abs(sigma)
-    neg = sigma < 0
-    room = sig_abs * jnp.sum(z * z)
-    scale = jnp.max(jnp.abs(jnp.where(mask, L, 0.0))) + room + 1e-30
-    znorm = jnp.sqrt(jnp.sum(z * z))
-    floor = 32.0 * jnp.finfo(dtype).eps * jnp.maximum(znorm,
-                                                      jnp.finfo(dtype).eps)
-    defl = (~mask | (jnp.abs(z) < floor)
-            | (sig_abs * z * z < 64.0 * jnp.finfo(dtype).eps * scale))
-    z = jnp.where(defl, 0.0, z)
+    room = jnp.abs(sigma) * jnp.sum(z * z)
     d_sent = rankone.sentinelize(L, m, room)
-    d_eff = jnp.where(neg, -d_sent[::-1], d_sent)
-    z_eff = jnp.where(neg, z[::-1], z)
-    defl_eff = jnp.where(neg, defl[::-1], defl)
+    scale = jnp.max(jnp.abs(jnp.where(mask, L, 0.0))) + room + 1e-30
+    f = rankone._solve_factor(d_sent, z, sigma, m, scale, iters=iters,
+                              method=method, precise=False)
 
-    roots_eff = rankone._secular_bisect(d_eff, z_eff * z_eff, sig_abs, iters,
-                                        defl=defl_eff)
-    zhat_eff = (rankone._gu_zhat(d_eff, roots_eff, sig_abs, z_eff)
-                if method == "gu" else z_eff)
-    zhat_eff = jnp.where(defl_eff, 0.0, zhat_eff)
-    W_eff, inv_eff = rankone._cauchy_W(d_eff, roots_eff, zhat_eff)
-    eye = jnp.eye(M, dtype=dtype)
-    W_eff = jnp.where(defl_eff[None, :], eye, W_eff)
-    inv_eff = jnp.where(defl_eff, 1.0, inv_eff)
-
-    roots = jnp.where(neg, -roots_eff[::-1], roots_eff)
-    W = jnp.where(neg, W_eff[::-1, ::-1], W_eff)
-    inv = jnp.where(neg, inv_eff[::-1], inv_eff)
-
-    blk = mask[:, None] & mask[None, :]
-    Wn = jnp.where(blk, W * inv[None, :], eye)
-
+    from repro.kernels.eigvec_update.ref import cauchy_factor_ref
+    Wn = cauchy_factor_ref(f.z, f.d, f.lam, f.inv,
+                           f.defl.astype(f.z.dtype)).astype(dtype)
     U_new = U_local @ Wn            # local row-block rotation, no comm
-    L_new = jnp.where(mask, roots, d_sent)
-    perm = jnp.argsort(L_new)       # deflation can locally reorder
-    return L_new[perm], U_new[:, perm]
+    perm = jnp.argsort(f.L_new)     # deflation can locally reorder
+    return f.L_new[perm], U_new[:, perm]
 
 
 def make_sharded_update(mesh, *, axis: str = "data", iters: int = 62,
@@ -86,7 +68,7 @@ def make_sharded_update(mesh, *, axis: str = "data", iters: int = 62,
     """
     body = partial(_rank_one_update_sharded, axis=axis, iters=iters,
                    method=method)
-    return jax.shard_map(
+    return _shard_map(
         body, mesh=mesh,
         in_specs=(P(), P(axis, None), P(axis), P(), P()),
         out_specs=(P(), P(axis, None)),
@@ -105,7 +87,7 @@ def make_sharded_expand(mesh, *, axis: str = "data"):
         perm = jnp.argsort(L)
         return L[perm], U_local[:, perm], m_new
 
-    return jax.shard_map(
+    return _shard_map(
         body, mesh=mesh,
         in_specs=(P(), P(axis, None), P(), P()),
         out_specs=(P(), P(axis, None), P()),
@@ -119,5 +101,5 @@ def sharded_gram_row(mesh, spec: kf.KernelSpec, *, axis: str = "data"):
     def body(X_local, x_new):
         return kf.kernel_row(x_new, X_local, spec=spec)
 
-    return jax.shard_map(body, mesh=mesh, in_specs=(P(axis, None), P()),
+    return _shard_map(body, mesh=mesh, in_specs=(P(axis, None), P()),
                          out_specs=P(axis), check_vma=False)

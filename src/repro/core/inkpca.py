@@ -27,6 +27,21 @@ from repro.core import rankone
 Array = jax.Array
 
 
+def _apply_pair(L, U, v1, sigma, v2, m, *, method, matmul, iters):
+    """Apply the ±sigma update pair: fused double rotation when matmul is
+    'jnp2'/'pallas2' (one pass over U, see rankone.rank_one_update_pair),
+    two sequential rank-one updates otherwise."""
+    if matmul in ("jnp2", "pallas2"):
+        inner = "pallas" if matmul == "pallas2" else "jnp"
+        return rankone.rank_one_update_pair(L, U, v1, sigma, v2, -sigma, m,
+                                            method=method, matmul=inner,
+                                            iters=iters)
+    L, U = rankone.rank_one_update(L, U, v1, sigma, m, method=method,
+                                   matmul=matmul, iters=iters)
+    return rankone.rank_one_update(L, U, v2, -sigma, m, method=method,
+                                   matmul=matmul, iters=iters)
+
+
 class KPCAState(NamedTuple):
     """Fixed-capacity incremental KPCA state.
 
@@ -102,10 +117,8 @@ def update_unadjusted(state: KPCAState, a: Array, k_new: Array, x_new: Array,
     v1 = a.at[m].set(kn / 2.0)
     v2 = a.at[m].set(kn / 4.0)
     sigma = 4.0 / kn
-    L, U = rankone.rank_one_update(L, U, v1, sigma, m1,
-                                   method=method, matmul=matmul, iters=iters)
-    L, U = rankone.rank_one_update(L, U, v2, -sigma, m1,
-                                   method=method, matmul=matmul, iters=iters)
+    L, U = _apply_pair(L, U, v1, sigma, v2, m1, method=method, matmul=matmul,
+                       iters=iters)
     return KPCAState(L=L, U=U, m=m1, S=S2, K1=K1, X=X)
 
 
@@ -133,12 +146,9 @@ def update_adjusted(state: KPCAState, a: Array, k_new: Array, x_new: Array,
     u = jnp.where(mask_m, u, 0.0)
     ones_u_p = jnp.where(mask_m, 1.0 + u, 0.0)
     ones_u_m = jnp.where(mask_m, 1.0 - u, 0.0)
-    L, U = rankone.rank_one_update(state.L, state.U, ones_u_p,
-                                   jnp.asarray(0.5, state.L.dtype), m,
-                                   method=method, matmul=matmul, iters=iters)
-    L, U = rankone.rank_one_update(L, U, ones_u_m,
-                                   jnp.asarray(-0.5, state.L.dtype), m,
-                                   method=method, matmul=matmul, iters=iters)
+    L, U = _apply_pair(state.L, state.U, ones_u_p,
+                       jnp.asarray(0.5, state.L.dtype), ones_u_m, m,
+                       method=method, matmul=matmul, iters=iters)
 
     # --- Step 2: bookkeeping updates (paper lines 7-9). ---
     K1 = jnp.where(mask_m, state.K1 + a, 0.0)
@@ -159,10 +169,8 @@ def update_adjusted(state: KPCAState, a: Array, k_new: Array, x_new: Array,
     v1 = v.at[m].set(v0 / 2.0)
     v2 = v.at[m].set(v0 / 4.0)
     sigma = 4.0 / v0
-    L, U = rankone.rank_one_update(L, U, v1, sigma, m1,
-                                   method=method, matmul=matmul, iters=iters)
-    L, U = rankone.rank_one_update(L, U, v2, -sigma, m1,
-                                   method=method, matmul=matmul, iters=iters)
+    L, U = _apply_pair(L, U, v1, sigma, v2, m1, method=method, matmul=matmul,
+                       iters=iters)
 
     X = jax.lax.dynamic_update_slice(state.X, x_new[None].astype(state.X.dtype),
                                      (m, jnp.zeros((), m.dtype)))
@@ -170,21 +178,44 @@ def update_adjusted(state: KPCAState, a: Array, k_new: Array, x_new: Array,
 
 
 class KPCAStream:
-    """User-facing streaming driver around the jitted update functions."""
+    """User-facing streaming driver around the jitted update functions.
+
+    ``dispatch="bucketed"`` routes updates through ``repro.core.buckets``:
+    each step runs at the smallest power-of-two bucket capacity holding
+    the active set, so per-update cost scales with m instead of the fixed
+    capacity M (one extra compilation per bucket visited; see buckets.py
+    for the crossing/retrace cost model).
+    """
 
     def __init__(self, x0: Array, capacity: int, spec: kf.KernelSpec, *,
                  adjusted: bool = True, method: Literal["gu", "bns"] = "gu",
-                 matmul: Literal["jnp", "pallas"] = "jnp",
-                 iters: int = 62, dtype=jnp.float32):
+                 matmul: Literal["jnp", "pallas", "jnp2", "pallas2"] = "jnp",
+                 iters: int = 62, dtype=jnp.float32,
+                 dispatch: Literal["fixed", "bucketed"] = "fixed",
+                 min_bucket: int | None = None):
         self.spec = spec
         self.adjusted = adjusted
         self.method = method
         self.matmul = matmul
         self.iters = iters
+        self.dispatch = dispatch
+        self.min_bucket = min_bucket
         self.state = init_state(x0, capacity, spec, adjusted=adjusted,
                                 dtype=dtype)
 
+    def _bucket_kwargs(self) -> dict:
+        kw = dict(adjusted=self.adjusted, method=self.method,
+                  matmul=self.matmul, iters=self.iters)
+        if self.min_bucket is not None:
+            kw["min_bucket"] = self.min_bucket
+        return kw
+
     def update(self, x_new: Array) -> KPCAState:
+        if self.dispatch == "bucketed":
+            from repro.core import buckets
+            self.state = buckets.update(self.state, x_new, self.spec,
+                                        **self._bucket_kwargs())
+            return self.state
         a, k_new = _masked_row(self.state, x_new, self.spec)
         fn = update_adjusted if self.adjusted else update_unadjusted
         self.state = fn(self.state, a, k_new, x_new, method=self.method,
@@ -193,7 +224,14 @@ class KPCAStream:
 
     def update_block(self, xs: Array) -> KPCAState:
         """Scan over a block of points — one compilation, exact sequential
-        semantics (the paper's per-point algorithm, amortized for TPU)."""
+        semantics (the paper's per-point algorithm, amortized for TPU).
+        Bucketed dispatch scans within a bucket and re-buckets at
+        crossings, keeping the same sequential semantics."""
+        if self.dispatch == "bucketed":
+            from repro.core import buckets
+            self.state = buckets.update_block(self.state, xs, self.spec,
+                                              **self._bucket_kwargs())
+            return self.state
         spec, adjusted = self.spec, self.adjusted
         method, matmul, iters = self.method, self.matmul, self.iters
 

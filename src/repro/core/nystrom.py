@@ -15,6 +15,11 @@ implemented by the fused Pallas kernel ``repro.kernels.nystrom_recon``.
 
 This enables *empirical* stopping: monitor the chosen norm of K - K̃ (or a
 cheap proxy) after each added landmark and stop when it plateaus.
+
+For landmark sets that grow far below capacity, ``repro.core.buckets.
+add_landmark`` wraps this module's ``add_landmark`` with bucketed dispatch
+so each addition costs O(M_b³) at the active power-of-two bucket M_b
+instead of O(M³) at capacity.
 """
 from __future__ import annotations
 

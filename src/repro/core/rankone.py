@@ -34,7 +34,7 @@ Design for TPUs / jit:
 from __future__ import annotations
 
 from functools import partial
-from typing import Literal
+from typing import Literal, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -245,13 +245,66 @@ def rank_one_update(
     z, applyH = _cluster_merge(d_sent, z, tol)
     U = applyH(U.T).T                            # U @ H, no matmul
 
+    f = _solve_factor(d_sent, z, sigma, m, scale, iters=iters, method=method,
+                      precise=precise)
+    U_new = _apply_factor(U, f, mask, m, matmul=matmul)
+    # Deflation can locally reorder roots (a root may legitimately cross a
+    # deflated pole); the next update's interlacing needs ascending order.
+    perm = jnp.argsort(f.L_new)
+    return f.L_new[perm], U_new[:, perm]
+
+
+class _Factor(NamedTuple):
+    """One solved rank-one update as an original-domain Cauchy factor.
+
+    The normalized eigenvector rotation is W[k, j] = z_k·inv_j/(d_k-lam_j)
+    with deflated columns replaced by identity columns; ``L_new`` is the
+    updated (pre-sort) spectrum.  All vectors live in the original domain
+    (the sigma<0 flip's sign is folded into z), so the active region is a
+    prefix regardless of sigma's sign.
+    """
+
+    z: Array
+    d: Array
+    lam: Array
+    inv: Array
+    defl: Array
+    L_new: Array
+
+
+def _solve_factor(d_sent: Array, z: Array, sigma: Array, m: Array,
+                  scale: Array, *, iters: int, method: str,
+                  precise: bool) -> _Factor:
+    """Displacement deflation + secular solve + un-flip, as a ``_Factor``.
+
+    The single shared solve pipeline behind ``rank_one_update`` and
+    ``rank_one_update_pair`` — the deflation thresholds, the sigma<0 flip
+    identity, and the precise/x64 solve-dtype policy live only here.
+
+    Displacement-based deflation (the LAPACK criterion): if an eigenvalue
+    moves by less than the representable resolution of the spectrum
+    (σ·z_i² ≲ eps·‖A‖), bisection collapses the root ONTO the pole and two
+    eigenvector columns degenerate to the same basis vector — deflate
+    instead (root pinned at the pole, column = e_i, brackets skip it).
+
+    The secular solve is O(M²) VPU work but numerically delicate (pole
+    differences d_i - t_j); when ``precise`` and x64 is enabled it runs in
+    f64 (the factor's vectors come back in the solve dtype) — negligible
+    cost next to the O(M³) rotation, large drift win for f32 states.
+
+    Un-flip: folding the flip identity's sign into z gives, exactly,
+    W_eff[::-1, ::-1] == (-zhat_eff[::-1]) / (d_sent - (-roots_eff[::-1])),
+    so the returned factor lives in the original domain and its active
+    region is a prefix for either sigma sign — which is what lets the
+    Pallas kernels prune every tile beyond ceil(m/B).
+    """
+    M = d_sent.shape[0]
+    dtype = d_sent.dtype
+    mask = active_mask(M, m)
+    sig_abs = jnp.abs(sigma)
+    neg = sigma < 0
     znorm = jnp.sqrt(jnp.sum(z * z))
     floor = 32.0 * _eps_for(dtype) * jnp.maximum(znorm, _eps_for(dtype))
-    # Displacement-based deflation (the LAPACK criterion): if the eigenvalue
-    # moves by less than the representable resolution of the spectrum
-    # (σ·z_i² ≲ eps·‖A‖), bisection collapses the root ONTO the pole and two
-    # eigenvector columns degenerate to the same basis vector — deflate
-    # instead (root pinned at the pole, column = e_i, brackets skip it).
     defl = (~mask | (jnp.abs(z) < floor)
             | (sig_abs * z * z < 64.0 * _eps_for(dtype) * scale))
     z = jnp.where(defl, 0.0, z)
@@ -259,62 +312,160 @@ def rank_one_update(
     d_eff = jnp.where(neg, -d_sent[::-1], d_sent)
     z_eff = jnp.where(neg, z[::-1], z)
     defl_eff = jnp.where(neg, defl[::-1], defl)
-
-    # The secular solve and Cauchy-factor formation are O(M^2) VPU work but
-    # numerically delicate (pole differences d_i - t_j); when ``precise`` and
-    # x64 is enabled, run them in f64 and cast W back — negligible cost next
-    # to the O(M^3) rotation, large drift win for f32 states.
-    solve_dtype = jnp.float64 if (precise and jax.config.jax_enable_x64) else dtype
+    solve_dtype = (jnp.float64 if (precise and jax.config.jax_enable_x64)
+                   else dtype)
     d_s = d_eff.astype(solve_dtype)
     z_s = z_eff.astype(solve_dtype)
     sig_s = sig_abs.astype(solve_dtype)
-
     roots_eff = _secular_bisect(d_s, z_s * z_s, sig_s, iters, defl=defl_eff)
-
     if method == "gu":
         zhat_eff = _gu_zhat(d_s, roots_eff, sig_s, z_s)
         zhat_eff = jnp.where(defl_eff, 0.0, zhat_eff)
     else:
         zhat_eff = z_s
-
-    W_eff, inv_eff = _cauchy_W(d_s, roots_eff, zhat_eff)
-    # deflated columns: the eigenvector is unchanged (W column = e_j).
-    eye_s = jnp.eye(M, dtype=W_eff.dtype)
-    W_eff = jnp.where(defl_eff[None, :], eye_s, W_eff)
+    _, inv_eff = _cauchy_W(d_s, roots_eff, zhat_eff)
     inv_eff = jnp.where(defl_eff, 1.0, inv_eff)
+
+    z_o = jnp.where(neg, -zhat_eff[::-1], zhat_eff)
+    lam_o = jnp.where(neg, -roots_eff[::-1], roots_eff)
+    inv_o = jnp.where(neg, inv_eff[::-1], inv_eff)
+    L_new = jnp.where(mask, lam_o.astype(dtype), d_sent)
+    return _Factor(z=jnp.where(mask, z_o, 0.0),
+                   d=d_sent.astype(solve_dtype), lam=lam_o, inv=inv_o,
+                   defl=defl, L_new=L_new)
+
+
+def _apply_factor(U: Array, f: _Factor, mask: Array, m: Array, *,
+                  matmul: str) -> Array:
+    """U @ Ŵn for a single factor, preserving the padding invariants."""
+    M = U.shape[0]
+    dtype = U.dtype
+    if matmul == "pallas":
+        # The factor is regenerated tile-by-tile in VMEM from O(M) vectors
+        # (see kernels/eigvec_update), with tiles beyond ceil(m/B) pruned.
+        from repro.kernels.eigvec_update import ops as _ops
+        z_k = jnp.where(mask, f.z.astype(dtype), 0.0)
+        d_k = jnp.where(mask, f.d.astype(dtype), 2e30)
+        lam_k = jnp.where(mask, f.lam.astype(dtype), 1e30)
+        inv_k = jnp.where(mask, f.inv.astype(dtype), 0.0)
+        C = _ops.rotate_vectors(U, z_k, d_k, lam_k, inv_k, m)
+        C = jnp.where(f.defl[None, :], U, C)        # deflated cols unchanged
+        return jnp.where(mask[None, :], C, jnp.eye(M, dtype=dtype))
+    from repro.kernels.eigvec_update.ref import cauchy_factor_ref
+    Wn = cauchy_factor_ref(f.z, f.d, f.lam, f.inv,
+                           f.defl.astype(f.z.dtype)).astype(dtype)
+    return U @ Wn
+
+
+def _pair_factor(L: Array, z: Array, sigma: Array, m: Array, *, iters: int,
+                 method: str, precise: bool) -> _Factor:
+    """Sentinelize + solve one update into a Cauchy factor (no U rotation).
+
+    ``rank_one_update``'s pipeline minus the dlaed2 cluster-merge, whose
+    block reflector is not a Cauchy factor and so cannot sit between the
+    two fused rotations.  Displacement deflation (in ``_solve_factor``)
+    still guards every degenerate direction (the paper itself handles
+    z_i = 0 by exclusion and has no cluster-merge either); extremely
+    clustered spectra lose some of the beyond-paper orthogonality
+    polish — use the sequential path when that matters more than HBM
+    traffic.
+    """
+    mask = active_mask(L.shape[0], m)
+    room = jnp.abs(sigma) * jnp.sum(z * z)
+    d_sent = sentinelize(L, m, room)
+    scale = jnp.max(jnp.abs(jnp.where(mask, L, 0.0))) + room + 1e-30
+    return _solve_factor(d_sent, z, sigma, m, scale, iters=iters,
+                         method=method, precise=precise)
+
+
+def _factor_tmatvec(f: _Factor, y: Array) -> Array:
+    """(Ŵn)ᵀ y in O(M²) from the factor's vectors — never materializes U's
+    rotation, which is what lets the second secular solve run before the
+    first eigenvector rotation has happened."""
+    eps = _eps_for(f.z.dtype)
+    den = f.d[:, None] - f.lam[None, :]
+    den = jnp.where(jnp.abs(den) < eps, jnp.where(den < 0, -eps, eps), den)
+    s = jnp.sum((f.z * y)[:, None] / den, axis=0) * f.inv
+    return jnp.where(f.defl, y, s)
+
+
+@partial(jax.jit, static_argnames=("iters", "method", "matmul", "precise"))
+def rank_one_update_pair(
+    L: Array,
+    U: Array,
+    v1: Array,
+    sigma1: Array,
+    v2: Array,
+    sigma2: Array,
+    m: Array,
+    *,
+    iters: int = 62,
+    method: Literal["gu", "bns"] = "gu",
+    matmul: Literal["jnp", "pallas"] = "jnp",
+    precise: bool = True,
+) -> tuple[Array, Array]:
+    """Two back-to-back rank-one updates with ONE fused double rotation.
+
+    Semantically ``rank_one_update(·, v2, sigma2) ∘ rank_one_update(·, v1,
+    sigma1)`` — the ±sigma pairs of Algorithms 1 and 2 — except the U
+    rotation happens once: C = U @ W1n @ W2n.  The second update's
+    z₂ = U₁ᵀ v₂ is obtained without U₁ via the Cauchy transpose-matvec
+    (O(M²)), so U is read and written exactly once per streamed point —
+    half the HBM round-trips of two sequential updates.  The dlaed2
+    cluster-merge is skipped (see ``_pair_factor``); otherwise numerics
+    match the sequential path.
+
+    matmul='jnp' materializes both factors densely (reference semantics,
+    still one pass over U); 'pallas' generates both factors' tiles in VMEM
+    (``eigvec_rotate2``) with active-tile pruning.
+    """
+    M = L.shape[0]
+    dtype = L.dtype
+    mask = active_mask(M, m)
+    v1 = jnp.where(mask, v1, 0.0)
+    v2 = jnp.where(mask, v2, 0.0)
+
+    z1 = U.T @ v1
+    f1 = _pair_factor(L, z1, sigma1, m, iters=iters, method=method,
+                      precise=precise)
+    perm1 = jnp.argsort(f1.L_new)
+    L1 = f1.L_new[perm1]
+
+    y = _factor_tmatvec(f1, (U.T @ v2).astype(f1.z.dtype))
+    z2 = y[perm1].astype(dtype)
+    f2 = _pair_factor(L1, z2, sigma2, m, iters=iters, method=method,
+                      precise=precise)
+    perm2 = jnp.argsort(f2.L_new)
+
+    # Factor 1's columns carry the inter-update sort: permute the column
+    # vectors and record the permutation in cid so deflated columns become
+    # e_{perm1[j]} (sentinels sort to themselves, so inactive cid is j).
+    cid1 = perm1.astype(jnp.int32)
+    lam1p, inv1p, defl1p = f1.lam[perm1], f1.inv[perm1], f1.defl[perm1]
+    cid2 = jnp.arange(M, dtype=jnp.int32)
 
     eye = jnp.eye(M, dtype=dtype)
     col_active = mask[None, :]
-    roots = jnp.where(neg, -roots_eff[::-1], roots_eff).astype(dtype)
-
     if matmul == "pallas":
-        # Fused path: the Cauchy factor is regenerated tile-by-tile in VMEM
-        # from O(M) vectors (see kernels/eigvec_update).  Work in the flipped
-        # domain and unflip columns of the result.
         from repro.kernels.eigvec_update import ops as _ops
-        # Mask in the *flipped* domain: active entries are a suffix when neg.
-        mask_eff = jnp.where(neg, mask[::-1], mask)
-        z_k = jnp.where(mask_eff, zhat_eff.astype(dtype), 0.0)
-        d_k = jnp.where(mask_eff, d_s.astype(dtype), 2e30)
-        lam_k = jnp.where(mask_eff, roots_eff.astype(dtype), 1e30)
-        inv_k = jnp.where(mask_eff, inv_eff.astype(dtype), 0.0)
-        U_in = jnp.where(neg, U[:, ::-1], U)
-        C = _ops.rotate_vectors(U_in, z_k, d_k, lam_k, inv_k)
-        C = jnp.where(defl_eff[None, :], U_in, C)   # deflated cols unchanged
-        C = jnp.where(neg, C[:, ::-1], C)
-        U_new = jnp.where(col_active, C, eye)
+        C = _ops.rotate_vectors2(
+            U,
+            f1.z.astype(dtype), f1.d.astype(dtype), lam1p.astype(dtype),
+            inv1p.astype(dtype), defl1p.astype(dtype), cid1,
+            f2.z.astype(dtype), f2.d.astype(dtype), f2.lam.astype(dtype),
+            f2.inv.astype(dtype), f2.defl.astype(dtype), cid2,
+            m)
     else:
-        W = jnp.where(neg, W_eff[::-1, ::-1], W_eff).astype(dtype)
-        inv = jnp.where(neg, inv_eff[::-1], inv_eff).astype(dtype)
-        row_active = mask[:, None]
-        Wn = jnp.where(col_active & row_active, W * inv[None, :], eye)
-        U_new = U @ Wn
-
-    L_new = jnp.where(mask, roots, d_sent)
-    # Deflation can locally reorder roots (a root may legitimately cross a
-    # deflated pole); the next update's interlacing needs ascending order.
-    perm = jnp.argsort(L_new)
-    return L_new[perm], U_new[:, perm]
+        from repro.kernels.eigvec_update.ref import cauchy_factor_ref
+        W1 = cauchy_factor_ref(f1.z, f1.d, lam1p, inv1p,
+                               defl1p.astype(f1.z.dtype),
+                               cid1).astype(dtype)
+        W2 = cauchy_factor_ref(f2.z, f2.d, f2.lam, f2.inv,
+                               f2.defl.astype(f2.z.dtype),
+                               cid2).astype(dtype)
+        C = (U @ W1) @ W2
+    U_new = jnp.where(col_active, C, eye)
+    return f2.L_new[perm2], U_new[:, perm2]
 
 
 @partial(jax.jit, static_argnames=())

@@ -4,6 +4,11 @@ Model code annotates tensors with *logical* dim names; the active rule set
 maps them to mesh axes.  Rules are installed by the launcher for the chosen
 mesh, so the same model code serves 1-device smoke tests (no rules -> no-op)
 and the 512-chip production mesh.
+
+Also exports ``shard_map``: a version-guarded dispatch to the JAX shard_map
+API, which moved from ``jax.experimental.shard_map`` (kwarg ``check_rep``)
+to top-level ``jax.shard_map`` (kwarg ``check_vma``).  All call sites in
+this repo go through the wrapper so either JAX generation works.
 """
 from __future__ import annotations
 
@@ -14,6 +19,23 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _state = threading.local()
+
+
+if hasattr(jax, "shard_map"):
+    _shard_map_impl = jax.shard_map
+    _CHECK_KWARG = "check_vma"
+else:  # older JAX: experimental API with the check_rep spelling
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+    _CHECK_KWARG = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """Portable shard_map: maps ``check_vma`` onto this JAX's spelling."""
+    kwargs = {}
+    if check_vma is not None:
+        kwargs[_CHECK_KWARG] = check_vma
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kwargs)
 
 
 DEFAULT_RULES: dict[str, tuple[str, ...] | str | None] = {
@@ -123,6 +145,10 @@ def logical_to_spec(names: tuple[str | None, ...],
             if axes is not None and shape is not None and mesh is not None:
                 if shape[i] % _axis_size(mesh, axes) != 0:
                     axes = None
+        # normalize 1-tuples to the bare axis name: older PartitionSpec
+        # compares ('model',) != 'model'
+        if isinstance(axes, tuple) and len(axes) == 1:
+            axes = axes[0]
         out.append(axes)
     return P(*out)
 

@@ -1,4 +1,5 @@
 from repro.kernels.eigvec_update import ops, ref
-from repro.kernels.eigvec_update.eigvec_update import eigvec_rotate
+from repro.kernels.eigvec_update.eigvec_update import (eigvec_rotate,
+                                                      eigvec_rotate2)
 
-__all__ = ["ops", "ref", "eigvec_rotate"]
+__all__ = ["ops", "ref", "eigvec_rotate", "eigvec_rotate2"]

@@ -9,6 +9,24 @@ Roofline motivation (TPU v5e, bf16/f32): the naive two-step
 the fused kernel moves M^2 reads (U) + M^2 writes (C) — a ~2.5× cut on the
 memory term, and the VPU divide pipeline overlaps the MXU dot.
 
+Active-tile pruning: the incremental-KPCA state is fixed-capacity (M) with
+an *active count* m; beyond the active prefix, U is identity, zhat/inv are
+zero, and the consumer overwrites the columns anyway.  The grid therefore
+prefetches g = ceil(m/B) (scalar prefetch) and skips every (i, j, k) tile
+with a coordinate >= g: MXU work drops from ceil(M/B)^3 to ceil(m/B)^3
+tiles per update — the flop count the paper's ~8m^3 claim assumes.  Pruned
+output tiles are written as zeros (their true value: rows past m of active
+columns are exactly 0; inactive columns are replaced by e_j downstream).
+
+``eigvec_rotate2`` additionally fuses the paper's back-to-back ±sigma
+rotations of eq. (2)/(3): C = U @ W1n @ W2n in one pass over U (both W
+tiles generated in VMEM), halving HBM round-trips of U per streamed point.
+Deflated columns are generated in-kernel as identity columns e_{cid[j]}
+(cid carries the inter-update sort permutation), so no intermediate U1 is
+ever needed.  The grid walks (i, k) U-tiles with every loop bounded by
+the active tile count g, so the fused kernel is also fully m-pruned —
+g³ MXU tiles per factor and only the active m×m corner of U fetched.
+
 Tiling: (BI, BJ) output tiles, reduction over K in the innermost grid axis;
 MXU-aligned 128×128×128 blocks by default.  Vectors are carried as (M, 1) /
 (1, M) so no in-kernel transposes are needed (lane/sublane friendly).
@@ -25,31 +43,37 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_BLOCK = 128
 
 
-def _kernel(u_ref, z_ref, d_ref, lam_ref, inv_ref, out_ref, acc_ref, *,
-            k_steps: int):
-    k = pl.program_id(2)
+def _kernel(g_ref, u_ref, z_ref, d_ref, lam_ref, inv_ref, out_ref, acc_ref,
+            *, k_steps: int):
+    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    g = g_ref[0]
+    active = (i < g) & (j < g)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # Generate the W tile in VMEM: (BK, 1) vectors against (1, BJ) vectors.
-    zcol = z_ref[...]            # (BK, 1)
-    dcol = d_ref[...]            # (BK, 1)
-    lamrow = lam_ref[...]        # (1, BJ)
-    w = zcol / (dcol - lamrow)   # (BK, BJ) — Cauchy tile, never hits HBM
-
-    acc_ref[...] += jnp.dot(u_ref[...], w,
-                            preferred_element_type=jnp.float32)
+    @pl.when(active & (k < g))
+    def _acc():
+        # Generate the W tile in VMEM: (BK, 1) vectors against (1, BJ).
+        zcol = z_ref[...]            # (BK, 1)
+        dcol = d_ref[...]            # (BK, 1)
+        lamrow = lam_ref[...]        # (1, BJ)
+        w = zcol / (dcol - lamrow)   # (BK, BJ) — Cauchy tile, never hits HBM
+        acc_ref[...] += jnp.dot(u_ref[...], w,
+                                preferred_element_type=jnp.float32)
 
     @pl.when(k == k_steps - 1)
     def _done():
+        # Pruned tiles were never accumulated: acc is still zero there, the
+        # correct value for rows/columns beyond the active prefix.
         out_ref[...] = (acc_ref[...] * inv_ref[...]).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def eigvec_rotate(u: jax.Array, zhat: jax.Array, d: jax.Array,
-                  lam: jax.Array, inv: jax.Array, *,
+                  lam: jax.Array, inv: jax.Array,
+                  num_active: jax.Array | None = None, *,
                   block: int = DEFAULT_BLOCK,
                   interpret: bool = False) -> jax.Array:
     """C[i, j] = sum_k U[i,k] * zhat[k]/(d[k]-lam[j]) * inv[j].
@@ -57,6 +81,10 @@ def eigvec_rotate(u: jax.Array, zhat: jax.Array, d: jax.Array,
     u: (M, M); zhat, d, lam, inv: (M,).  M is padded internally to a multiple
     of ``block``; padded columns use lam=1e30 / d=2e30 so generated W entries
     are exactly 0 (no NaNs enter the accumulator).
+
+    ``num_active`` (traced scalar, optional): active count m.  Tiles beyond
+    ceil(m/block) are skipped and their output written as zero — callers
+    must treat columns >= m as garbage-to-overwrite (rankone does).
     """
     M = u.shape[0]
     Mp = -(-M // block) * block
@@ -74,19 +102,193 @@ def eigvec_rotate(u: jax.Array, zhat: jax.Array, d: jax.Array,
     invrow = inv.reshape(1, Mp).astype(dtype)
 
     steps = Mp // block
-    out = pl.pallas_call(
-        functools.partial(_kernel, k_steps=steps),
+    if num_active is None:
+        g = jnp.full((1,), steps, jnp.int32)
+    else:
+        na = jnp.asarray(num_active, jnp.int32)
+        g = jnp.minimum(-(-na // block), steps).reshape(1)
+
+    def _clamp(t, g_ref):
+        # Redirect pruned-tile block loads to tile 0: the iteration is
+        # skipped anyway, so don't spend HBM bandwidth on its operands.
+        return jnp.minimum(t, jnp.maximum(g_ref[0] - 1, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(steps, steps, steps),
         in_specs=[
-            pl.BlockSpec((block, block), lambda i, j, k: (i, k)),   # U
-            pl.BlockSpec((block, 1), lambda i, j, k: (k, 0)),       # zhat
-            pl.BlockSpec((block, 1), lambda i, j, k: (k, 0)),       # d
-            pl.BlockSpec((1, block), lambda i, j, k: (0, j)),       # lam
-            pl.BlockSpec((1, block), lambda i, j, k: (0, j)),       # inv
+            pl.BlockSpec((block, block),
+                         lambda i, j, k, g: (_clamp(i, g), _clamp(k, g))),
+            pl.BlockSpec((block, 1), lambda i, j, k, g: (_clamp(k, g), 0)),
+            pl.BlockSpec((block, 1), lambda i, j, k, g: (_clamp(k, g), 0)),
+            pl.BlockSpec((1, block), lambda i, j, k, g: (0, _clamp(j, g))),
+            pl.BlockSpec((1, block), lambda i, j, k, g: (0, _clamp(j, g))),
         ],
-        out_specs=pl.BlockSpec((block, block), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((Mp, Mp), dtype),
+        out_specs=pl.BlockSpec((block, block), lambda i, j, k, g: (i, j)),
         scratch_shapes=[pltpu.VMEM((block, block), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, k_steps=steps),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Mp, Mp), dtype),
         interpret=interpret,
-    )(u, zcol, dcol, lamrow, invrow)
+    )(g, u, zcol, dcol, lamrow, invrow)
+    return out[:M, :M]
+
+
+def _w_tile(z_ref, d_ref, lam_ref, inv_ref, defl_ref, cid_ref, k, l, *,
+            block: int, eps: float):
+    """(block, block) tile (k, l) of a normalized Cauchy factor.
+
+    w[r, c] = defl[c] ? (row_r == cid[c]) : z[r] * inv[c] / (d[r] - lam[c])
+    with r/c the in-tile offsets of global rows k·B+r, columns l·B+c.
+    """
+    rs = pl.dslice(k * block, block)
+    cs = pl.dslice(l * block, block)
+    z = z_ref[rs, :]                     # (block, 1)
+    d = d_ref[rs, :]                     # (block, 1)
+    lam = lam_ref[:, cs]                 # (1, block)
+    inv = inv_ref[:, cs]                 # (1, block)
+    defl = defl_ref[:, cs]               # (1, block) float 0/1
+    cid = cid_ref[:, cs]                 # (1, block) int32
+    den = d - lam
+    den = jnp.where(jnp.abs(den) < eps,
+                    jnp.where(den < 0, -eps, eps), den)
+    w = z * inv / den
+    rows = k * block + jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
+    return jnp.where(defl > 0, (rows == cid).astype(w.dtype), w)
+
+
+def _kernel2(g_ref, u_ref,
+             z1_ref, d1_ref, lam1_ref, inv1_ref, defl1_ref, cid1_ref,
+             z2_ref, d2_ref, lam2_ref, inv2_ref, defl2_ref, cid2_ref,
+             out_ref, t_ref, *, k_steps: int, block: int, eps: float):
+    i, k = pl.program_id(0), pl.program_id(1)
+    g = g_ref[0]
+
+    @pl.when(k == 0)
+    def _init():
+        t_ref[...] = jnp.zeros_like(t_ref)
+
+    # Accumulate T = U_row @ W1n one (i, k) U-tile at a time, so both the
+    # MXU work and the U HBM fetches stop at the active tile range g.
+    @pl.when((i < g) & (k < g))
+    def _acc():
+        u_blk = u_ref[...]                               # (block, block)
+
+        def body1(l, carry):
+            w1 = _w_tile(z1_ref, d1_ref, lam1_ref, inv1_ref, defl1_ref,
+                         cid1_ref, k, l, block=block, eps=eps)
+            sl = pl.dslice(l * block, block)
+            t_ref[:, sl] += jnp.dot(u_blk, w1,
+                                    preferred_element_type=jnp.float32)
+            return carry
+
+        jax.lax.fori_loop(0, g, body1, 0)
+
+    # Second factor once T is complete.  Pruned column slabs (and pruned
+    # row blocks entirely) are zero — correct for the padding contract.
+    @pl.when(k == k_steps - 1)
+    def _emit():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+        @pl.when(i < g)
+        def _second():
+            def body2(j, carry):
+                def inner(l, acc):
+                    w2 = _w_tile(z2_ref, d2_ref, lam2_ref, inv2_ref,
+                                 defl2_ref, cid2_ref, l, j, block=block,
+                                 eps=eps)
+                    t_blk = t_ref[:, pl.dslice(l * block, block)]
+                    return acc + jnp.dot(t_blk, w2.astype(jnp.float32),
+                                         preferred_element_type=jnp.float32)
+
+                acc0 = jnp.zeros((block, block), jnp.float32)
+                out_ref[:, pl.dslice(j * block, block)] = (
+                    jax.lax.fori_loop(0, g, inner, acc0).astype(
+                        out_ref.dtype))
+                return carry
+
+            jax.lax.fori_loop(0, g, body2, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def eigvec_rotate2(u: jax.Array,
+                   z1: jax.Array, d1: jax.Array, lam1: jax.Array,
+                   inv1: jax.Array, defl1: jax.Array, cid1: jax.Array,
+                   z2: jax.Array, d2: jax.Array, lam2: jax.Array,
+                   inv2: jax.Array, defl2: jax.Array, cid2: jax.Array,
+                   num_active: jax.Array | None = None, *,
+                   block: int = DEFAULT_BLOCK,
+                   interpret: bool = False) -> jax.Array:
+    """Fused double rotation  C = U @ W1n @ W2n  in one pass over U.
+
+    Each factor is W[k, j] = z[k]·inv[j]/(d[k]-lam[j]), except deflated
+    columns (defl[j] != 0) which are identity columns e_{cid[j]} — cid
+    carries the sort permutation applied between the two updates.  The
+    grid walks (i, k) U-tiles; the intermediate T = U_row @ W1n lives
+    only in VMEM scratch (never HBM).  VMEM footprint per program is the
+    (B, M) T row plus (B, B) tiles ≈ B·M·4 bytes.
+    """
+    M = u.shape[0]
+    Mp = -(-M // block) * block
+    pad = Mp - M
+    dtype = u.dtype
+    if pad:
+        u = jnp.pad(u, ((0, pad), (0, pad)))
+        z1, z2 = (jnp.pad(v, (0, pad)) for v in (z1, z2))
+        d1, d2 = (jnp.pad(v, (0, pad), constant_values=2e30)
+                  for v in (d1, d2))
+        lam1, lam2 = (jnp.pad(v, (0, pad), constant_values=1e30)
+                      for v in (lam1, lam2))
+        inv1, inv2 = (jnp.pad(v, (0, pad)) for v in (inv1, inv2))
+        defl1, defl2 = (jnp.pad(v, (0, pad)) for v in (defl1, defl2))
+        cid1, cid2 = (jnp.pad(v, (0, pad), constant_values=Mp)
+                      for v in (cid1, cid2))
+
+    def col(v):
+        return v.reshape(Mp, 1).astype(dtype)
+
+    def row(v, as_dtype=None):
+        return v.reshape(1, Mp).astype(as_dtype or dtype)
+
+    steps = Mp // block
+    if num_active is None:
+        g = jnp.full((1,), steps, jnp.int32)
+    else:
+        na = jnp.asarray(num_active, jnp.int32)
+        g = jnp.minimum(-(-na // block), steps).reshape(1)
+
+    def _clamp(t, g_ref):
+        return jnp.minimum(t, jnp.maximum(g_ref[0] - 1, 0))
+
+    vec_specs = [
+        pl.BlockSpec((Mp, 1), lambda i, k, g: (0, 0)),   # z
+        pl.BlockSpec((Mp, 1), lambda i, k, g: (0, 0)),   # d
+        pl.BlockSpec((1, Mp), lambda i, k, g: (0, 0)),   # lam
+        pl.BlockSpec((1, Mp), lambda i, k, g: (0, 0)),   # inv
+        pl.BlockSpec((1, Mp), lambda i, k, g: (0, 0)),   # defl
+        pl.BlockSpec((1, Mp), lambda i, k, g: (0, 0)),   # cid
+    ]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(steps, steps),
+        in_specs=[pl.BlockSpec(
+            (block, block),
+            lambda i, k, g: (_clamp(i, g), _clamp(k, g)))]
+        + vec_specs + vec_specs,
+        out_specs=pl.BlockSpec((block, Mp), lambda i, k, g: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((block, Mp), jnp.float32)],
+    )
+    eps = float(jnp.finfo(dtype).eps)
+    out = pl.pallas_call(
+        functools.partial(_kernel2, k_steps=steps, block=block, eps=eps),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Mp, Mp), dtype),
+        interpret=interpret,
+    )(g, u,
+      col(z1), col(d1), row(lam1), row(inv1), row(defl1),
+      row(cid1, jnp.int32),
+      col(z2), col(d2), row(lam2), row(inv2), row(defl2),
+      row(cid2, jnp.int32))
     return out[:M, :M]

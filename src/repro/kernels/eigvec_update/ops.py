@@ -1,4 +1,4 @@
-"""Jit'd public wrapper for the fused eigenvector rotation kernel.
+"""Jit'd public wrappers for the fused eigenvector rotation kernels.
 
 Dispatch: real TPU -> compiled Pallas; CPU (this container) -> Pallas
 interpret mode for small sizes in tests, pure-jnp oracle otherwise (the
@@ -11,29 +11,67 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.eigvec_update.eigvec_update import eigvec_rotate
-from repro.kernels.eigvec_update.ref import eigvec_rotate_ref
+from repro.kernels.eigvec_update.eigvec_update import (eigvec_rotate,
+                                                       eigvec_rotate2)
+from repro.kernels.eigvec_update.ref import (eigvec_rotate2_ref,
+                                             eigvec_rotate_ref)
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _force(force: str | None) -> str | None:
+    return force or os.environ.get("REPRO_PALLAS_FORCE") or None
+
+
 def rotate_vectors(u: jax.Array, zhat: jax.Array, d: jax.Array,
-                   lam: jax.Array, inv: jax.Array, *,
+                   lam: jax.Array, inv: jax.Array,
+                   num_active: jax.Array | None = None, *,
                    force: str | None = None) -> jax.Array:
     """C = U @ (diag-normalized Cauchy factor).
+
+    ``num_active`` enables active-tile grid pruning (see eigvec_update.py);
+    pruned columns come back as zeros for the caller to overwrite.
 
     force in {None, 'pallas', 'interpret', 'ref'} overrides dispatch; the
     REPRO_PALLAS_FORCE env var does the same (tests set it to 'interpret'
     so the real kernel body executes on CPU).
     """
-    force = force or os.environ.get("REPRO_PALLAS_FORCE") or None
+    force = _force(force)
     if force == "ref" or (force is None and not _on_tpu()):
         return eigvec_rotate_ref(u, zhat, d, lam, inv)
     if force == "interpret":
-        return eigvec_rotate(u, zhat, d, lam, inv, interpret=True)
-    return eigvec_rotate(u, zhat, d, lam, inv)
+        # Re-enable jit locally: pallas_call's interpret impl recurses
+        # forever under an ambient jax.disable_jit() on this JAX version.
+        with jax.disable_jit(False):
+            return eigvec_rotate(u, zhat, d, lam, inv, num_active,
+                                 interpret=True)
+    return eigvec_rotate(u, zhat, d, lam, inv, num_active)
+
+
+def rotate_vectors2(u: jax.Array,
+                    z1: jax.Array, d1: jax.Array, lam1: jax.Array,
+                    inv1: jax.Array, defl1: jax.Array, cid1: jax.Array,
+                    z2: jax.Array, d2: jax.Array, lam2: jax.Array,
+                    inv2: jax.Array, defl2: jax.Array, cid2: jax.Array,
+                    num_active: jax.Array | None = None, *,
+                    force: str | None = None) -> jax.Array:
+    """Fused double rotation C = U @ W1n @ W2n (eq. (2)/(3) back-to-back).
+
+    Same dispatch contract as ``rotate_vectors``.  Deflated columns are
+    generated as identity columns e_{cid[j]} inside the kernel, so the
+    intermediate U @ W1n never exists in HBM.
+    """
+    force = _force(force)
+    args = (u, z1, d1, lam1, inv1, defl1, cid1,
+            z2, d2, lam2, inv2, defl2, cid2)
+    if force == "ref" or (force is None and not _on_tpu()):
+        return eigvec_rotate2_ref(*args)
+    if force == "interpret":
+        with jax.disable_jit(False):
+            return eigvec_rotate2(*args, num_active, interpret=True)
+    return eigvec_rotate2(*args, num_active)
 
 
 def rotate(u: jax.Array, wn: jax.Array) -> jax.Array:

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the fused Cauchy eigenvector rotation."""
+"""Pure-jnp oracles for the fused Cauchy eigenvector rotations."""
 import jax
 import jax.numpy as jnp
 
@@ -8,3 +8,37 @@ def eigvec_rotate_ref(u: jax.Array, zhat: jax.Array, d: jax.Array,
     """Materialize W then matmul — the unfused baseline the kernel beats."""
     W = zhat[:, None] / (d[:, None] - lam[None, :])
     return (u @ W) * inv[None, :]
+
+
+def cauchy_factor_ref(z: jax.Array, d: jax.Array, lam: jax.Array,
+                      inv: jax.Array, defl: jax.Array | None = None,
+                      cid: jax.Array | None = None) -> jax.Array:
+    """Dense normalized Cauchy factor with deflated identity columns.
+
+    W[k, j] = z[k]·inv[j]/(d[k]-lam[j]); columns with defl[j] != 0 are
+    replaced by e_{cid[j]} (cid defaults to j).  Matches the in-VMEM tile
+    generation of ``eigvec_rotate2`` including its eps denominator guard.
+    """
+    M = z.shape[0]
+    eps = jnp.finfo(z.dtype).eps
+    den = d[:, None] - lam[None, :]
+    den = jnp.where(jnp.abs(den) < eps, jnp.where(den < 0, -eps, eps), den)
+    W = z[:, None] * inv[None, :] / den
+    if defl is None:
+        return W
+    if cid is None:
+        cid = jnp.arange(M, dtype=jnp.int32)
+    E = (jnp.arange(M)[:, None] == cid[None, :]).astype(W.dtype)
+    return jnp.where(defl[None, :] > 0, E, W)
+
+
+def eigvec_rotate2_ref(u: jax.Array,
+                       z1: jax.Array, d1: jax.Array, lam1: jax.Array,
+                       inv1: jax.Array, defl1: jax.Array, cid1: jax.Array,
+                       z2: jax.Array, d2: jax.Array, lam2: jax.Array,
+                       inv2: jax.Array, defl2: jax.Array,
+                       cid2: jax.Array) -> jax.Array:
+    """Two sequential dense rotations — the oracle for ``eigvec_rotate2``."""
+    W1 = cauchy_factor_ref(z1, d1, lam1, inv1, defl1, cid1)
+    W2 = cauchy_factor_ref(z2, d2, lam2, inv2, defl2, cid2)
+    return (u @ W1) @ W2

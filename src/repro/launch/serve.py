@@ -1,10 +1,24 @@
-"""Batched serving driver (decode loop with KV/recurrent caches).
+"""Batched serving drivers.
 
-CPU-runnable on smoke configs; the same step function is what the
-decode_32k / long_500k dry-run cells lower for the production mesh.
+Two serving workloads share this entry point:
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3_32b --smoke \
-        --batch 4 --prompt-len 16 --gen 32
+* ``--mode lm`` (default): decode loop with KV/recurrent caches.
+  CPU-runnable on smoke configs; the same step function is what the
+  decode_32k / long_500k dry-run cells lower for the production mesh.
+
+      PYTHONPATH=src python -m repro.launch.serve --arch qwen3_32b --smoke \
+          --batch 4 --prompt-len 16 --gen 32
+
+* ``--mode kpca``: streaming incremental-KPCA ingest + transform service.
+  Points arrive one at a time; each is folded into the eigendecomposition
+  (Algorithm 2) and every ``--transform-every`` points a batch of queries
+  is projected on the current principal components.  ``--dispatch
+  bucketed`` routes updates through ``repro.core.buckets`` so early-stream
+  updates run at the active bucket's O(M_b³), not capacity O(M³) — the
+  per-update latencies printed at the end show the staircase.
+
+      PYTHONPATH=src python -m repro.launch.serve --mode kpca \
+          --capacity 512 --points 200 --dispatch bucketed
 """
 from __future__ import annotations
 
@@ -22,15 +36,76 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import lm
 
 
+def kpca_main(args) -> dict:
+    import numpy as np
+
+    from repro.core import inkpca, kernels_fn as kf
+
+    rng = np.random.default_rng(args.seed)
+    d = args.dim
+    x0 = jnp.asarray(rng.normal(size=(4, d)), jnp.float32)
+    spec = kf.KernelSpec(name="rbf", sigma=float(d))
+    stream = inkpca.KPCAStream(
+        x0, args.capacity, spec, adjusted=True, matmul=args.matmul,
+        dispatch=args.dispatch, dtype=jnp.float32)
+
+    lat_ms: list[float] = []
+    n_served = 0
+    t_total = time.time()
+    for i in range(args.points):
+        x = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+        t0 = time.perf_counter()
+        st = stream.update(x)
+        jax.block_until_ready(st.L)
+        lat_ms.append((time.perf_counter() - t0) * 1e3)
+        if (i + 1) % args.transform_every == 0:
+            q = jnp.asarray(rng.normal(size=(args.batch, d)), jnp.float32)
+            y = stream.transform(q, n_components=min(8, int(st.m)))
+            jax.block_until_ready(y)
+            n_served += args.batch
+    t_total = time.time() - t_total
+
+    lat = np.asarray(lat_ms) if lat_ms else np.zeros((1,))
+    # First step per bucket pays compilation; report the steady-state view.
+    result = {
+        "mode": "kpca", "dispatch": args.dispatch, "capacity": args.capacity,
+        "points": args.points, "m_final": int(stream.state.m),
+        "update_ms_p50": float(np.percentile(lat, 50)),
+        "update_ms_p90": float(np.percentile(lat, 90)),
+        "update_ms_max": float(lat.max()),
+        "transforms_served": n_served,
+        "total_s": t_total,
+        "finite": bool(jnp.isfinite(stream.state.L).all()),
+    }
+    print(f"[serve/kpca] {args.dispatch}: {args.points} updates to "
+          f"m={result['m_final']} (capacity {args.capacity}), "
+          f"p50 {result['update_ms_p50']:.1f} ms, "
+          f"p90 {result['update_ms_p90']:.1f} ms  {result}")
+    return result
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("lm", "kpca"), default="lm")
     ap.add_argument("--arch", default="qwen3_32b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    # kpca-mode flags
+    ap.add_argument("--capacity", type=int, default=512)
+    ap.add_argument("--points", type=int, default=100)
+    ap.add_argument("--dim", type=int, default=16)
+    ap.add_argument("--dispatch", choices=("fixed", "bucketed"),
+                    default="bucketed")
+    ap.add_argument("--matmul", default="jnp",
+                    choices=("jnp", "pallas", "jnp2", "pallas2"))
+    ap.add_argument("--transform-every", type=int, default=16)
     args = ap.parse_args(argv)
+
+    if args.mode == "kpca":
+        return kpca_main(args)
 
     cfg = configs.get_config(args.arch, smoke=args.smoke)
     mesh = make_host_mesh()

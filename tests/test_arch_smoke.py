@@ -4,6 +4,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow  # model-zoo / driver integration tier
+
 from repro import configs
 from repro.data.synthetic import TokenStream, frontend_embeddings
 from repro.models import lm

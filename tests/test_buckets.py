@@ -1,0 +1,148 @@
+"""Bucketed dispatch (repro.core.buckets): m-scaled updates must match the
+fixed-capacity path across bucket crossings."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import buckets, inkpca, kernels_fn as kf, nystrom, rankone
+
+RNG = np.random.default_rng(11)
+SPEC = kf.KernelSpec(name="rbf", sigma=5.0)
+
+
+# ------------------------------------------------------- bucket geometry --
+def test_bucket_sizes_ladder():
+    assert buckets.bucket_sizes(1024, 128) == (128, 256, 512, 1024)
+    assert buckets.bucket_sizes(1000, 128) == (128, 256, 512, 1000)
+    assert buckets.bucket_sizes(100, 128) == (100,)
+    assert buckets.bucket_sizes(128, 128) == (128,)
+
+
+def test_bucket_for_smallest_fit():
+    assert buckets.bucket_for(1, 1024, 128) == 128
+    assert buckets.bucket_for(128, 1024, 128) == 128
+    assert buckets.bucket_for(129, 1024, 128) == 256
+    assert buckets.bucket_for(1024, 1024, 128) == 1024
+    with pytest.raises(ValueError):
+        buckets.bucket_for(1025, 1024, 128)
+
+
+def test_slice_scatter_roundtrip():
+    x0 = jnp.asarray(RNG.normal(size=(6, 3)))
+    state = inkpca.init_state(x0, 32, SPEC, adjusted=True, dtype=jnp.float64)
+    sub = buckets.slice_state(state, 16)
+    assert sub.L.shape == (16,) and sub.U.shape == (16, 16)
+    back = buckets.scatter_state(state, sub)
+    np.testing.assert_allclose(np.asarray(back.U), np.asarray(state.U))
+    np.testing.assert_allclose(np.asarray(back.L[:6]), np.asarray(state.L[:6]))
+    # tail is re-sentinelized: still ascending, still above the spectrum
+    L = np.asarray(back.L)
+    assert (np.diff(L) > 0).all()
+
+
+# ------------------------------------------------- crossing equivalence --
+@pytest.mark.parametrize("adjusted", [True, False])
+def test_bucketed_stream_matches_fixed_across_crossings(adjusted):
+    """min_bucket=8 with 36 streamed points forces crossings at m=8,16,32."""
+    X = RNG.normal(size=(40, 5))
+    fix = inkpca.KPCAStream(jnp.asarray(X[:4]), 64, SPEC, adjusted=adjusted,
+                            dtype=jnp.float64)
+    buk = inkpca.KPCAStream(jnp.asarray(X[:4]), 64, SPEC, adjusted=adjusted,
+                            dtype=jnp.float64, dispatch="bucketed",
+                            min_bucket=8)
+    fix.update_block(jnp.asarray(X[4:]))
+    buk.update_block(jnp.asarray(X[4:]))
+    assert int(fix.state.m) == int(buk.state.m) == 40
+    lf, _ = fix.eigpairs()
+    lb, _ = buk.eigpairs()
+    np.testing.assert_allclose(np.asarray(lb[:40]), np.asarray(lf[:40]),
+                               rtol=1e-8, atol=1e-8)
+    np.testing.assert_allclose(np.asarray(buk.reconstruction()),
+                               np.asarray(fix.reconstruction()), atol=1e-7)
+    q = jnp.asarray(RNG.normal(size=(3, 5)))
+    np.testing.assert_allclose(np.abs(np.asarray(buk.transform(q, 4))),
+                               np.abs(np.asarray(fix.transform(q, 4))),
+                               atol=1e-7)
+
+
+def test_bucketed_single_updates_match_fixed():
+    X = RNG.normal(size=(20, 4))
+    fix = inkpca.KPCAStream(jnp.asarray(X[:4]), 32, SPEC, dtype=jnp.float64)
+    buk = inkpca.KPCAStream(jnp.asarray(X[:4]), 32, SPEC, dtype=jnp.float64,
+                            dispatch="bucketed", min_bucket=8)
+    for i in range(4, 20):
+        fix.update(jnp.asarray(X[i]))
+        buk.update(jnp.asarray(X[i]))
+    np.testing.assert_allclose(np.asarray(buk.reconstruction()),
+                               np.asarray(fix.reconstruction()), atol=1e-8)
+
+
+def test_bucketed_rank_one_update_matches_fixed():
+    m, M = 10, 64
+    A = RNG.normal(size=(m, m))
+    A = A @ A.T
+    lam, vec = np.linalg.eigh(A)
+    L = np.zeros(M)
+    U = np.eye(M)
+    L[:m] = lam
+    U[:m, :m] = vec
+    L = rankone.sentinelize(jnp.asarray(L), jnp.int32(m), jnp.float64(0.0))
+    v = np.zeros(M)
+    v[:m] = RNG.normal(size=m)
+    Lf, Uf = rankone.rank_one_update(jnp.asarray(L), jnp.asarray(U),
+                                     jnp.asarray(v), jnp.float64(1.1),
+                                     jnp.int32(m))
+    Lb, Ub = buckets.rank_one_update(jnp.asarray(L), jnp.asarray(U),
+                                     jnp.asarray(v), jnp.float64(1.1),
+                                     jnp.int32(m), min_bucket=16)
+    np.testing.assert_allclose(np.asarray(Lb[:m]), np.asarray(Lf[:m]),
+                               atol=1e-10)
+    np.testing.assert_allclose(np.abs(np.asarray(Ub[:m, :m])),
+                               np.abs(np.asarray(Uf[:m, :m])), atol=1e-10)
+    # outside the bucket: untouched identity
+    np.testing.assert_allclose(np.asarray(Ub[16:, 16:]), np.eye(M - 16))
+
+
+def test_bucketed_add_landmark_matches_fixed():
+    X = RNG.normal(size=(30, 4))
+    x_all = jnp.asarray(X)
+    fix = nystrom.init_nystrom(x_all, x_all[:4], 32, SPEC,
+                               dtype=jnp.float64)
+    buk = nystrom.init_nystrom(x_all, x_all[:4], 32, SPEC,
+                               dtype=jnp.float64)
+    for i in range(4, 20):
+        fix = nystrom.add_landmark(fix, x_all, x_all[i], SPEC)
+        buk = buckets.add_landmark(buk, x_all, x_all[i], SPEC, min_bucket=8)
+    np.testing.assert_allclose(np.asarray(buk.Knm), np.asarray(fix.Knm),
+                               atol=1e-10)
+    np.testing.assert_allclose(
+        np.asarray(nystrom.reconstruct_tilde(buk)),
+        np.asarray(nystrom.reconstruct_tilde(fix)), atol=1e-7)
+
+
+def test_capacity_exhaustion_raises():
+    X = RNG.normal(size=(10, 3))
+    buk = inkpca.KPCAStream(jnp.asarray(X[:4]), 8, SPEC, dtype=jnp.float64,
+                            dispatch="bucketed", min_bucket=4)
+    buk.update_block(jnp.asarray(X[4:8]))
+    with pytest.raises(ValueError):
+        buk.update(jnp.asarray(X[8]))
+
+
+# ------------------------------------------------- fused pair equivalence --
+def test_fused_pair_stream_matches_sequential():
+    """matmul='jnp2' (fused double rotation) must track the sequential
+    two-update path through both algorithms."""
+    X = RNG.normal(size=(24, 4))
+    for adjusted in (True, False):
+        seq = inkpca.KPCAStream(jnp.asarray(X[:4]), 32, SPEC,
+                                adjusted=adjusted, dtype=jnp.float64)
+        fus = inkpca.KPCAStream(jnp.asarray(X[:4]), 32, SPEC,
+                                adjusted=adjusted, dtype=jnp.float64,
+                                matmul="jnp2")
+        seq.update_block(jnp.asarray(X[4:]))
+        fus.update_block(jnp.asarray(X[4:]))
+        np.testing.assert_allclose(np.asarray(fus.reconstruction()),
+                                   np.asarray(seq.reconstruction()),
+                                   atol=1e-7)

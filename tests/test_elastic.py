@@ -5,6 +5,9 @@ import os
 import subprocess
 import sys
 import textwrap
+import pytest
+
+pytestmark = pytest.mark.slow  # model-zoo / driver integration tier
 
 
 def test_reshard_4_to_2_devices(tmp_path):

@@ -117,6 +117,7 @@ def test_rank_deficient_stream_stays_finite():
     assert np.abs(lam_inc[-3:] - lam_ref[-3:]).max() / scale < 1e-2
 
 
+@pytest.mark.slow
 def test_drift_stays_small_over_long_stream():
     """Paper Fig. 1: drift of the incremental reconstruction is small."""
     X, spec = _data(n=60, d=5)

@@ -34,6 +34,109 @@ def test_eigvec_rotate_sweep(M, dtype):
     assert np.isfinite(np.asarray(out, np.float64)).all()
 
 
+def _padded_rotation_inputs(M, m, extra_shift=0.4):
+    """Inputs honoring the rankone padding contract: U identity beyond the
+    active block, zhat/inv zero and d/lam sentinel beyond m."""
+    U = np.eye(M, dtype=np.float32)
+    q, _ = np.linalg.qr(RNG.normal(size=(m, m)))
+    U[:m, :m] = q
+    mask = np.arange(M) < m
+    z = np.where(mask, RNG.normal(size=M), 0.0)
+    d = np.sort(RNG.normal(size=M))
+    lam = d + extra_shift
+    inv = RNG.uniform(0.5, 2.0, size=M)
+    to = lambda v: jnp.asarray(v, jnp.float32)
+    return (to(U), to(z), to(np.where(mask, d, 2e30)),
+            to(np.where(mask, lam, 1e30)), to(np.where(mask, inv, 0.0)))
+
+
+@pytest.mark.parametrize("M,m", [(200, 70), (256, 130), (300, 257)])
+def test_eigvec_rotate_grid_pruning(M, m):
+    """Pruned grid (num_active=m, m NOT a multiple of the block) must match
+    the unpruned reference on all rows of the active columns, and return
+    zeros beyond the active tile range."""
+    u, z, d, lam, inv = _padded_rotation_inputs(M, m)
+    block = 64
+    out = eigvec_rotate(u, z, d, lam, inv, jnp.int32(m), interpret=True,
+                        block=block)
+    ref = eigvec_rotate_ref(u, z, d, lam, inv)
+    np.testing.assert_allclose(np.asarray(out[:, :m], np.float64),
+                               np.asarray(ref[:, :m], np.float64),
+                               rtol=5e-3, atol=5e-3)
+    g = -(-m // block)
+    tiles = -(-M // block)
+    if g < tiles:
+        assert np.abs(np.asarray(out[:, g * block:])).max() == 0.0
+
+
+def test_eigvec_rotate2_matches_two_rotations():
+    """Fused double rotation == two sequential single rotations (and the
+    dense ref), including deflated identity columns with a permuted cid."""
+    from repro.kernels.eigvec_update.eigvec_update import eigvec_rotate2
+    from repro.kernels.eigvec_update.ref import (cauchy_factor_ref,
+                                                 eigvec_rotate2_ref)
+    M, m, block = 200, 70, 64
+    u, z1, d1, lam1, inv1 = _padded_rotation_inputs(M, m)
+    _, z2, d2, lam2, inv2 = _padded_rotation_inputs(M, m, extra_shift=0.9)
+    defl1 = jnp.zeros(M, jnp.float32).at[5].set(1.0)
+    defl2 = jnp.zeros(M, jnp.float32).at[9].set(1.0)
+    cid1 = jnp.arange(M, dtype=jnp.int32).at[5].set(12)
+    cid2 = jnp.arange(M, dtype=jnp.int32)
+    args = (z1, d1, lam1, inv1, defl1, cid1, z2, d2, lam2, inv2, defl2,
+            cid2)
+
+    ref = eigvec_rotate2_ref(u, *args)
+    # two sequential dense rotations, spelled out
+    W1 = cauchy_factor_ref(z1, d1, lam1, inv1, defl1, cid1)
+    W2 = cauchy_factor_ref(z2, d2, lam2, inv2, defl2, cid2)
+    np.testing.assert_allclose(np.asarray((u @ W1) @ W2), np.asarray(ref))
+
+    for na in (None, jnp.int32(m)):
+        out = eigvec_rotate2(u, *args, na, interpret=True, block=block)
+        np.testing.assert_allclose(np.asarray(out[:, :m], np.float64),
+                                   np.asarray(ref[:, :m], np.float64),
+                                   rtol=5e-3, atol=5e-3)
+
+
+def test_rank_one_update_pair_matches_sequential_pallas():
+    """rank_one_update_pair(matmul='pallas') through the interpret-mode
+    fused kernel == two sequential jnp updates."""
+    import os
+    from repro.core import rankone
+    m, M = 10, 16
+    A = RNG.normal(size=(m, m))
+    A = A @ A.T
+    lam, vec = np.linalg.eigh(A)
+    L = np.zeros(M)
+    U = np.eye(M)
+    L[:m] = lam
+    U[:m, :m] = vec
+    L = rankone.sentinelize(jnp.asarray(L, jnp.float32), jnp.int32(m),
+                            jnp.float32(0.0))
+    v1 = np.zeros(M)
+    v1[:m] = RNG.normal(size=m)
+    v2 = np.zeros(M)
+    v2[:m] = RNG.normal(size=m)
+    La, Ua = rankone.rank_one_update(
+        L, jnp.asarray(U, jnp.float32), jnp.asarray(v1, jnp.float32),
+        jnp.float32(1.1), jnp.int32(m), precise=False)
+    La, Ua = rankone.rank_one_update(
+        La, Ua, jnp.asarray(v2, jnp.float32), jnp.float32(-1.1),
+        jnp.int32(m), precise=False)
+    os.environ["REPRO_PALLAS_FORCE"] = "interpret"
+    try:
+        Lp, Up = rankone.rank_one_update_pair(
+            L, jnp.asarray(U, jnp.float32), jnp.asarray(v1, jnp.float32),
+            jnp.float32(1.1), jnp.asarray(v2, jnp.float32),
+            jnp.float32(-1.1), jnp.int32(m), matmul="pallas", precise=False)
+    finally:
+        os.environ["REPRO_PALLAS_FORCE"] = "ref"
+    np.testing.assert_allclose(np.asarray(Lp[:m]), np.asarray(La[:m]),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.abs(np.asarray(Up[:m, :m])),
+                               np.abs(np.asarray(Ua[:m, :m])), atol=1e-3)
+
+
 @pytest.mark.parametrize("n,m,d", [(64, 64, 8), (150, 90, 17), (129, 257, 33)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_rbf_gram_sweep(n, m, d, dtype):

@@ -4,6 +4,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import kernels_fn as kf, krr
+import pytest
 
 RNG = np.random.default_rng(11)
 
@@ -39,6 +40,7 @@ def test_krr_predicts_heldout():
     assert mse < 0.5 * var, (mse, var)   # clearly better than the mean
 
 
+@pytest.mark.slow
 def test_lambda_sweep_is_cheap_and_loocv_sane():
     X, y, spec = _problem(n=40)
     state = krr.init_krr(jnp.asarray(X[:8]), jnp.asarray(y[:8]), 40, spec)
@@ -53,6 +55,7 @@ def test_lambda_sweep_is_cheap_and_loocv_sane():
     assert min(scores) < scores[-1]
 
 
+@pytest.mark.slow
 def test_loocv_matches_brute_force():
     X, y, spec = _problem(n=20)
     lam = 0.1

@@ -10,6 +10,9 @@ from repro.models import lm
 from repro.models.config import ArchConfig
 from repro.optim import make_optimizer
 from repro.optim.schedules import ScheduleConfig, make_schedule
+import pytest
+
+pytestmark = pytest.mark.slow  # model-zoo / driver integration tier
 
 
 def _train(cfg, opt_name, steps=40, lr=3e-3, accum=1):

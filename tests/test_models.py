@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # model-zoo / driver integration tier
+
 from repro.models import lm, ssm, xlstm
 from repro.models.config import ArchConfig, MoEConfig
 

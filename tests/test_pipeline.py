@@ -11,6 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.pipeline import pipeline_apply
+import pytest
 
 
 def _stage_fn(p, x):
@@ -28,6 +29,7 @@ def test_single_stage_identity():
     np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-6)
 
 
+@pytest.mark.slow
 def test_multi_stage_subprocess():
     script = textwrap.dedent("""
         import os

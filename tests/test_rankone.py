@@ -1,9 +1,37 @@
-"""Unit + property tests for the rank-one eigendecomposition update (§3.2)."""
+"""Unit + property tests for the rank-one eigendecomposition update (§3.2).
+
+The property tests need ``hypothesis``; when it is absent (the container
+does not ship it) they are skipped via no-op decorator stand-ins so the
+deterministic tests still collect and run.
+"""
 import numpy as np
 import jax.numpy as jnp
 import jax
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - exercised in the container
+    HAVE_HYPOTHESIS = False
+
+    def given(**kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(**kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _St:
+        """Stand-in for hypothesis.strategies; decorators skip anyway."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _St()
 
 from repro.core import rankone
 

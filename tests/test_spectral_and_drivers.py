@@ -3,6 +3,8 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow  # model-zoo / driver integration tier
+
 from repro.spectral import SpectralMonitor
 
 

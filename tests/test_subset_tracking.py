@@ -4,10 +4,12 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import batch, inkpca, kernels_fn as kf
+import pytest
 
 RNG = np.random.default_rng(21)
 
 
+@pytest.mark.slow
 def test_truncated_stream_tracks_dominant_eigenvalues():
     n, d, k = 40, 4, 8
     X = RNG.normal(size=(n, d))
