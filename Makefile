@@ -1,14 +1,23 @@
 # Developer entry points.  `make check` is the pre-push gate: the fast test
-# tier (slow-marked integration tests deselected) plus a smoke benchmark —
-# ~2 minutes on an unloaded CPU container (the slow tier alone is ~5 min).
+# tier (slow-marked integration tests deselected) plus smoke benchmarks —
+# ~3 minutes on an unloaded CPU container (the slow tier alone is ~5 min).
 
 PYTHONPATH := src
 
-.PHONY: check test test-all bench bench-quick
+.PHONY: check test test-all bench bench-quick bench-smoke
 
 check:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -q -m "not slow" -x
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --quick --only flops_table
+	$(MAKE) bench-smoke
+
+# Toy-size perf-driver smoke: exercises the update-scaling and multi-tenant
+# benchmark drivers end-to-end and fails on non-finite output, so the perf
+# harness can't silently rot between full benchmark runs.  Never overwrites
+# the tracked BENCH_*.json numbers.
+bench-smoke:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.bench_update_scaling --smoke
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.bench_multitenant --smoke
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -q -m "not slow"

@@ -14,8 +14,10 @@ Three paths are timed per m:
 Emits ``BENCH_update_scaling.json`` at the repo root so the perf
 trajectory is tracked across PRs.  CPU wall-clock is indicative; the
 m-scaling shape (staircase across bucket crossings) is the claim.
+``--smoke`` runs a toy configuration, skips the JSON, and exits non-zero
+on non-finite output (the ``make bench-smoke`` gate).
 
-    PYTHONPATH=src python -m benchmarks.bench_update_scaling [--quick]
+    PYTHONPATH=src python -m benchmarks.bench_update_scaling [--quick|--smoke]
 """
 from __future__ import annotations
 
@@ -33,7 +35,10 @@ OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_update_scaling.json"
 
 
 def _time(fn, reps: int) -> float:
-    jax.block_until_ready(fn())          # compile + warm caches
+    out = fn()
+    jax.block_until_ready(out)           # compile + warm caches
+    if not bool(jnp.isfinite(out).all()):
+        raise SystemExit("[update_scaling] non-finite update output")
     t0 = time.perf_counter()
     for _ in range(reps):
         out = fn()
@@ -51,9 +56,12 @@ def _state_at(X, m: int, capacity: int, spec) -> inkpca.KPCAState:
     return state
 
 
-def main(capacity: int = 1024, reps: int = 3, quick: bool = False) -> dict:
+def main(capacity: int = 1024, reps: int = 3, quick: bool = False,
+         smoke: bool = False) -> dict:
     if quick:
         capacity, reps = 512, 2
+    if smoke:
+        capacity, reps = 128, 1
     rng = np.random.default_rng(0)
     d = 16
     spec = kf.KernelSpec(name="rbf", sigma=float(d))
@@ -93,6 +101,9 @@ def main(capacity: int = 1024, reps: int = 3, quick: bool = False) -> dict:
         "sweep": sweep,
         "speedup_bucketed_at_m128": (at128 and at128["speedup_bucketed"]),
     }
+    if smoke:
+        print("[update_scaling] smoke OK (finite), JSON unchanged")
+        return result
     OUT_PATH.write_text(json.dumps(result, indent=2) + "\n")
     print(f"[update_scaling] wrote {OUT_PATH}")
     if at128:
@@ -105,5 +116,7 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy sizes, no JSON, non-zero exit on non-finite")
     args = ap.parse_args()
-    main(quick=args.quick)
+    main(quick=args.quick, smoke=args.smoke)

@@ -6,6 +6,8 @@
   timing          (supporting)  measured incremental-vs-batch scaling
   update_scaling  (supporting)  per-update cost vs active m: fixed-capacity
                                 vs bucketed dispatch (BENCH_update_scaling.json)
+  multitenant     (supporting)  vmapped multi-tenant ingest vs a Python loop
+                                over B streams (BENCH_multitenant.json)
   roofline        assignment    dry-run roofline table aggregation
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
@@ -24,8 +26,8 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import bench_update_scaling, fig1_drift, fig2_nystrom, \
-        flops_table, roofline, timing
+    from benchmarks import bench_multitenant, bench_update_scaling, \
+        fig1_drift, fig2_nystrom, flops_table, roofline, timing
 
     benches = {
         "flops_table": lambda: flops_table.main(),
@@ -37,6 +39,8 @@ def main() -> None:
         "timing": lambda: timing.main(),
         "update_scaling": lambda: bench_update_scaling.main(
             quick=args.quick),
+        "multitenant": lambda: bench_multitenant.main(
+            rounds=10 if args.quick else 20),
         "roofline": lambda: roofline.main(),
     }
     failures = []

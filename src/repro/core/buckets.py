@@ -1,196 +1,72 @@
-"""Bucketed dispatch: per-update cost that scales with the active count m.
+"""Back-compat shims for bucketed dispatch — the logic lives in the engine.
 
-The fixed-capacity design in ``rankone.py`` / ``inkpca.py`` compiles one
-XLA program for the whole stream, but every step then pays the O(M³)
-eigenvector rotation and O(M²) secular solve at *capacity* M.  A stream
-that grows m from 16 to 1024 inside a capacity-4096 state does ~64× the
-paper's ~8m³ flops early on.  This module restores m-dependent cost while
-keeping static shapes: updates run at the smallest power-of-two *bucket*
-capacity M_b ≥ m+1 drawn from {min_bucket, 2·min_bucket, …, M}.
-
-Capacity-vs-bucket invariants
------------------------------
-The padding convention of ``rankone.py`` makes slicing sound:
-
-* L is ascending with all inactive entries (sentinels) strictly *above*
-  the active spectrum, so the m active eigenvalues always occupy
-  ``L[:m]`` and ``L[:M_b]`` carries the active spectrum plus the lowest
-  M_b − m sentinels — still ascending, still sentinels-on-top.
-* Inactive columns of U are exact identity columns, and (U orthogonal)
-  the active columns are zero on rows ≥ m.  Hence ``U[:M_b, :M_b]``
-  loses nothing and the complement of the bucket is exactly I.
-* K1 / X are zero beyond m; S is a scalar.
-
-``slice_state`` therefore maps a capacity-M state with m < M_b active
-pairs to a *valid* capacity-M_b state, and ``scatter_state`` writes the
-updated bucket back (re-sentinelizing the tail of L so subsequent
-fixed-capacity or larger-bucket calls see the full-capacity invariant).
-
-Retrace / bucket-crossing cost model
-------------------------------------
-Each jitted update specializes on the bucket capacity, so a stream pays
-one compilation per bucket it visits — at most log2(M / min_bucket) + 1
-of them, ever.  ``update_block`` additionally specializes the scan on the
-chunk length; chunks are cut at bucket crossings, so a monotone stream
-sees at most two shapes per bucket (the fill-to-crossing chunk and the
-full-bucket chunk).  Bucket choice reads ``int(state.m)`` on the host —
-one device sync per chunk (per point for ``update``), which the scan
-amortizes.  Between crossings the semantics are exactly the fixed
-capacity ``lax.scan`` block semantics; across a crossing the state is
-re-sliced and the scan resumes, so results match the fixed path to fp
-rounding (the arithmetic is identical — padded lanes never mix with
-active lanes).
+This module used to own bucket geometry and the slice→update→scatter
+dispatch for m-scaled updates.  That machinery moved to
+``repro.core.engine`` (``UpdatePlan`` + ``Engine``), where the KPCA
+stream, the Nyström landmark path, the row-sharded distributed drivers
+and the serving layer all share it.  The functions below keep the old
+kwarg-style entry points alive for existing callers and tests; new code
+should construct an ``engine.Engine`` (or pass ``plan=`` to
+``KPCAStream``) directly.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
-import jax.numpy as jnp
 
-from repro.core import inkpca, kernels_fn as kf, rankone
+from repro.core import engine as eng
+from repro.core import inkpca, kernels_fn as kf
 
 Array = jax.Array
 
-DEFAULT_MIN_BUCKET = 128
+DEFAULT_MIN_BUCKET = eng.DEFAULT_MIN_BUCKET
+
+# Geometry + slice/scatter are re-exported verbatim from the engine layer.
+bucket_sizes = eng.bucket_sizes
+bucket_for = eng.bucket_for
+slice_state = eng.slice_state
+scatter_state = eng.scatter_state
 
 
-# ------------------------------------------------------- bucket geometry --
-def bucket_sizes(capacity: int, min_bucket: int = DEFAULT_MIN_BUCKET
-                 ) -> tuple[int, ...]:
-    """Power-of-two ladder min_bucket, 2·min_bucket, …, capped at capacity.
-
-    The capacity itself is always the top rung (even when not a power of
-    two) so every state the fixed-capacity API accepts is representable.
-    """
-    if capacity <= 0:
-        raise ValueError(f"capacity must be positive, got {capacity}")
-    sizes = []
-    b = min(min_bucket, capacity)
-    while b < capacity:
-        sizes.append(b)
-        b *= 2
-    sizes.append(capacity)
-    return tuple(sizes)
+def _plan(method: str, matmul: str, iters: int | None,
+          min_bucket: int) -> eng.UpdatePlan:
+    return eng.UpdatePlan(method=method, matmul=matmul, iters=iters,
+                          dispatch="bucketed", min_bucket=min_bucket)
 
 
-def bucket_for(m_needed: int, capacity: int,
-               min_bucket: int = DEFAULT_MIN_BUCKET) -> int:
-    """Smallest bucket that can hold ``m_needed`` active pairs."""
-    if m_needed > capacity:
-        raise ValueError(
-            f"need room for {m_needed} active pairs but capacity is "
-            f"{capacity} — grow the state before streaming more points")
-    for b in bucket_sizes(capacity, min_bucket):
-        if b >= m_needed:
-            return b
-    raise AssertionError("unreachable: capacity is always a bucket")
-
-
-# ------------------------------------------------------- slice / scatter --
-def slice_state(state: inkpca.KPCAState, Mb: int) -> inkpca.KPCAState:
-    """View the leading M_b×M_b block as a capacity-M_b state (see module
-    docstring for why this is lossless while m < M_b)."""
-    return inkpca.KPCAState(L=state.L[:Mb], U=state.U[:Mb, :Mb], m=state.m,
-                            S=state.S, K1=state.K1[:Mb], X=state.X[:Mb])
-
-
-def scatter_state(full: inkpca.KPCAState,
-                  sub: inkpca.KPCAState) -> inkpca.KPCAState:
-    """Write an updated bucket back into the fixed-capacity state."""
-    Mb = sub.L.shape[0]
-    L = full.L.at[:Mb].set(sub.L)
-    # The tail L[Mb:] still holds sentinels for the *pre-update* spectrum;
-    # regenerate so the whole array is ascending with sentinels on top.
-    L = rankone.sentinelize(L, sub.m, jnp.zeros((), L.dtype))
-    U = full.U.at[:Mb, :Mb].set(sub.U)
-    K1 = full.K1.at[:Mb].set(sub.K1)
-    X = full.X.at[:Mb].set(sub.X)
-    return inkpca.KPCAState(L=L, U=U, m=sub.m, S=sub.S, K1=K1, X=X)
-
-
-# ------------------------------------------------------ bucketed updates --
 def rank_one_update(L: Array, U: Array, v: Array, sigma: Array, m: Array,
                     *, min_bucket: int = DEFAULT_MIN_BUCKET,
-                    **kwargs) -> tuple[Array, Array]:
+                    method: str = "gu", matmul: str = "jnp",
+                    iters: int | None = None) -> tuple[Array, Array]:
     """``rankone.rank_one_update`` at bucket capacity, scattered back."""
-    M = L.shape[0]
-    Mb = bucket_for(max(int(m), 1), M, min_bucket)
-    Lb, Ub = rankone.rank_one_update(L[:Mb], U[:Mb, :Mb], v[:Mb], sigma, m,
-                                     **kwargs)
-    L_new = rankone.sentinelize(L.at[:Mb].set(Lb), m, jnp.zeros((), L.dtype))
-    return L_new, U.at[:Mb, :Mb].set(Ub)
+    return eng.rank_one(L, U, v, sigma, m,
+                        plan=_plan(method, matmul, iters, min_bucket))
 
 
 def update(state: inkpca.KPCAState, x_new: Array, spec: kf.KernelSpec, *,
            adjusted: bool = True, method: str = "gu", matmul: str = "jnp",
-           iters: int = 62,
+           iters: int | None = None,
            min_bucket: int = DEFAULT_MIN_BUCKET) -> inkpca.KPCAState:
-    """One streaming point through Algorithm 1/2 at bucket capacity.
-
-    The kernel row is evaluated against the sliced X as well, so the whole
-    step — gram row, secular solve, rotation — is O(M_b²)/O(M_b³).
-    """
-    M = state.L.shape[0]
-    Mb = bucket_for(int(state.m) + 1, M, min_bucket)
-    sub = slice_state(state, Mb)
-    a, k_new = inkpca._masked_row(sub, x_new, spec)
-    fn = inkpca.update_adjusted if adjusted else inkpca.update_unadjusted
-    sub = fn(sub, a, k_new, x_new, method=method, matmul=matmul, iters=iters)
-    return scatter_state(state, sub)
-
-
-@partial(jax.jit,
-         static_argnames=("spec", "adjusted", "method", "matmul", "iters"))
-def _scan_chunk(sub: inkpca.KPCAState, xs: Array, spec: kf.KernelSpec,
-                adjusted: bool, method: str, matmul: str,
-                iters: int) -> inkpca.KPCAState:
-    """Fixed-capacity scan over a chunk that fits inside one bucket."""
-
-    def step(st, x_new):
-        a, k_new = inkpca._masked_row(st, x_new, spec)
-        fn = inkpca.update_adjusted if adjusted else inkpca.update_unadjusted
-        return fn(st, a, k_new, x_new, method=method, matmul=matmul,
-                  iters=iters), None
-
-    out, _ = jax.lax.scan(step, sub, xs)
-    return out
+    """One streaming point through Algorithm 1/2 at bucket capacity."""
+    engine = eng.Engine(spec, _plan(method, matmul, iters, min_bucket),
+                        adjusted=adjusted)
+    return engine.update(state, x_new)
 
 
 def update_block(state: inkpca.KPCAState, xs: Array, spec: kf.KernelSpec, *,
                  adjusted: bool = True, method: str = "gu",
-                 matmul: str = "jnp", iters: int = 62,
+                 matmul: str = "jnp", iters: int | None = None,
                  min_bucket: int = DEFAULT_MIN_BUCKET) -> inkpca.KPCAState:
     """Stream a block of points: scan within a bucket, re-bucket at
-    crossings (see the retrace cost model in the module docstring)."""
-    M = state.L.shape[0]
-    n = xs.shape[0]
-    i = 0
-    while i < n:
-        m = int(state.m)
-        Mb = bucket_for(m + 1, M, min_bucket)
-        take = min(Mb - m, n - i)          # steps until the bucket fills
-        sub = slice_state(state, Mb)
-        sub = _scan_chunk(sub, xs[i:i + take], spec, adjusted, method,
-                          matmul, iters)
-        state = scatter_state(state, sub)
-        i += take
-    return state
+    crossings (see the cost model in engine.py)."""
+    engine = eng.Engine(spec, _plan(method, matmul, iters, min_bucket),
+                        adjusted=adjusted)
+    return engine.update_block(state, xs)
 
 
-# ------------------------------------------------------ Nyström landmarks --
 def add_landmark(state, x_all: Array, x_new: Array, spec: kf.KernelSpec, *,
-                 method: str = "gu", matmul: str = "jnp", iters: int = 62,
+                 method: str = "gu", matmul: str = "jnp", iters: int | None = None,
                  min_bucket: int = DEFAULT_MIN_BUCKET):
-    """Bucketed ``nystrom.add_landmark``: the O(M³) eigensystem update and
-    the O(n·M) column write both run at bucket capacity."""
-    from repro.core import nystrom
-
-    M = state.kpca.L.shape[0]
-    Mb = bucket_for(int(state.kpca.m) + 1, M, min_bucket)
-    sub = nystrom.NystromState(kpca=slice_state(state.kpca, Mb),
-                               Knm=state.Knm[:, :Mb])
-    sub = nystrom.add_landmark(sub, x_all, x_new, spec, method=method,
-                               matmul=matmul, iters=iters)
-    return nystrom.NystromState(kpca=scatter_state(state.kpca, sub.kpca),
-                                Knm=state.Knm.at[:, :Mb].set(sub.Knm))
+    """Bucketed ``nystrom.add_landmark`` via the engine."""
+    engine = eng.Engine(spec, _plan(method, matmul, iters, min_bucket),
+                        adjusted=False)
+    return engine.add_landmark(state, x_all, x_new)

@@ -7,10 +7,20 @@ Sharding scheme (designed for the production mesh in ``repro.launch.mesh``):
   all O(M) bookkeeping are replicated.
 * One update needs a single collective: z = psum_p(U_p^T v_p)  (M floats).
   The secular solve (O(M^2) VPU) is replicated — cheaper than communicating.
-  The Cauchy factor W is built replicated from (d, roots, ẑ); each device
+  The Cauchy factor is built replicated from O(M) vectors; each device
   rotates only its row block: U_p <- U_p @ W  (local matmul, no comm).
 * The Nyström extension row-shards K_{n,m} over 'data' as well; the
   reconstruction B diag(1/λ) B^T is local per row-block.
+
+All updates are constructed from an ``engine.UpdatePlan`` — the same
+object that drives the local and serving paths — so the sharded body
+shares ``rankone``'s factor pipeline verbatim: ``plan.matmul`` selects the
+rotation backend (the Pallas kernel with active-tile pruning engages
+whenever the local row block is square, i.e. P == 1 meshes or per-host
+sub-meshes; multi-device row blocks take the dense route), and the fused
+spellings ('jnp2'/'pallas2') route ±sigma pairs through
+``make_sharded_update_pair`` — ONE psum for both z vectors instead of two
+sequential collectives, with the O(M³/P) rotation applied once.
 
 Per update the communication volume is M floats (one all-reduce) against
 O(M^2 / P) local flops — strongly compute-bound for M ≳ P, which is what the
@@ -24,53 +34,89 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import engine as eng
 from repro.core import kernels_fn as kf, rankone
 from repro.distributed.sharding import shard_map as _shard_map
 
 Array = jax.Array
 
 
-def _rank_one_update_sharded(L, U_local, v_local, sigma, m, *, axis: str,
-                             iters: int, method: str):
+def _rank_one_update_sharded(L, U_local, v_local, sigma, m, *,
+                             axis: str, plan: eng.UpdatePlan):
     """Body run under shard_map: U_local is a row block of U.
 
     The solve pipeline (deflation thresholds, flip identity, secular
     bisection) is ``rankone._solve_factor`` — the same one the local and
     fused paths use — run replicated on every device; no cluster-merge
-    (its reflector would need a second collective).  Only the row-block
-    rotation is local.
+    (the fused pair path's fallback would need collectives inside a cond).
+    Only the row-block rotation is local; ``rankone._apply_factor`` routes
+    it through the Pallas kernel with active-tile pruning when the block
+    is square, dense Cauchy factors otherwise.
     """
     M = L.shape[0]
-    dtype = L.dtype
     mask = rankone.active_mask(M, m)
 
     z = jax.lax.psum(U_local.T @ v_local, axis)
     room = jnp.abs(sigma) * jnp.sum(z * z)
     d_sent = rankone.sentinelize(L, m, room)
     scale = jnp.max(jnp.abs(jnp.where(mask, L, 0.0))) + room + 1e-30
-    f = rankone._solve_factor(d_sent, z, sigma, m, scale, iters=iters,
-                              method=method, precise=False)
-
-    from repro.kernels.eigvec_update.ref import cauchy_factor_ref
-    Wn = cauchy_factor_ref(f.z, f.d, f.lam, f.inv,
-                           f.defl.astype(f.z.dtype)).astype(dtype)
-    U_new = U_local @ Wn            # local row-block rotation, no comm
+    f = rankone._solve_factor(d_sent, z, sigma, m, scale,
+                              iters=eng.resolve_iters(plan.iters, L.dtype),
+                              method=plan.method, precise=plan.precise)
+    U_new = rankone._apply_factor(U_local, f, mask, m,
+                                  matmul=plan.inner_matmul)
     perm = jnp.argsort(f.L_new)     # deflation can locally reorder
     return f.L_new[perm], U_new[:, perm]
 
 
-def make_sharded_update(mesh, *, axis: str = "data", iters: int = 62,
-                        method: str = "gu"):
+def _rank_one_update_pair_sharded(L, U_local, v1_local, sigma1, v2_local,
+                                  sigma2, m, *, axis: str,
+                                  plan: eng.UpdatePlan):
+    """Fused ±sigma pair under shard_map: ONE psum carries both z vectors,
+    z₂ = U₁ᵀv₂ comes from the Cauchy transpose-matvec (replicated, no
+    second collective), and the local row block is rotated once by both
+    factors (``rankone._pair_rotate_block``)."""
+    Z = jax.lax.psum(U_local.T @ jnp.stack([v1_local, v2_local], axis=1),
+                     axis)
+    pf = rankone._pair_solve(L, Z[:, 0], sigma1, Z[:, 1], sigma2, m,
+                             iters=eng.resolve_iters(plan.iters, L.dtype),
+                             method=plan.method, precise=plan.precise)
+    U_new = rankone._pair_rotate_block(U_local, pf, m,
+                                       matmul=plan.inner_matmul)
+    return pf.L_new[pf.perm2], U_new
+
+
+def make_sharded_update(mesh, *, axis: str = "data",
+                        plan: eng.UpdatePlan = eng.DEFAULT_PLAN):
     """Build a pjit-compatible sharded rank-one update over ``mesh``.
 
     Returns f(L, U, v, sigma, m) with U sharded P(axis, None); everything
     else replicated.  Composable under jit with other computation.
     """
-    body = partial(_rank_one_update_sharded, axis=axis, iters=iters,
-                   method=method)
+    body = partial(_rank_one_update_sharded, axis=axis, plan=plan)
     return _shard_map(
         body, mesh=mesh,
         in_specs=(P(), P(axis, None), P(axis), P(), P()),
+        out_specs=(P(), P(axis, None)),
+        check_vma=False,
+    )
+
+
+def make_sharded_update_pair(mesh, *, axis: str = "data",
+                             plan: eng.UpdatePlan = eng.DEFAULT_PLAN):
+    """Sharded fused ±sigma pair: f(L, U, v1, sigma1, v2, sigma2, m).
+
+    Halves the collectives of two sequential sharded updates (one psum for
+    both z vectors) and reads/writes each U row block once.  Like the
+    local fused path it skips the dlaed2 cluster-merge; unlike the local
+    path there is no cond fallback (collectives inside a cond branch would
+    deadlock a multi-device mesh), so pathologically clustered spectra
+    should use two ``make_sharded_update`` calls instead.
+    """
+    body = partial(_rank_one_update_pair_sharded, axis=axis, plan=plan)
+    return _shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(axis, None), P(axis), P(), P(axis), P(), P()),
         out_specs=(P(), P(axis, None)),
         check_vma=False,
     )

@@ -1,0 +1,640 @@
+"""Unified update engine: one code path from kernel row to scatter.
+
+Every consumer of the paper's rank-one eigendecomposition updates —
+``inkpca.KPCAStream`` (Algorithms 1/2), ``nystrom.add_landmark`` (§4), the
+row-sharded ``core/distributed.py`` drivers, and the ``serve.py`` streaming
+service — used to re-thread its own ``method``/``matmul``/``iters``/
+``dispatch`` kwargs, and only the first of them got bucketed dispatch and
+the fused ±sigma pair.  This module centralizes that plumbing:
+
+* ``UpdatePlan`` — a hashable (jit-static) description of *how* updates
+  run: secular method, rotation backend, bisection iterations, bucket
+  policy, fused-pair merge-fallback policy, shrink compaction.
+* ``Engine`` — owns slice→update→scatter, bucket selection, and the
+  fused-pair vs sequential choice for a single stream (KPCA or Nyström).
+* ``StreamBatch`` — vmapped multi-tenant streaming: one stacked
+  ``KPCAState`` advances B independent tenants per device step, bucketed
+  at the cohort maximum active count.
+
+Bucket geometry and invariants
+------------------------------
+The padding convention of ``rankone.py`` makes slicing sound:
+
+* L is ascending with all inactive entries (sentinels) strictly *above*
+  the active spectrum, so the m active eigenvalues always occupy
+  ``L[:m]`` and ``L[:M_b]`` carries the active spectrum plus the lowest
+  M_b − m sentinels — still ascending, still sentinels-on-top.
+* Inactive columns of U are exact identity columns, and (U orthogonal)
+  the active columns are zero on rows ≥ m.  Hence ``U[:M_b, :M_b]``
+  loses nothing and the complement of the bucket is exactly I.
+* K1 / X are zero beyond m; S is a scalar.
+
+``slice_state`` therefore maps a capacity-M state with m < M_b active
+pairs to a *valid* capacity-M_b state, and ``scatter_state`` writes the
+updated bucket back (re-sentinelizing the tail of L).  The one exception
+is a *truncated* state: ``Engine.truncate`` keeps eigenvector support on
+the pre-truncation rows, so the engine buckets at the row-support bound
+(``min_rows``) until ``compact`` re-expresses the system on the leading
+rows — see those methods.
+
+Retrace / bucket-crossing cost model
+------------------------------------
+Each jitted update specializes on the bucket capacity, so a stream pays
+one compilation per bucket it visits — at most log2(M / min_bucket) + 1
+of them, ever.  ``update_block`` additionally specializes the scan on the
+chunk length; chunks are cut at bucket crossings, so a monotone stream
+sees at most two shapes per bucket.  Bucket choice reads ``int(m)`` on
+the host — one device sync per chunk (per point for ``update``), which
+the scan amortizes.  ``UpdatePlan.kernel_plan()`` normalizes the fields
+that do not affect numerics before they reach a jitted function, so
+switching dispatch or bucket ladder never retraces the update kernels.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kernels_fn as kf, rankone
+
+Array = jax.Array
+
+DEFAULT_MIN_BUCKET = 128
+
+
+class UpdatePlan(NamedTuple):
+    """How updates run — hashable, so usable as a jit static argument.
+
+    method:         secular-solve eigenvector variant ("gu" | "bns")
+    matmul:         rotation backend — "jnp" | "pallas" (sequential ±sigma
+                    updates) or "jnp2" | "pallas2" (fused double rotation)
+    iters:          fixed bisection iteration count; None (default) resolves
+                    per state dtype — 62 for f64, 32 for f32 (bracket widths
+                    shrink 2^-iters relative, so 32 is still ~500x beyond
+                    f32 resolution; see ``resolve_iters``)
+    dispatch:       "fixed" (capacity-M every step) | "bucketed"
+    min_bucket:     smallest rung of the power-of-two bucket ladder
+    merge_fallback: cond-guard the fused pair back to the sequential path
+                    when a dlaed2 cluster-merge fires (safe on clustered
+                    spectra; the O(M³) rotation is what's conditional).
+                    Note: under vmap (StreamBatch) lax.cond lowers to a
+                    select that executes BOTH branches — fused multi-tenant
+                    plans should set merge_fallback=False or use the
+                    sequential matmul spellings
+    compact_shrink: default for Engine.truncate(compact=...) — re-express
+                    a truncated state on its leading rows and shrink the
+                    arrays to the active bucket
+    precise:        solve the secular systems in f64 when x64 is enabled
+    """
+
+    method: str = "gu"
+    matmul: str = "jnp"
+    iters: int | None = None
+    dispatch: str = "fixed"
+    min_bucket: int = DEFAULT_MIN_BUCKET
+    merge_fallback: bool = True
+    compact_shrink: bool = False
+    precise: bool = True
+
+    @property
+    def fused(self) -> bool:
+        return self.matmul in ("jnp2", "pallas2")
+
+    @property
+    def inner_matmul(self) -> str:
+        """The single-rotation backend behind a possibly-fused spelling."""
+        return {"jnp2": "jnp", "pallas2": "pallas"}.get(self.matmul,
+                                                        self.matmul)
+
+    def kernel_plan(self) -> "UpdatePlan":
+        """Normalize fields that do not change update numerics, so jitted
+        updates are cached once per (method, matmul, iters, ...) rather
+        than once per dispatch/bucket-ladder combination."""
+        return self._replace(dispatch="fixed",
+                             min_bucket=DEFAULT_MIN_BUCKET,
+                             compact_shrink=False)
+
+
+DEFAULT_PLAN = UpdatePlan()
+
+
+def resolve_iters(iters: int | None, dtype) -> int:
+    """Bisection iteration count for a plan: explicit value, or the dtype
+    default (the bracket width shrinks 2^-iters relative per root, so f32
+    needs far fewer passes than the f64-calibrated 62)."""
+    if iters is not None:
+        return iters
+    return 62 if jnp.dtype(dtype).itemsize >= 8 else 32
+
+
+# ------------------------------------------------------- bucket geometry --
+def bucket_sizes(capacity: int, min_bucket: int = DEFAULT_MIN_BUCKET
+                 ) -> tuple[int, ...]:
+    """Power-of-two ladder min_bucket, 2·min_bucket, …, capped at capacity.
+
+    The capacity itself is always the top rung (even when not a power of
+    two) so every state the fixed-capacity API accepts is representable.
+    """
+    if capacity <= 0:
+        raise ValueError(f"capacity must be positive, got {capacity}")
+    sizes = []
+    b = min(min_bucket, capacity)
+    while b < capacity:
+        sizes.append(b)
+        b *= 2
+    sizes.append(capacity)
+    return tuple(sizes)
+
+
+def bucket_for(m_needed: int, capacity: int,
+               min_bucket: int = DEFAULT_MIN_BUCKET) -> int:
+    """Smallest bucket that can hold ``m_needed`` active pairs."""
+    if m_needed > capacity:
+        raise ValueError(
+            f"need room for {m_needed} active pairs but capacity is "
+            f"{capacity} — grow the state before streaming more points")
+    for b in bucket_sizes(capacity, min_bucket):
+        if b >= m_needed:
+            return b
+    raise AssertionError("unreachable: capacity is always a bucket")
+
+
+# ------------------------------------------------------- slice / scatter --
+def slice_state(state, Mb: int):
+    """View the leading M_b×M_b block as a capacity-M_b state (see module
+    docstring for why this is lossless while m < M_b)."""
+    return state._replace(L=state.L[:Mb], U=state.U[:Mb, :Mb],
+                          K1=state.K1[:Mb], X=state.X[:Mb])
+
+
+def scatter_state(full, sub):
+    """Write an updated bucket back into the fixed-capacity state."""
+    Mb = sub.L.shape[0]
+    L = full.L.at[:Mb].set(sub.L)
+    # The tail L[Mb:] still holds sentinels for the *pre-update* spectrum;
+    # regenerate so the whole array is ascending with sentinels on top.
+    L = rankone.sentinelize(L, sub.m, jnp.zeros((), L.dtype))
+    return full._replace(L=L, U=full.U.at[:Mb, :Mb].set(sub.U), m=sub.m,
+                         S=sub.S, K1=full.K1.at[:Mb].set(sub.K1),
+                         X=full.X.at[:Mb].set(sub.X))
+
+
+def _slice_stacked(states, Mb: int):
+    """Leading-axis (tenant-batched) version of ``slice_state``."""
+    return states._replace(L=states.L[:, :Mb], U=states.U[:, :Mb, :Mb],
+                           K1=states.K1[:, :Mb], X=states.X[:, :Mb])
+
+
+def _scatter_stacked(full, sub):
+    return jax.vmap(scatter_state)(full, sub)
+
+
+# ------------------------------------------------------ shared primitives --
+def masked_row(state, x_new: Array, spec: kf.KernelSpec
+               ) -> tuple[Array, Array]:
+    """Kernel row against stored points, zeroed beyond the active count."""
+    a_full = kf.kernel_row(x_new, state.X, spec=spec)
+    mask = rankone.active_mask(state.X.shape[0], state.m)
+    a = jnp.where(mask, a_full, 0.0)
+    k_new = kf.gram_block(x_new[None], x_new[None], spec=spec)[0, 0]
+    return a, k_new
+
+
+def apply_pair(L: Array, U: Array, v1: Array, sigma1: Array, v2: Array,
+               sigma2: Array, m: Array, *, plan: UpdatePlan
+               ) -> tuple[Array, Array]:
+    """Apply a ±sigma update pair under ``plan``: one fused double rotation
+    (matmul 'jnp2'/'pallas2'; cond-guarded back to sequential when a
+    cluster-merge fires and plan.merge_fallback is set) or two sequential
+    rank-one updates."""
+    iters = resolve_iters(plan.iters, L.dtype)
+    if plan.fused:
+        return rankone.rank_one_update_pair(
+            L, U, v1, sigma1, v2, sigma2, m, method=plan.method,
+            matmul=plan.inner_matmul, iters=iters, precise=plan.precise,
+            merge_fallback=plan.merge_fallback)
+    L, U = rankone.rank_one_update(L, U, v1, sigma1, m, method=plan.method,
+                                   matmul=plan.matmul, iters=iters,
+                                   precise=plan.precise)
+    return rankone.rank_one_update(L, U, v2, sigma2, m, method=plan.method,
+                                   matmul=plan.matmul, iters=iters,
+                                   precise=plan.precise)
+
+
+def rank_one(L: Array, U: Array, v: Array, sigma: Array, m: Array, *,
+             plan: UpdatePlan) -> tuple[Array, Array]:
+    """One ``rankone.rank_one_update`` under ``plan``: run at the active
+    bucket and scatter back (no kernel involved — usable without an
+    Engine)."""
+    M = L.shape[0]
+    Mb = (M if plan.dispatch != "bucketed"
+          else bucket_for(max(int(m), 1), M, plan.min_bucket))
+    kwargs = dict(method=plan.method, matmul=plan.inner_matmul,
+                  iters=resolve_iters(plan.iters, L.dtype),
+                  precise=plan.precise)
+    if Mb == M:
+        return rankone.rank_one_update(L, U, v, sigma, m, **kwargs)
+    Lb, Ub = rankone.rank_one_update(L[:Mb], U[:Mb, :Mb], v[:Mb], sigma, m,
+                                     **kwargs)
+    L_new = rankone.sentinelize(L.at[:Mb].set(Lb), m, jnp.zeros((), L.dtype))
+    return L_new, U.at[:Mb, :Mb].set(Ub)
+
+
+def eigpairs(state) -> tuple[Array, Array]:
+    """Active (descending) eigenvalues and eigenvectors."""
+    M = state.L.shape[0]
+    mask = rankone.active_mask(M, state.m)
+    order = jnp.argsort(jnp.where(mask, -state.L, jnp.inf))
+    return state.L[order], state.U[:, order]
+
+
+def transform_state(state, x: Array, *, spec: kf.KernelSpec, adjusted: bool,
+                    n_components: int) -> Array:
+    """Project points on the leading kernel principal components (pure
+    function of the state — vmappable across tenants)."""
+    lam, vec = eigpairs(state)
+    lam = lam[:n_components]
+    vec = vec[:, :n_components]
+    krow = kf.gram_block(x.astype(state.X.dtype), state.X, spec=spec)
+    mask = rankone.active_mask(state.X.shape[0], state.m)
+    krow = jnp.where(mask[None, :], krow, 0.0)
+    if adjusted:
+        mf = state.m.astype(state.L.dtype)
+        rowmean = jnp.sum(krow, axis=1, keepdims=True) / mf
+        colmean = (state.K1 / mf)[None, :]
+        grand = state.S / mf**2
+        krow = jnp.where(mask[None, :],
+                         krow - rowmean - colmean + grand, 0.0)
+    denom = jnp.sqrt(jnp.maximum(lam, jnp.finfo(state.L.dtype).eps))
+    return (krow @ vec) / denom[None, :]
+
+
+# ------------------------------------------------------- jitted update fns --
+@partial(jax.jit, static_argnames=("spec", "adjusted", "plan"))
+def _scan_chunk(sub, xs: Array, spec: kf.KernelSpec, adjusted: bool,
+                plan: UpdatePlan):
+    """Fixed-capacity scan over a chunk that fits inside one bucket."""
+    from repro.core import inkpca
+
+    def step(st, x_new):
+        a, k_new = masked_row(st, x_new, spec)
+        fn = inkpca.update_adjusted if adjusted else inkpca.update_unadjusted
+        return fn(st, a, k_new, x_new, plan=plan), None
+
+    out, _ = jax.lax.scan(step, sub, xs)
+    return out
+
+
+@partial(jax.jit, static_argnames=("spec", "adjusted", "plan"))
+def _batched_update(states, xs: Array, spec: kf.KernelSpec,
+                    adjusted: bool, plan: UpdatePlan):
+    """One vmapped step: fold xs[i] into tenant i, all tenants active."""
+    from repro.core import inkpca
+
+    def one(st, x):
+        a, k_new = masked_row(st, x, spec)
+        fn = inkpca.update_adjusted if adjusted else inkpca.update_unadjusted
+        return fn(st, a, k_new, x, plan=plan)
+
+    return jax.vmap(one)(states, xs)
+
+
+@partial(jax.jit, static_argnames=("spec", "adjusted", "plan"))
+def _batched_update_masked(states, xs: Array, active: Array,
+                           spec: kf.KernelSpec, adjusted: bool,
+                           plan: UpdatePlan):
+    """One vmapped step: fold xs[i] into tenant i where active[i]."""
+    from repro.core import inkpca
+
+    def one(st, x, act):
+        a, k_new = masked_row(st, x, spec)
+        fn = inkpca.update_adjusted if adjusted else inkpca.update_unadjusted
+        new = fn(st, a, k_new, x, plan=plan)
+        return jax.tree.map(lambda n, o: jnp.where(act, n, o), new, st)
+
+    return jax.vmap(one)(states, xs, active)
+
+
+@partial(jax.jit, static_argnames=("spec", "adjusted", "plan"))
+def _batched_scan(states, xs: Array, spec: kf.KernelSpec, adjusted: bool,
+                  plan: UpdatePlan):
+    """Scan a (T, B, d) block: T sequential steps, B tenants per step."""
+    from repro.core import inkpca
+
+    def step(sts, x_row):
+        def one(st, x):
+            a, k_new = masked_row(st, x, spec)
+            fn = (inkpca.update_adjusted if adjusted
+                  else inkpca.update_unadjusted)
+            return fn(st, a, k_new, x, plan=plan)
+
+        return jax.vmap(one)(sts, x_row), None
+
+    out, _ = jax.lax.scan(step, states, xs)
+    return out
+
+
+# ---------------------------------------------------------------- engine --
+class Engine:
+    """Slice→update→scatter for one stream, under an ``UpdatePlan``.
+
+    The engine is stateless with respect to the stream (states go in and
+    out), so one engine can serve many states with the same plan/kernel.
+    """
+
+    def __init__(self, spec: kf.KernelSpec, plan: UpdatePlan = DEFAULT_PLAN,
+                 *, adjusted: bool = True):
+        self.spec = spec
+        self.plan = plan
+        self.adjusted = adjusted
+
+    # ---- bucket selection -------------------------------------------------
+    def _bucket(self, capacity: int, need: int) -> int:
+        if self.plan.dispatch != "bucketed":
+            return capacity
+        return bucket_for(need, capacity, self.plan.min_bucket)
+
+    # ---- KPCA streaming ---------------------------------------------------
+    def _kpca_step(self, state, a, k_new, x_new):
+        from repro.core import inkpca
+        fn = (inkpca.update_adjusted if self.adjusted
+              else inkpca.update_unadjusted)
+        return fn(state, a, k_new, x_new, plan=self.plan.kernel_plan())
+
+    def update(self, state, x_new: Array, *, min_rows: int = 0):
+        """One streaming point through Algorithm 1/2 at bucket capacity.
+
+        The kernel row is evaluated against the sliced X as well, so the
+        whole step — gram row, secular solve, rotation — is O(M_b²)/O(M_b³).
+        ``min_rows`` is a row-support floor (a truncated, uncompacted state
+        keeps eigenvector mass on rows beyond m — see ``truncate``).
+        """
+        M = state.L.shape[0]
+        Mb = self._bucket(M, max(int(state.m) + 1, min_rows))
+        sub = slice_state(state, Mb) if Mb < M else state
+        a, k_new = masked_row(sub, x_new, self.spec)
+        sub = self._kpca_step(sub, a, k_new, x_new)
+        return scatter_state(state, sub) if Mb < M else sub
+
+    def update_block(self, state, xs: Array, *, min_rows: int = 0):
+        """Stream a block of points: scan within a bucket, re-bucket at
+        crossings (see the cost model in the module docstring)."""
+        M = state.L.shape[0]
+        n = xs.shape[0]
+        plan = self.plan.kernel_plan()
+        i = 0
+        while i < n:
+            m = int(state.m)
+            Mb = self._bucket(M, max(m + 1, min_rows))
+            # Bucketed dispatch cuts chunks at crossings — including at the
+            # top bucket, so exhaustion raises (via bucket_for) instead of
+            # silently clamping writes past capacity.  Fixed dispatch keeps
+            # the legacy one-scan semantics.
+            take = (min(Mb - m, n - i) if self.plan.dispatch == "bucketed"
+                    else n - i)
+            sub = slice_state(state, Mb) if Mb < M else state
+            sub = _scan_chunk(sub, xs[i:i + take], self.spec, self.adjusted,
+                              plan)
+            state = scatter_state(state, sub) if Mb < M else sub
+            i += take
+        return state
+
+    # ---- low-level rank-one -----------------------------------------------
+    def rank_one(self, L: Array, U: Array, v: Array, sigma: Array, m: Array
+                 ) -> tuple[Array, Array]:
+        """``rankone.rank_one_update`` at bucket capacity, scattered back."""
+        return rank_one(L, U, v, sigma, m, plan=self.plan)
+
+    # ---- Nyström landmarks ------------------------------------------------
+    def add_landmark(self, state, x_all, x_new: Array):
+        """Bucketed ``nystrom.add_landmark``: the O(M³) eigensystem update
+        and the O(n·M) column write both run at bucket capacity."""
+        from repro.core import nystrom
+
+        M = state.kpca.L.shape[0]
+        Mb = self._bucket(M, int(state.kpca.m) + 1)
+        plan = self.plan.kernel_plan()
+        if Mb == M:
+            return nystrom.add_landmark(state, x_all, x_new, self.spec,
+                                        plan=plan)
+        sub = state._replace(kpca=slice_state(state.kpca, Mb),
+                             Knm=state.Knm[:, :Mb])
+        sub = nystrom.add_landmark(sub, x_all, x_new, self.spec, plan=plan)
+        return state._replace(kpca=scatter_state(state.kpca, sub.kpca),
+                              Knm=state.Knm.at[:, :Mb].set(sub.Knm),
+                              Xrows=sub.Xrows)
+
+    # ---- truncation / compaction ------------------------------------------
+    def truncate(self, state, k: int, *, compact: bool | None = None,
+                 capacity: int | None = None):
+        """Keep only the k dominant eigenpairs (paper conclusion: 'adapt the
+        proposed algorithm to only maintain a subset').
+
+        The kept eigenvector columns retain support on the pre-truncation
+        rows.  ``compact`` policy:
+
+        * ``True`` — re-express the state on its leading rows and shrink
+          the arrays to the active bucket (or ``capacity``): the old large
+          bucket's memory is freed.
+        * ``False`` — seed-faithful truncation (old rows keep eigenvector
+          mass).  Bucketed dispatch MUST then keep slicing at the OLD
+          active count: pass the old m as ``min_rows`` to
+          ``update``/``update_block``.  ``KPCAStream`` tracks this floor
+          automatically; direct engine callers own it themselves (results
+          silently degrade otherwise), and the floor does not survive a
+          checkpoint — compact before saving a truncated state.
+        * ``None`` (default) — ``plan.compact_shrink``, except that a
+          bucketed-dispatch engine compacts at UNCHANGED capacity, so a
+          bare ``engine.truncate(state, k)`` is always safe to keep
+          streaming from without any ``min_rows`` bookkeeping.
+        """
+        keep_capacity = False
+        if compact is None:
+            compact = self.plan.compact_shrink
+            if not compact and self.plan.dispatch == "bucketed":
+                compact, keep_capacity = True, True
+        M = state.L.shape[0]
+        mask = rankone.active_mask(M, state.m)
+        order = jnp.argsort(jnp.where(mask, -state.L, jnp.inf))
+        keep = order[:k]
+        L = jnp.zeros_like(state.L).at[:k].set(state.L[keep])
+        U = jnp.eye(M, dtype=state.U.dtype).at[:, :k].set(state.U[:, keep])
+        m = jnp.minimum(state.m, jnp.asarray(k, state.m.dtype))
+        L = rankone.sentinelize(L, m, jnp.zeros((), L.dtype))
+        out = state._replace(L=L, U=U, m=m)
+        if compact:
+            out = self.compact(out, capacity=M if keep_capacity else capacity)
+        return out
+
+    def compact(self, state, capacity: int | None = None):
+        """Re-express the active eigensystem on its leading m rows and
+        re-allocate at ``capacity`` (default: the smallest bucket holding
+        m+1) — the shrink half of bucketed dispatch.
+
+        The maintained model only ever *reads* the leading m rows of the
+        active columns (kernel rows, update vectors and transform queries
+        are all masked beyond m), so re-diagonalizing the m×m block of the
+        reconstruction is exact for every downstream consumer.  For a
+        state whose support already sits in the leading rows (any stream
+        that never truncated) this is a pure re-allocation; after
+        ``truncate`` it also drops the out-of-support eigenvector mass,
+        which is what frees the old large bucket.
+        """
+        M = state.L.shape[0]
+        m = int(state.m)
+        cap = (capacity if capacity is not None
+               else bucket_for(m + 1, max(M, m + 1), self.plan.min_bucket))
+        if cap <= m:
+            raise ValueError(f"compaction capacity {cap} cannot hold "
+                             f"{m} active pairs plus one update")
+        dtype = state.L.dtype
+        Kc = rankone.reconstruct(state.L, state.U, state.m)[:m, :m]
+        lam, vec = jnp.linalg.eigh(Kc)
+        L = jnp.zeros((cap,), dtype).at[:m].set(lam.astype(dtype))
+        U = jnp.eye(cap, dtype=dtype).at[:m, :m].set(vec.astype(dtype))
+        mm = jnp.asarray(m, state.m.dtype)
+        L = rankone.sentinelize(L, mm, jnp.zeros((), dtype))
+        ncopy = min(cap, M)
+        K1 = jnp.zeros((cap,), dtype).at[:ncopy].set(state.K1[:ncopy])
+        X = jnp.zeros((cap,) + state.X.shape[1:],
+                      state.X.dtype).at[:ncopy].set(state.X[:ncopy])
+        return state._replace(L=L, U=U, m=mm, K1=K1, X=X)
+
+
+# ---------------------------------------------------- multi-tenant batch --
+class StreamBatch:
+    """B independent KPCA streams advanced in lockstep via vmap.
+
+    The production-serving shape: rather than one Python loop per tenant
+    (B dispatches per wall-clock step), one stacked ``KPCAState`` folds a
+    point into every tenant's eigendecomposition in a single device step.
+    Per-tenant active counts ``m_i`` may diverge (pass ``active`` masks);
+    bucketed dispatch runs the whole cohort at the bucket of
+    ``max_i m_i + 1``, so a cohort's cost tracks its largest tenant.
+
+    Unlike the single-stream engine (which slices and scatters the
+    capacity-M state every step), the working state here is *bucket
+    resident*: it lives at the cohort bucket between crossings, the cohort
+    ceiling is tracked on the host (no per-step device sync), and the
+    capacity-M arrays are materialized only at bucket crossings or when
+    ``.states`` is read — so a serving step is exactly one vmapped update
+    with no slice/scatter traffic, and steps can pipeline.
+
+    x0: (B, m0, d) per-tenant seed points (same m0; tenants that should
+    start smaller can simply skip steps via ``active``).
+    """
+
+    def __init__(self, x0: Array, capacity: int, spec: kf.KernelSpec, *,
+                 plan: UpdatePlan = DEFAULT_PLAN, adjusted: bool = True,
+                 dtype=jnp.float32):
+        from repro.core import inkpca
+
+        x0 = jnp.asarray(x0)
+        if x0.ndim != 3:
+            raise ValueError(f"x0 must be (tenants, m0, d), got {x0.shape}")
+        self.spec = spec
+        self.plan = plan
+        self.adjusted = adjusted
+        self.capacity = capacity
+        self.n_tenants = int(x0.shape[0])
+        self._full = jax.vmap(
+            lambda x: inkpca.init_state(x, capacity, spec, adjusted=adjusted,
+                                        dtype=dtype))(x0)
+        self._sub = None          # bucket-resident working state
+        self._Mb = capacity
+        # Host-side upper bound on max_i m_i (exact while every step is
+        # fully active; re-synced from the device at crossings).
+        self._ceiling = int(x0.shape[1])
+
+    # ---- bucket residency ---------------------------------------------------
+    def _flush(self):
+        """Scatter the working state back into the capacity-M arrays."""
+        if self._sub is not None:
+            self._full = (_scatter_stacked(self._full, self._sub)
+                          if self._Mb < self.capacity else self._sub)
+            self._sub = None
+
+    @property
+    def states(self):
+        """The capacity-M stacked ``KPCAState`` (flushes the working
+        bucket; use the return value of ``update`` for hot-path reads)."""
+        self._flush()
+        return self._full
+
+    def _working(self, need: int):
+        """Bucket-resident stacked state holding ≥ ``need`` active pairs."""
+        Mb = (self.capacity if self.plan.dispatch != "bucketed"
+              else bucket_for(need, self.capacity, self.plan.min_bucket))
+        if self._sub is None or Mb != self._Mb:
+            self._flush()
+            self._Mb = Mb
+            self._sub = (_slice_stacked(self._full, Mb)
+                         if Mb < self.capacity else self._full)
+        return self._sub
+
+    def _need(self) -> int:
+        """Rows the next update must fit, re-syncing the host ceiling from
+        the device when it matters (crossing or apparent exhaustion) —
+        idle tenants make the ceiling an overestimate."""
+        resync = self._ceiling + 1 > self.capacity or (
+            self.plan.dispatch == "bucketed" and self._sub is not None
+            and bucket_for(min(self._ceiling + 1, self.capacity),
+                           self.capacity, self.plan.min_bucket) > self._Mb)
+        if resync:
+            st = self._sub if self._sub is not None else self._full
+            self._ceiling = int(jnp.max(st.m))
+        if self._ceiling + 1 > self.capacity:
+            raise ValueError(
+                f"tenant at active count {self._ceiling} exhausted capacity "
+                f"{self.capacity} — truncate/compact or re-shard the cohort")
+        return self._ceiling + 1
+
+    # ---- streaming ----------------------------------------------------------
+    def update(self, xs: Array, active: Array | None = None):
+        """Fold xs[i] (shape (B, d)) into tenant i, one device step.
+
+        Returns the bucket-resident stacked state (a valid stacked
+        ``KPCAState`` at the cohort bucket capacity).
+        """
+        xs = jnp.asarray(xs)
+        sub = self._working(self._need())
+        plan = self.plan.kernel_plan()
+        if active is None:
+            self._sub = _batched_update(sub, xs, self.spec, self.adjusted,
+                                        plan)
+        else:
+            self._sub = _batched_update_masked(sub, xs, jnp.asarray(active),
+                                               self.spec, self.adjusted,
+                                               plan)
+        self._ceiling += 1
+        return self._sub
+
+    def update_block(self, xs: Array):
+        """Stream a (T, B, d) block: scan over T with all B tenants vmapped
+        per step; chunks are cut at cohort bucket crossings."""
+        xs = jnp.asarray(xs)
+        T = xs.shape[0]
+        i = 0
+        while i < T:
+            sub = self._working(self._need())
+            # Chunk at the working bucket even when it is the capacity rung,
+            # so _need() raises on exhaustion instead of clamping writes.
+            take = min(self._Mb - self._ceiling, T - i)
+            self._sub = _batched_scan(sub, xs[i:i + take], self.spec,
+                                      self.adjusted, self.plan.kernel_plan())
+            self._ceiling += take
+            i += take
+        return self._sub
+
+    def transform(self, q: Array, n_components: int) -> Array:
+        """Project per-tenant query batches q: (B, nq, d) -> (B, nq, k)."""
+        st = self._sub if self._sub is not None else self._full
+        fn = partial(transform_state, spec=self.spec, adjusted=self.adjusted,
+                     n_components=n_components)
+        return jax.vmap(fn)(st, jnp.asarray(q))
+
+    def state_of(self, i: int):
+        """Unstack tenant i's capacity-M state (checkpoint convenience)."""
+        return jax.tree.map(lambda leaf: leaf[i], self.states)

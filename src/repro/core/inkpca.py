@@ -21,25 +21,11 @@ from typing import Literal, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine as eng
 from repro.core import kernels_fn as kf
 from repro.core import rankone
 
 Array = jax.Array
-
-
-def _apply_pair(L, U, v1, sigma, v2, m, *, method, matmul, iters):
-    """Apply the ±sigma update pair: fused double rotation when matmul is
-    'jnp2'/'pallas2' (one pass over U, see rankone.rank_one_update_pair),
-    two sequential rank-one updates otherwise."""
-    if matmul in ("jnp2", "pallas2"):
-        inner = "pallas" if matmul == "pallas2" else "jnp"
-        return rankone.rank_one_update_pair(L, U, v1, sigma, v2, -sigma, m,
-                                            method=method, matmul=inner,
-                                            iters=iters)
-    L, U = rankone.rank_one_update(L, U, v1, sigma, m, method=method,
-                                   matmul=matmul, iters=iters)
-    return rankone.rank_one_update(L, U, v2, -sigma, m, method=method,
-                                   matmul=matmul, iters=iters)
 
 
 class KPCAState(NamedTuple):
@@ -87,18 +73,15 @@ def init_state(x0: Array, capacity: int, spec: kf.KernelSpec,
 
 
 def _masked_row(state: KPCAState, x_new: Array, spec: kf.KernelSpec) -> tuple[Array, Array]:
-    """Kernel row against stored points, zeroed beyond the active count."""
-    a_full = kf.kernel_row(x_new, state.X, spec=spec)
-    mask = rankone.active_mask(state.X.shape[0], state.m)
-    a = jnp.where(mask, a_full, 0.0)
-    k_new = kf.gram_block(x_new[None], x_new[None], spec=spec)[0, 0]
-    return a, k_new
+    """Kernel row against stored points, zeroed beyond the active count.
+    (Canonical implementation lives in the engine layer.)"""
+    return eng.masked_row(state, x_new, spec)
 
 
-@partial(jax.jit, static_argnames=("method", "matmul", "iters"))
+@partial(jax.jit, static_argnames=("plan",))
 def update_unadjusted(state: KPCAState, a: Array, k_new: Array, x_new: Array,
-                      *, method: str = "gu", matmul: str = "jnp",
-                      iters: int = 62) -> KPCAState:
+                      *, plan: eng.UpdatePlan = eng.DEFAULT_PLAN
+                      ) -> KPCAState:
     """Algorithm 1: K_{m,m} -> K_{m+1,m+1} via expansion + 2 rank-one updates."""
     M = state.L.shape[0]
     m = state.m
@@ -117,15 +100,14 @@ def update_unadjusted(state: KPCAState, a: Array, k_new: Array, x_new: Array,
     v1 = a.at[m].set(kn / 2.0)
     v2 = a.at[m].set(kn / 4.0)
     sigma = 4.0 / kn
-    L, U = _apply_pair(L, U, v1, sigma, v2, m1, method=method, matmul=matmul,
-                       iters=iters)
+    L, U = eng.apply_pair(L, U, v1, sigma, v2, -sigma, m1, plan=plan)
     return KPCAState(L=L, U=U, m=m1, S=S2, K1=K1, X=X)
 
 
-@partial(jax.jit, static_argnames=("method", "matmul", "iters"))
+@partial(jax.jit, static_argnames=("plan",))
 def update_adjusted(state: KPCAState, a: Array, k_new: Array, x_new: Array,
-                    *, method: str = "gu", matmul: str = "jnp",
-                    iters: int = 62) -> KPCAState:
+                    *, plan: eng.UpdatePlan = eng.DEFAULT_PLAN
+                    ) -> KPCAState:
     """Algorithm 2: K'_{m,m} -> K'_{m+1,m+1} via 4 rank-one updates.
 
     Follows the paper's derivation (§3.1.2); Alg. 2 line 4 contains an
@@ -146,9 +128,9 @@ def update_adjusted(state: KPCAState, a: Array, k_new: Array, x_new: Array,
     u = jnp.where(mask_m, u, 0.0)
     ones_u_p = jnp.where(mask_m, 1.0 + u, 0.0)
     ones_u_m = jnp.where(mask_m, 1.0 - u, 0.0)
-    L, U = _apply_pair(state.L, state.U, ones_u_p,
-                       jnp.asarray(0.5, state.L.dtype), ones_u_m, m,
-                       method=method, matmul=matmul, iters=iters)
+    half = jnp.asarray(0.5, state.L.dtype)
+    L, U = eng.apply_pair(state.L, state.U, ones_u_p, half, ones_u_m, -half,
+                          m, plan=plan)
 
     # --- Step 2: bookkeeping updates (paper lines 7-9). ---
     K1 = jnp.where(mask_m, state.K1 + a, 0.0)
@@ -169,8 +151,7 @@ def update_adjusted(state: KPCAState, a: Array, k_new: Array, x_new: Array,
     v1 = v.at[m].set(v0 / 2.0)
     v2 = v.at[m].set(v0 / 4.0)
     sigma = 4.0 / v0
-    L, U = _apply_pair(L, U, v1, sigma, v2, m1, method=method, matmul=matmul,
-                       iters=iters)
+    L, U = eng.apply_pair(L, U, v1, sigma, v2, -sigma, m1, plan=plan)
 
     X = jax.lax.dynamic_update_slice(state.X, x_new[None].astype(state.X.dtype),
                                      (m, jnp.zeros((), m.dtype)))
@@ -178,48 +159,45 @@ def update_adjusted(state: KPCAState, a: Array, k_new: Array, x_new: Array,
 
 
 class KPCAStream:
-    """User-facing streaming driver around the jitted update functions.
+    """User-facing streaming driver — a thin shell over ``engine.Engine``.
 
-    ``dispatch="bucketed"`` routes updates through ``repro.core.buckets``:
-    each step runs at the smallest power-of-two bucket capacity holding
-    the active set, so per-update cost scales with m instead of the fixed
-    capacity M (one extra compilation per bucket visited; see buckets.py
-    for the crossing/retrace cost model).
+    All dispatch decisions (bucket selection, fused-pair vs sequential,
+    merge fallback, compaction) live in the engine's ``UpdatePlan``; pass
+    one directly via ``plan=`` or use the legacy keyword spellings
+    (``method``/``matmul``/``iters``/``dispatch``/``min_bucket``), which
+    are folded into a plan here and nowhere else.
+
+    ``dispatch="bucketed"`` runs each step at the smallest power-of-two
+    bucket capacity holding the active set, so per-update cost scales with
+    m instead of the fixed capacity M (one extra compilation per bucket
+    visited; see engine.py for the crossing/retrace cost model).
     """
 
     def __init__(self, x0: Array, capacity: int, spec: kf.KernelSpec, *,
-                 adjusted: bool = True, method: Literal["gu", "bns"] = "gu",
+                 adjusted: bool = True, plan: eng.UpdatePlan | None = None,
+                 method: Literal["gu", "bns"] = "gu",
                  matmul: Literal["jnp", "pallas", "jnp2", "pallas2"] = "jnp",
-                 iters: int = 62, dtype=jnp.float32,
+                 iters: int | None = None, dtype=jnp.float32,
                  dispatch: Literal["fixed", "bucketed"] = "fixed",
                  min_bucket: int | None = None):
+        if plan is None:
+            plan = eng.UpdatePlan(
+                method=method, matmul=matmul, iters=iters, dispatch=dispatch,
+                min_bucket=(min_bucket if min_bucket is not None
+                            else eng.DEFAULT_MIN_BUCKET))
         self.spec = spec
         self.adjusted = adjusted
-        self.method = method
-        self.matmul = matmul
-        self.iters = iters
-        self.dispatch = dispatch
-        self.min_bucket = min_bucket
+        self.plan = plan
+        self.engine = eng.Engine(spec, plan, adjusted=adjusted)
         self.state = init_state(x0, capacity, spec, adjusted=adjusted,
                                 dtype=dtype)
-
-    def _bucket_kwargs(self) -> dict:
-        kw = dict(adjusted=self.adjusted, method=self.method,
-                  matmul=self.matmul, iters=self.iters)
-        if self.min_bucket is not None:
-            kw["min_bucket"] = self.min_bucket
-        return kw
+        # Row-support floor for bucket selection: a truncated, uncompacted
+        # state keeps eigenvector mass on rows beyond m (see Engine.truncate).
+        self._min_rows = 0
 
     def update(self, x_new: Array) -> KPCAState:
-        if self.dispatch == "bucketed":
-            from repro.core import buckets
-            self.state = buckets.update(self.state, x_new, self.spec,
-                                        **self._bucket_kwargs())
-            return self.state
-        a, k_new = _masked_row(self.state, x_new, self.spec)
-        fn = update_adjusted if self.adjusted else update_unadjusted
-        self.state = fn(self.state, a, k_new, x_new, method=self.method,
-                        matmul=self.matmul, iters=self.iters)
+        self.state = self.engine.update(self.state, x_new,
+                                        min_rows=self._min_rows)
         return self.state
 
     def update_block(self, xs: Array) -> KPCAState:
@@ -227,67 +205,41 @@ class KPCAStream:
         semantics (the paper's per-point algorithm, amortized for TPU).
         Bucketed dispatch scans within a bucket and re-buckets at
         crossings, keeping the same sequential semantics."""
-        if self.dispatch == "bucketed":
-            from repro.core import buckets
-            self.state = buckets.update_block(self.state, xs, self.spec,
-                                              **self._bucket_kwargs())
-            return self.state
-        spec, adjusted = self.spec, self.adjusted
-        method, matmul, iters = self.method, self.matmul, self.iters
-
-        def step(state, x_new):
-            a, k_new = _masked_row(state, x_new, spec)
-            fn = update_adjusted if adjusted else update_unadjusted
-            return fn(state, a, k_new, x_new, method=method, matmul=matmul,
-                      iters=iters), None
-
-        self.state, _ = jax.lax.scan(step, self.state, xs)
+        self.state = self.engine.update_block(self.state, xs,
+                                              min_rows=self._min_rows)
         return self.state
 
-    def truncate(self, k: int) -> KPCAState:
+    def truncate(self, k: int, *, compact: bool | None = None) -> KPCAState:
         """Keep only the k dominant eigenpairs (paper conclusion: 'adapt the
         proposed algorithm to only maintain a subset') — subsequent updates
         then track the dominant subspace at O(k³)-per-update cost, trading
-        exactness for the Hoegaerts-style subset regime."""
-        st = self.state
-        M = st.L.shape[0]
-        mask = rankone.active_mask(M, st.m)
-        order = jnp.argsort(jnp.where(mask, -st.L, jnp.inf))
-        keep = order[:k]
-        L = jnp.zeros_like(st.L).at[:k].set(st.L[keep])
-        U = jnp.eye(M, dtype=st.U.dtype).at[:, :k].set(st.U[:, keep])
-        m = jnp.minimum(st.m, jnp.asarray(k, st.m.dtype))
-        L = rankone.sentinelize(L, m, jnp.zeros((), L.dtype))
-        self.state = KPCAState(L=L, U=U, m=m, S=st.S, K1=st.K1, X=st.X)
+        exactness for the Hoegaerts-style subset regime.
+
+        With ``compact`` (default: ``plan.compact_shrink``) the state is
+        re-expressed on its leading k rows and the arrays shrink to the
+        active bucket; without it the old rows keep eigenvector support
+        and bucketed dispatch keeps slicing at the old active count.
+        That support floor is host-side stream state — it does NOT
+        survive a checkpoint, so compact a truncated stream before
+        saving it mid-stream.
+        """
+        if compact is None:
+            compact = self.plan.compact_shrink
+        support = max(int(self.state.m), self._min_rows)
+        self.state = self.engine.truncate(self.state, k, compact=compact)
+        self._min_rows = 0 if compact else support
         return self.state
 
     # ---- read-out utilities -------------------------------------------------
     def eigpairs(self) -> tuple[Array, Array]:
         """Active (descending) eigenvalues and eigenvectors."""
-        st = self.state
-        M = st.L.shape[0]
-        mask = rankone.active_mask(M, st.m)
-        order = jnp.argsort(jnp.where(mask, -st.L, jnp.inf))
-        return st.L[order], st.U[:, order]
+        return eng.eigpairs(self.state)
 
     def reconstruction(self) -> Array:
         return rankone.reconstruct(self.state.L, self.state.U, self.state.m)
 
     def transform(self, x: Array, n_components: int) -> Array:
         """Project new points on the leading kernel principal components."""
-        st = self.state
-        lam, vec = self.eigpairs()
-        lam = lam[:n_components]
-        vec = vec[:, :n_components]
-        krow = kf.gram_block(x.astype(st.X.dtype), st.X, spec=self.spec)
-        mask = rankone.active_mask(st.X.shape[0], st.m)
-        krow = jnp.where(mask[None, :], krow, 0.0)
-        if self.adjusted:
-            mf = st.m.astype(st.L.dtype)
-            rowmean = jnp.sum(krow, axis=1, keepdims=True) / mf
-            colmean = (st.K1 / mf)[None, :]
-            grand = st.S / mf**2
-            krow = jnp.where(mask[None, :],
-                             krow - rowmean - colmean + grand, 0.0)
-        denom = jnp.sqrt(jnp.maximum(lam, jnp.finfo(st.L.dtype).eps))
-        return (krow @ vec) / denom[None, :]
+        return eng.transform_state(self.state, x, spec=self.spec,
+                                   adjusted=self.adjusted,
+                                   n_components=n_components)

@@ -21,6 +21,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine as eng
 from repro.core import inkpca, kernels_fn as kf, rankone
 
 Array = jax.Array
@@ -40,10 +41,11 @@ def init_krr(x0: Array, y0: Array, capacity: int, spec: kf.KernelSpec,
 
 
 def add_point(state: KRRState, x_new: Array, y_new: Array,
-              spec: kf.KernelSpec, *, iters: int = 62) -> KRRState:
+              spec: kf.KernelSpec, *,
+              plan: eng.UpdatePlan = eng.DEFAULT_PLAN) -> KRRState:
     a, k_new = inkpca._masked_row(state.kpca, x_new, spec)
     m = state.kpca.m
-    kpca = inkpca.update_unadjusted(state.kpca, a, k_new, x_new, iters=iters)
+    kpca = inkpca.update_unadjusted(state.kpca, a, k_new, x_new, plan=plan)
     y = state.y.at[m].set(jnp.asarray(y_new, state.y.dtype))
     return KRRState(kpca=kpca, y=y)
 

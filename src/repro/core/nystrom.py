@@ -16,10 +16,23 @@ implemented by the fused Pallas kernel ``repro.kernels.nystrom_recon``.
 This enables *empirical* stopping: monitor the chosen norm of K - K̃ (or a
 cheap proxy) after each added landmark and stop when it plateaus.
 
-For landmark sets that grow far below capacity, ``repro.core.buckets.
-add_landmark`` wraps this module's ``add_landmark`` with bucketed dispatch
-so each addition costs O(M_b³) at the active power-of-two bucket M_b
-instead of O(M³) at capacity.
+For landmark sets that grow far below capacity, construct an
+``engine.Engine`` over this module (or use the ``repro.core.buckets``
+shims): ``Engine.add_landmark`` wraps this module's ``add_landmark`` with
+bucketed dispatch so each addition costs O(M_b³) at the active
+power-of-two bucket M_b instead of O(M³) at capacity.
+
+Two row regimes:
+
+* **Fixed rows** (default): the full dataset ``x_all`` is known upfront
+  and ``Knm`` is allocated dense (n, M).
+* **Growing rows** (``init_nystrom(..., grow_rows=True)``): the stream is
+  open-ended, so ``Knm`` starts at the seed landmarks' rows and
+  ``observe_rows`` appends a row block per observed (non-landmark) point —
+  memory tracks the observed stream instead of paying n upfront.  The
+  observed points are carried in ``NystromState.Xrows`` so later
+  ``add_landmark`` calls can fill the new landmark's column; pass
+  ``x_all=None`` in this mode.
 """
 from __future__ import annotations
 
@@ -30,6 +43,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine as eng
 from repro.core import inkpca, kernels_fn as kf, rankone
 
 Array = jax.Array
@@ -37,33 +51,71 @@ Array = jax.Array
 
 class NystromState(NamedTuple):
     kpca: inkpca.KPCAState   # eigendecomposition of K_{m,m} (unadjusted)
-    Knm: Array               # (n, M) columns k(X_all, x_j) for landmarks j<m
+    Knm: Array               # (n, M) columns k(X_rows, x_j) for landmarks j<m
+    Xrows: Array | None = None   # (n, d) observed row points (grow_rows mode)
 
 
-def init_nystrom(x_all: Array, x0: Array, capacity: int, spec: kf.KernelSpec,
-                 *, dtype=jnp.float32) -> NystromState:
+def init_nystrom(x_all: Array | None, x0: Array, capacity: int,
+                 spec: kf.KernelSpec, *, dtype=jnp.float32,
+                 grow_rows: bool = False) -> NystromState:
     kpca = inkpca.init_state(x0, capacity, spec, adjusted=False, dtype=dtype)
-    n = x_all.shape[0]
+    x0 = x0.astype(dtype)
+    if grow_rows:
+        if x_all is not None:
+            raise ValueError("grow_rows=True derives rows from the stream; "
+                             "pass x_all=None and call observe_rows")
+        x_rows = x0              # landmarks are observed points too
+    else:
+        if x_all is None:
+            raise ValueError("x_all is required unless grow_rows=True")
+        x_rows = x_all.astype(dtype)
+    n = x_rows.shape[0]
     Knm = jnp.zeros((n, capacity), dtype)
-    cols = kf.gram_block(x_all.astype(dtype), x0.astype(dtype), spec=spec)
+    cols = kf.gram_block(x_rows, x0, spec=spec)
     Knm = Knm.at[:, : x0.shape[0]].set(cols.astype(dtype))
-    return NystromState(kpca=kpca, Knm=Knm)
+    return NystromState(kpca=kpca, Knm=Knm,
+                        Xrows=x_rows if grow_rows else None)
 
 
-@partial(jax.jit, static_argnames=("spec", "method", "matmul", "iters"))
-def add_landmark(state: NystromState, x_all: Array, x_new: Array,
-                 spec: kf.KernelSpec, *, method: str = "gu",
-                 matmul: str = "jnp", iters: int = 62) -> NystromState:
-    """Grow the landmark set by one point (streaming-compatible)."""
-    a, k_new = inkpca._masked_row(state.kpca, x_new, spec)
+def observe_rows(state: NystromState, xb: Array,
+                 spec: kf.KernelSpec) -> NystromState:
+    """Append a block of observed (non-landmark) points as new Knm rows.
+
+    Only valid in ``grow_rows`` mode.  Row growth is a host-level concat
+    (each distinct row count is a new shape), so feed points in batches —
+    the O(b·M) kernel block itself is one fused device call.
+    """
+    if state.Xrows is None:
+        raise ValueError("observe_rows needs a grow_rows=True state")
+    dtype = state.Knm.dtype
+    xb = jnp.atleast_2d(xb).astype(dtype)
+    M = state.Knm.shape[1]
+    mask = rankone.active_mask(M, state.kpca.m)
+    rows = kf.gram_block(xb, state.kpca.X, spec=spec).astype(dtype)
+    rows = jnp.where(mask[None, :], rows, 0.0)
+    return state._replace(Knm=jnp.concatenate([state.Knm, rows], axis=0),
+                          Xrows=jnp.concatenate([state.Xrows, xb], axis=0))
+
+
+@partial(jax.jit, static_argnames=("spec", "plan"))
+def add_landmark(state: NystromState, x_all: Array | None, x_new: Array,
+                 spec: kf.KernelSpec, *,
+                 plan: eng.UpdatePlan = eng.DEFAULT_PLAN) -> NystromState:
+    """Grow the landmark set by one point (streaming-compatible).
+
+    In ``grow_rows`` mode the new column is evaluated against the observed
+    rows carried in the state (``x_all`` must be None); add the point via
+    ``observe_rows`` first if it should also appear as a row.
+    """
+    a, k_new = eng.masked_row(state.kpca, x_new, spec)
     m = state.kpca.m
-    kpca = inkpca.update_unadjusted(state.kpca, a, k_new, x_new,
-                                    method=method, matmul=matmul, iters=iters)
-    col = kf.kernel_row(x_new, x_all.astype(state.Knm.dtype), spec=spec)
+    kpca = inkpca.update_unadjusted(state.kpca, a, k_new, x_new, plan=plan)
+    x_rows = state.Xrows if state.Xrows is not None else x_all
+    col = kf.kernel_row(x_new, x_rows.astype(state.Knm.dtype), spec=spec)
     zero = jnp.zeros((), m.dtype)
     Knm = jax.lax.dynamic_update_slice(state.Knm, col[:, None].astype(state.Knm.dtype),
                                        (zero, m))
-    return NystromState(kpca=kpca, Knm=Knm)
+    return state._replace(kpca=kpca, Knm=Knm)
 
 
 def nystrom_eigpairs(state: NystromState, n: int) -> tuple[Array, Array]:

@@ -126,8 +126,11 @@ def _cluster_merge(d: Array, z: Array, tol: Array):
     become exactly zero and deflate.  Replacing D by H D H ≈ D errs by at
     most the run width ≤ tol — the standard LAPACK trade.
 
-    Returns (z_new, apply) where apply(X) = H @ X in O(M²) via segment sums
-    (no extra matmul: the paper's 2m³-per-update flop count is preserved).
+    Returns (z_new, apply, fired) where apply(X) = H @ X in O(M²) via
+    segment sums (no extra matmul: the paper's 2m³-per-update flop count is
+    preserved) and ``fired`` is a traced bool — True iff H is not the
+    identity, i.e. a merge actually rotates z-mass.  ``fired`` is what the
+    fused pair path conds on to fall back to this sequential pipeline.
     """
     M = d.shape[0]
     gap = jnp.diff(d)
@@ -156,7 +159,7 @@ def _cluster_merge(d: Array, z: Array, tol: Array):
     z_new = z - coef * w * wz
     # exact zeros on merged (non-last) members so deflation catches them
     z_new = jnp.where(active & ~is_last, 0.0, z_new)
-    return z_new, apply
+    return z_new, apply, jnp.any(active)
 
 
 def _gu_zhat(d: Array, roots: Array, sigma: Array, z: Array) -> Array:
@@ -193,6 +196,48 @@ def _cauchy_W(d: Array, roots: Array, zhat: Array) -> tuple[Array, Array]:
     return W, inv
 
 
+def _update_body(L: Array, U: Array, v: Array, sigma: Array, m: Array, *,
+                 iters: int, method: str, matmul: str, precise: bool
+                 ) -> tuple[Array, Array]:
+    """Un-jitted body of ``rank_one_update`` (reused by the fused pair's
+    cond-guarded merge fallback, which must inline it under one jit)."""
+    M = L.shape[0]
+    dtype = L.dtype
+    mask = active_mask(M, m)
+    v = jnp.where(mask, v, 0.0)
+
+    z = U.T @ v
+    # Deflation (Bunch §4, the case the paper handles by exclusion in §5):
+    # eigendirections with |z_i| ~ 0 do not move — zero them out, pin their
+    # roots at the poles, and skip them in every other root's bracket.
+    # (Centering makes K' exactly singular along 1, and near-duplicate
+    # points cluster eigenvalues near 0, so this path is exercised on every
+    # real dataset, not just in corner cases.)
+    sig_abs = jnp.abs(sigma)
+
+    # Re-sentinelize with head-room for the top root's travel, then apply the
+    # flip identity so the effective sigma is positive.  Under the flip the
+    # sentinels land (negated) at the *bottom* of the array, still sorted.
+    room = sig_abs * jnp.sum(z * z)
+    d_sent = sentinelize(L, m, room)
+
+    # Cluster-merge deflation (dlaed2-style): rotate the z-mass of runs of
+    # near-equal poles into one member; U absorbs the block reflector at
+    # O(M²). Sentinels are spaced by 1 ≫ tol and never merge.
+    scale = jnp.max(jnp.abs(jnp.where(mask, L, 0.0))) + room + 1e-30
+    tol = 64.0 * _eps_for(dtype) * scale
+    z, applyH, _ = _cluster_merge(d_sent, z, tol)
+    U = applyH(U.T).T                            # U @ H, no matmul
+
+    f = _solve_factor(d_sent, z, sigma, m, scale, iters=iters, method=method,
+                      precise=precise)
+    U_new = _apply_factor(U, f, mask, m, matmul=matmul)
+    # Deflation can locally reorder roots (a root may legitimately cross a
+    # deflated pole); the next update's interlacing needs ascending order.
+    perm = jnp.argsort(f.L_new)
+    return f.L_new[perm], U_new[:, perm]
+
+
 @partial(jax.jit, static_argnames=("iters", "method", "matmul", "precise"))
 def rank_one_update(
     L: Array,
@@ -216,42 +261,8 @@ def rank_one_update(
 
     Returns the updated (L, U), sorted ascending, same padding invariants.
     """
-    M = L.shape[0]
-    dtype = L.dtype
-    mask = active_mask(M, m)
-    v = jnp.where(mask, v, 0.0)
-
-    z = U.T @ v
-    # Deflation (Bunch §4, the case the paper handles by exclusion in §5):
-    # eigendirections with |z_i| ~ 0 do not move — zero them out, pin their
-    # roots at the poles, and skip them in every other root's bracket.
-    # (Centering makes K' exactly singular along 1, and near-duplicate
-    # points cluster eigenvalues near 0, so this path is exercised on every
-    # real dataset, not just in corner cases.)
-    sig_abs = jnp.abs(sigma)
-    neg = sigma < 0
-
-    # Re-sentinelize with head-room for the top root's travel, then apply the
-    # flip identity so the effective sigma is positive.  Under the flip the
-    # sentinels land (negated) at the *bottom* of the array, still sorted.
-    room = sig_abs * jnp.sum(z * z)
-    d_sent = sentinelize(L, m, room)
-
-    # Cluster-merge deflation (dlaed2-style): rotate the z-mass of runs of
-    # near-equal poles into one member; U absorbs the block reflector at
-    # O(M²). Sentinels are spaced by 1 ≫ tol and never merge.
-    scale = jnp.max(jnp.abs(jnp.where(mask, L, 0.0))) + room + 1e-30
-    tol = 64.0 * _eps_for(dtype) * scale
-    z, applyH = _cluster_merge(d_sent, z, tol)
-    U = applyH(U.T).T                            # U @ H, no matmul
-
-    f = _solve_factor(d_sent, z, sigma, m, scale, iters=iters, method=method,
-                      precise=precise)
-    U_new = _apply_factor(U, f, mask, m, matmul=matmul)
-    # Deflation can locally reorder roots (a root may legitimately cross a
-    # deflated pole); the next update's interlacing needs ascending order.
-    perm = jnp.argsort(f.L_new)
-    return f.L_new[perm], U_new[:, perm]
+    return _update_body(L, U, v, sigma, m, iters=iters, method=method,
+                        matmul=matmul, precise=precise)
 
 
 class _Factor(NamedTuple):
@@ -337,10 +348,16 @@ def _solve_factor(d_sent: Array, z: Array, sigma: Array, m: Array,
 
 def _apply_factor(U: Array, f: _Factor, mask: Array, m: Array, *,
                   matmul: str) -> Array:
-    """U @ Ŵn for a single factor, preserving the padding invariants."""
-    M = U.shape[0]
+    """U @ Ŵn for a single factor, preserving the padding invariants.
+
+    ``U`` may be a row *block* of the full eigenvector matrix (the
+    distributed row-sharded path rotates only its local rows): every
+    overwrite below selects old columns of ``U`` itself, never a fresh
+    identity, so the result is exact for any row count.  The Pallas kernel
+    requires a square operand; non-square blocks take the dense route.
+    """
     dtype = U.dtype
-    if matmul == "pallas":
+    if matmul == "pallas" and U.shape[0] == U.shape[1]:
         # The factor is regenerated tile-by-tile in VMEM from O(M) vectors
         # (see kernels/eigvec_update), with tiles beyond ceil(m/B) pruned.
         from repro.kernels.eigvec_update import ops as _ops
@@ -349,8 +366,10 @@ def _apply_factor(U: Array, f: _Factor, mask: Array, m: Array, *,
         lam_k = jnp.where(mask, f.lam.astype(dtype), 1e30)
         inv_k = jnp.where(mask, f.inv.astype(dtype), 0.0)
         C = _ops.rotate_vectors(U, z_k, d_k, lam_k, inv_k, m)
-        C = jnp.where(f.defl[None, :], U, C)        # deflated cols unchanged
-        return jnp.where(mask[None, :], C, jnp.eye(M, dtype=dtype))
+        # f.defl ⊇ ~mask (inactive entries always deflate), so this also
+        # restores the pruned inactive columns — which are identity columns
+        # of the full U by invariant.
+        return jnp.where(f.defl[None, :], U, C)
     from repro.kernels.eigvec_update.ref import cauchy_factor_ref
     Wn = cauchy_factor_ref(f.z, f.d, f.lam, f.inv,
                            f.defl.astype(f.z.dtype)).astype(dtype)
@@ -389,7 +408,120 @@ def _factor_tmatvec(f: _Factor, y: Array) -> Array:
     return jnp.where(f.defl, y, s)
 
 
-@partial(jax.jit, static_argnames=("iters", "method", "matmul", "precise"))
+class _PairFactors(NamedTuple):
+    """Both solved factors of a fused ±sigma pair.
+
+    Factor 1's columns carry the inter-update sort (lam1/inv1/defl1 are
+    already permuted; cid1 records the permutation so deflated columns
+    become e_{cid1[j]}).  ``L_new`` is the post-update-2 spectrum before
+    the final ``perm2`` sort; ``merge_fired`` flags that a dlaed2
+    cluster-merge would fire on either update, in which case the fused
+    rotation is unsafe and callers should fall back to the sequential
+    two-update path.
+    """
+
+    z1: Array
+    d1: Array
+    lam1: Array
+    inv1: Array
+    defl1: Array
+    cid1: Array
+    z2: Array
+    d2: Array
+    lam2: Array
+    inv2: Array
+    defl2: Array
+    cid2: Array
+    L_new: Array
+    perm2: Array
+    merge_fired: Array
+
+
+def _merge_fires(L: Array, z: Array, sigma: Array, m: Array) -> Array:
+    """Would ``rank_one_update``'s dlaed2 cluster-merge rotate z-mass for
+    this (spectrum, z, sigma)?  Same sentinelization + tolerance as the
+    sequential path, detection only (the reflector is discarded)."""
+    M = L.shape[0]
+    mask = active_mask(M, m)
+    room = jnp.abs(sigma) * jnp.sum(z * z)
+    d_sent = sentinelize(L, m, room)
+    scale = jnp.max(jnp.abs(jnp.where(mask, L, 0.0))) + room + 1e-30
+    tol = 64.0 * _eps_for(L.dtype) * scale
+    _, _, fired = _cluster_merge(d_sent, z, tol)
+    return fired
+
+
+def _pair_solve(L: Array, z1: Array, sigma1: Array, z2_raw: Array,
+                sigma2: Array, m: Array, *, iters: int, method: str,
+                precise: bool) -> _PairFactors:
+    """Solve both secular systems of a fused pair — no U rotation.
+
+    ``z2_raw`` is Uᵀv₂ in the *pre-update* basis; the second update's
+    z₂ = U₁ᵀv₂ is recovered via the Cauchy transpose-matvec (O(M²)), so
+    neither solve ever touches U.  Shared by the local fused path and the
+    row-sharded distributed path (where Uᵀv needs one psum and everything
+    here runs replicated).
+    """
+    M = L.shape[0]
+    dtype = L.dtype
+    f1 = _pair_factor(L, z1, sigma1, m, iters=iters, method=method,
+                      precise=precise)
+    perm1 = jnp.argsort(f1.L_new)
+    L1 = f1.L_new[perm1]
+
+    y = _factor_tmatvec(f1, z2_raw.astype(f1.z.dtype))
+    z2 = y[perm1].astype(dtype)
+    f2 = _pair_factor(L1, z2, sigma2, m, iters=iters, method=method,
+                      precise=precise)
+    perm2 = jnp.argsort(f2.L_new)
+
+    fired = _merge_fires(L, z1, sigma1, m) | _merge_fires(L1, z2, sigma2, m)
+    # Sentinels sort to themselves, so inactive cid stays the column index.
+    cid1 = perm1.astype(jnp.int32)
+    cid2 = jnp.arange(M, dtype=jnp.int32)
+    return _PairFactors(z1=f1.z, d1=f1.d, lam1=f1.lam[perm1],
+                        inv1=f1.inv[perm1], defl1=f1.defl[perm1], cid1=cid1,
+                        z2=f2.z, d2=f2.d, lam2=f2.lam, inv2=f2.inv,
+                        defl2=f2.defl, cid2=cid2, L_new=f2.L_new,
+                        perm2=perm2, merge_fired=fired)
+
+
+def _pair_rotate_block(U: Array, pf: _PairFactors, m: Array, *,
+                       matmul: str) -> Array:
+    """Fused double rotation (U @ W1n @ W2n)[:, perm2] of a row block.
+
+    Like ``_apply_factor``, ``U`` may be a row block of the full
+    eigenvector matrix: the dense route's deflated/inactive columns are
+    e_{cid} columns of the factors themselves, so no full-height identity
+    is ever needed.  The Pallas kernel requires a square operand.
+    """
+    M = U.shape[-1]
+    dtype = U.dtype
+    if matmul == "pallas" and U.shape[0] == M:
+        from repro.kernels.eigvec_update import ops as _ops
+        C = _ops.rotate_vectors2(
+            U,
+            pf.z1.astype(dtype), pf.d1.astype(dtype), pf.lam1.astype(dtype),
+            pf.inv1.astype(dtype), pf.defl1.astype(dtype), pf.cid1,
+            pf.z2.astype(dtype), pf.d2.astype(dtype), pf.lam2.astype(dtype),
+            pf.inv2.astype(dtype), pf.defl2.astype(dtype), pf.cid2,
+            m)
+        mask = active_mask(M, m)
+        C = jnp.where(mask[None, :], C, jnp.eye(M, dtype=dtype))
+    else:
+        from repro.kernels.eigvec_update.ref import cauchy_factor_ref
+        W1 = cauchy_factor_ref(pf.z1, pf.d1, pf.lam1, pf.inv1,
+                               pf.defl1.astype(pf.z1.dtype),
+                               pf.cid1).astype(dtype)
+        W2 = cauchy_factor_ref(pf.z2, pf.d2, pf.lam2, pf.inv2,
+                               pf.defl2.astype(pf.z2.dtype),
+                               pf.cid2).astype(dtype)
+        C = (U @ W1) @ W2
+    return C[:, pf.perm2]
+
+
+@partial(jax.jit, static_argnames=("iters", "method", "matmul", "precise",
+                                   "merge_fallback"))
 def rank_one_update_pair(
     L: Array,
     U: Array,
@@ -403,6 +535,7 @@ def rank_one_update_pair(
     method: Literal["gu", "bns"] = "gu",
     matmul: Literal["jnp", "pallas"] = "jnp",
     precise: bool = True,
+    merge_fallback: bool = True,
 ) -> tuple[Array, Array]:
     """Two back-to-back rank-one updates with ONE fused double rotation.
 
@@ -411,61 +544,43 @@ def rank_one_update_pair(
     rotation happens once: C = U @ W1n @ W2n.  The second update's
     z₂ = U₁ᵀ v₂ is obtained without U₁ via the Cauchy transpose-matvec
     (O(M²)), so U is read and written exactly once per streamed point —
-    half the HBM round-trips of two sequential updates.  The dlaed2
-    cluster-merge is skipped (see ``_pair_factor``); otherwise numerics
-    match the sequential path.
+    half the HBM round-trips of two sequential updates.
+
+    The dlaed2 cluster-merge cannot sit between the two fused rotations
+    (its block reflector is not a Cauchy factor); with ``merge_fallback``
+    (default) a lax.cond re-runs the pair through the sequential two-update
+    path whenever a merge would fire on either update, so clustered spectra
+    keep the full orthogonality polish.  The solves (O(M²·iters)) always
+    run; only the O(M³) rotation is conditional — merges are rare, so the
+    fused rotation is what executes in the steady state.
 
     matmul='jnp' materializes both factors densely (reference semantics,
     still one pass over U); 'pallas' generates both factors' tiles in VMEM
     (``eigvec_rotate2``) with active-tile pruning.
     """
     M = L.shape[0]
-    dtype = L.dtype
     mask = active_mask(M, m)
     v1 = jnp.where(mask, v1, 0.0)
     v2 = jnp.where(mask, v2, 0.0)
 
-    z1 = U.T @ v1
-    f1 = _pair_factor(L, z1, sigma1, m, iters=iters, method=method,
-                      precise=precise)
-    perm1 = jnp.argsort(f1.L_new)
-    L1 = f1.L_new[perm1]
+    Z = U.T @ jnp.stack([v1, v2], axis=1)       # one pass over U for both z
+    pf = _pair_solve(L, Z[:, 0], sigma1, Z[:, 1], sigma2, m, iters=iters,
+                     method=method, precise=precise)
 
-    y = _factor_tmatvec(f1, (U.T @ v2).astype(f1.z.dtype))
-    z2 = y[perm1].astype(dtype)
-    f2 = _pair_factor(L1, z2, sigma2, m, iters=iters, method=method,
-                      precise=precise)
-    perm2 = jnp.argsort(f2.L_new)
+    def _fused(U):
+        return pf.L_new[pf.perm2], _pair_rotate_block(U, pf, m,
+                                                      matmul=matmul)
 
-    # Factor 1's columns carry the inter-update sort: permute the column
-    # vectors and record the permutation in cid so deflated columns become
-    # e_{perm1[j]} (sentinels sort to themselves, so inactive cid is j).
-    cid1 = perm1.astype(jnp.int32)
-    lam1p, inv1p, defl1p = f1.lam[perm1], f1.inv[perm1], f1.defl[perm1]
-    cid2 = jnp.arange(M, dtype=jnp.int32)
+    if not merge_fallback:
+        return _fused(U)
 
-    eye = jnp.eye(M, dtype=dtype)
-    col_active = mask[None, :]
-    if matmul == "pallas":
-        from repro.kernels.eigvec_update import ops as _ops
-        C = _ops.rotate_vectors2(
-            U,
-            f1.z.astype(dtype), f1.d.astype(dtype), lam1p.astype(dtype),
-            inv1p.astype(dtype), defl1p.astype(dtype), cid1,
-            f2.z.astype(dtype), f2.d.astype(dtype), f2.lam.astype(dtype),
-            f2.inv.astype(dtype), f2.defl.astype(dtype), cid2,
-            m)
-    else:
-        from repro.kernels.eigvec_update.ref import cauchy_factor_ref
-        W1 = cauchy_factor_ref(f1.z, f1.d, lam1p, inv1p,
-                               defl1p.astype(f1.z.dtype),
-                               cid1).astype(dtype)
-        W2 = cauchy_factor_ref(f2.z, f2.d, f2.lam, f2.inv,
-                               f2.defl.astype(f2.z.dtype),
-                               cid2).astype(dtype)
-        C = (U @ W1) @ W2
-    U_new = jnp.where(col_active, C, eye)
-    return f2.L_new[perm2], U_new[:, perm2]
+    def _sequential(U):
+        L1, U1 = _update_body(L, U, v1, sigma1, m, iters=iters,
+                              method=method, matmul=matmul, precise=precise)
+        return _update_body(L1, U1, v2, sigma2, m, iters=iters,
+                            method=method, matmul=matmul, precise=precise)
+
+    return jax.lax.cond(pf.merge_fired, _sequential, _fused, U)
 
 
 @partial(jax.jit, static_argnames=())

@@ -238,7 +238,7 @@ def nystrom_decode(p: dict, cfg: ArchConfig, x: Array, cache: NystromCache,
 
 # ----------------------------------------------- serve-time landmark growth --
 def grow_landmark(landmarks: Array, L: Array, U: Array, m_active: Array,
-                  new_lm: Array, sigma: float, *, iters: int = 62
+                  new_lm: Array, sigma: float, *, plan=None
                   ) -> tuple[Array, Array, Array, Array]:
     """Add one landmark with the paper's Algorithm 1 (incremental eigh of the
     landmark gram K_{m,m}) — the incremental-Nyström loop of §4 applied to
@@ -247,8 +247,9 @@ def grow_landmark(landmarks: Array, L: Array, U: Array, m_active: Array,
     landmarks: (M, hd) fixed-capacity landmark buffer for one head;
     (L, U): maintained eigendecomposition of g(landmarks, landmarks).
     """
-    from repro.core import inkpca, kernels_fn as kf
+    from repro.core import engine as eng, inkpca, kernels_fn as kf
 
+    plan = plan if plan is not None else eng.DEFAULT_PLAN
     M = landmarks.shape[0]
     spec = kf.KernelSpec(name="rbf", sigma=float(sigma))
     mask = jnp.arange(M) < m_active
@@ -257,7 +258,7 @@ def grow_landmark(landmarks: Array, L: Array, U: Array, m_active: Array,
     state = inkpca.KPCAState(L=L, U=U, m=m_active,
                              S=jnp.zeros((), L.dtype),
                              K1=jnp.zeros((M,), L.dtype), X=landmarks)
-    state = inkpca.update_unadjusted(state, a, k_new, new_lm, iters=iters)
+    state = inkpca.update_unadjusted(state, a, k_new, new_lm, plan=plan)
     return state.X, state.L, state.U, state.m
 
 

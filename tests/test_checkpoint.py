@@ -123,3 +123,71 @@ def test_train_resume_equivalence(tmp_path):
                     jax.tree.leaves(restored.params)):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32), atol=1e-6)
+
+
+# --------------------------------------------- KPCA / Nyström state trees ---
+def test_nystrom_state_roundtrip(tmp_path):
+    """NystromState (nested KPCAState + Knm + grow-rows Xrows) survives the
+    npz store bit-exactly, both row regimes."""
+    from repro.core import kernels_fn as kf, nystrom
+
+    rng = np.random.default_rng(4)
+    X = rng.normal(size=(20, 3))
+    spec = kf.KernelSpec(name="rbf", sigma=4.0)
+    for grow in (False, True):
+        if grow:
+            state = nystrom.init_nystrom(None, jnp.asarray(X[:4]),
+                                         capacity=8, spec=spec,
+                                         dtype=jnp.float64, grow_rows=True)
+            state = nystrom.observe_rows(state, jnp.asarray(X[4:]), spec)
+            state = nystrom.add_landmark(state, None, jnp.asarray(X[5]),
+                                         spec)
+        else:
+            state = nystrom.init_nystrom(jnp.asarray(X), jnp.asarray(X[:4]),
+                                         capacity=8, spec=spec,
+                                         dtype=jnp.float64)
+            state = nystrom.add_landmark(state, jnp.asarray(X),
+                                         jnp.asarray(X[5]), spec)
+        d = str(tmp_path / f"grow_{grow}")
+        save_checkpoint(d, 1, state)
+        out = load_checkpoint(d, 1, jax.eval_shape(lambda: state))
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_allclose(
+            np.asarray(nystrom.reconstruct_tilde(out)),
+            np.asarray(nystrom.reconstruct_tilde(state)), atol=0)
+
+
+def test_bucketed_kpca_midstream_resume_equivalence(tmp_path):
+    """Save a bucketed stream mid-bucket (m inside M_b), restore, continue:
+    the result must match the uninterrupted bucketed run exactly, bucket
+    crossings included."""
+    from repro.core import inkpca, kernels_fn as kf
+
+    rng = np.random.default_rng(9)
+    X = rng.normal(size=(26, 4))
+    spec = kf.KernelSpec(name="rbf", sigma=5.0)
+
+    def make_stream():
+        return inkpca.KPCAStream(jnp.asarray(X[:4]), 32, spec,
+                                 adjusted=True, dtype=jnp.float64,
+                                 dispatch="bucketed", min_bucket=8)
+
+    straight = make_stream()
+    straight.update_block(jnp.asarray(X[4:]))
+
+    part = make_stream()
+    part.update_block(jnp.asarray(X[4:14]))     # m=14, inside bucket 16
+    save_checkpoint(str(tmp_path), 14, part.state)
+
+    resumed = make_stream()                     # "crash": fresh process
+    resumed.state = load_checkpoint(str(tmp_path), 14,
+                                    jax.eval_shape(lambda: part.state))
+    assert int(resumed.state.m) == 14
+    resumed.update_block(jnp.asarray(X[14:]))   # crosses bucket 16 -> 32
+
+    assert int(resumed.state.m) == int(straight.state.m) == 26
+    for a, b in zip(jax.tree.leaves(straight.state),
+                    jax.tree.leaves(resumed.state)):
+        np.testing.assert_allclose(np.asarray(a, np.float64),
+                                   np.asarray(b, np.float64), atol=1e-12)

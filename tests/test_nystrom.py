@@ -74,3 +74,62 @@ def test_full_landmark_set_is_exact():
 def test_error_norms_fields():
     e = nystrom.approximation_error(jnp.eye(4), jnp.zeros((4, 4)))
     assert e.fro == 2.0 and e.spectral == 1.0 and e.trace == 4.0
+
+
+# ------------------------------------------------------ growing row mode ---
+def test_grow_rows_matches_batch_gram():
+    """grow_rows: Knm rows appended as the stream is observed must equal
+    the batch gram of (observed points, landmarks) at every size."""
+    X = RNG.normal(size=(30, 4))
+    sigma = float(np.median(((X[:, None] - X[None]) ** 2).sum(-1)))
+    spec = kf.KernelSpec(name="rbf", sigma=sigma)
+    state = nystrom.init_nystrom(None, jnp.asarray(X[:4]), capacity=16,
+                                 spec=spec, dtype=jnp.float64,
+                                 grow_rows=True)
+    for i in range(4, 30):
+        state = nystrom.observe_rows(state, jnp.asarray(X[i]), spec)
+        if i % 3 == 0:      # every third observed point becomes a landmark
+            state = nystrom.add_landmark(state, None, jnp.asarray(X[i]),
+                                         spec)
+    m = int(state.kpca.m)
+    assert state.Knm.shape[0] == 30         # memory tracks the stream
+    landmarks = jnp.asarray(np.asarray(state.kpca.X[:m]))
+    ref = np.asarray(kf.gram_block(state.Xrows, landmarks, spec=spec))
+    np.testing.assert_allclose(np.asarray(state.Knm[:, :m]), ref,
+                               atol=1e-10)
+    # inactive columns stay zero
+    assert float(jnp.abs(state.Knm[:, m:]).max()) == 0.0
+
+
+def test_grow_rows_reconstruction_matches_fixed_rows():
+    """Same landmarks + same rows => grow_rows reconstruction equals the
+    dense init_nystrom path."""
+    X = RNG.normal(size=(18, 3))
+    spec = kf.KernelSpec(name="rbf", sigma=4.0)
+    fixed = nystrom.init_nystrom(jnp.asarray(X), jnp.asarray(X[:4]),
+                                 capacity=12, spec=spec, dtype=jnp.float64)
+    grown = nystrom.init_nystrom(None, jnp.asarray(X[:4]), capacity=12,
+                                 spec=spec, dtype=jnp.float64,
+                                 grow_rows=True)
+    grown = nystrom.observe_rows(grown, jnp.asarray(X[4:]), spec)
+    for i in range(4, 9):
+        fixed = nystrom.add_landmark(fixed, jnp.asarray(X),
+                                     jnp.asarray(X[i]), spec)
+        grown = nystrom.add_landmark(grown, None, jnp.asarray(X[i]), spec)
+    np.testing.assert_allclose(np.asarray(nystrom.reconstruct_tilde(grown)),
+                               np.asarray(nystrom.reconstruct_tilde(fixed)),
+                               atol=1e-9)
+
+
+def test_grow_rows_argument_validation():
+    X = jnp.asarray(RNG.normal(size=(6, 3)))
+    spec = kf.KernelSpec(name="rbf", sigma=4.0)
+    import pytest
+    with pytest.raises(ValueError):
+        nystrom.init_nystrom(X, X[:2], capacity=8, spec=spec, grow_rows=True)
+    with pytest.raises(ValueError):
+        nystrom.init_nystrom(None, X[:2], capacity=8, spec=spec)
+    fixed = nystrom.init_nystrom(X, X[:2], capacity=8, spec=spec,
+                                 dtype=jnp.float64)
+    with pytest.raises(ValueError):
+        nystrom.observe_rows(fixed, X[3], spec)

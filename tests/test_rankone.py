@@ -152,3 +152,87 @@ def test_sentinelize_keeps_active_sorted_top():
     L = jnp.asarray([3.0, 1.0, 0.0, 0.0])
     Ls = rankone.sentinelize(L, jnp.int32(2), jnp.float64(0.0))
     assert float(Ls[2]) > 3.0 and float(Ls[3]) > float(Ls[2])
+
+
+# --------------------------------------------- fused-pair merge fallback ---
+def _clustered_eigensystem(m, M, n_cluster, seed, width=1e-14):
+    """Eigensystem with a near-degenerate cluster (dlaed2 territory)."""
+    rng = np.random.default_rng(seed)
+    lam = np.sort(np.concatenate([
+        2.0 + rng.normal(size=n_cluster) * width,
+        rng.uniform(3.0, 6.0, size=m - n_cluster)]))
+    vec, _ = np.linalg.qr(rng.normal(size=(m, m)))
+    L = np.zeros(M)
+    U = np.eye(M)
+    L[:m] = lam
+    U[:m, :m] = vec
+    L = rankone.sentinelize(jnp.asarray(L), jnp.int32(m), jnp.float64(0.0))
+    v1 = np.zeros(M)
+    v2 = np.zeros(M)
+    v1[:m] = rng.normal(size=m)
+    v2[:m] = rng.normal(size=m)
+    return jnp.asarray(L), jnp.asarray(U), jnp.asarray(v1), jnp.asarray(v2)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("sigma", [1.3, -0.8])
+def test_pair_merge_fallback_on_clustered_spectrum(seed, sigma):
+    """When a dlaed2 cluster-merge fires, the fused pair must cond into the
+    sequential two-update path (ROADMAP follow-up): eigenvalues AND
+    orthogonality must match two rank_one_update calls exactly."""
+    m, M = 10, 16
+    L, U, v1, v2 = _clustered_eigensystem(m, M, n_cluster=4, seed=seed)
+    z1 = U.T @ v1
+    assert bool(rankone._merge_fires(L, z1, jnp.float64(sigma),
+                                     jnp.int32(m)))
+
+    Ls, Us = rankone.rank_one_update(L, U, v1, jnp.float64(sigma),
+                                     jnp.int32(m))
+    Ls, Us = rankone.rank_one_update(Ls, Us, v2, jnp.float64(-sigma),
+                                     jnp.int32(m))
+    Lp, Up = rankone.rank_one_update_pair(L, U, v1, jnp.float64(sigma),
+                                          v2, jnp.float64(-sigma),
+                                          jnp.int32(m))
+    np.testing.assert_allclose(np.asarray(Lp[:m]), np.asarray(Ls[:m]),
+                               atol=1e-10)
+    np.testing.assert_allclose(np.abs(np.asarray(Up[:m, :m])),
+                               np.abs(np.asarray(Us[:m, :m])), atol=1e-10)
+    G = np.asarray(Up[:m, :m]).T @ np.asarray(Up[:m, :m])
+    assert np.abs(G - np.eye(m)).max() < 1e-9
+
+
+def test_pair_no_fallback_on_clean_spectrum():
+    """A well-separated spectrum must NOT trip the fallback (the fused
+    rotation is the steady-state path)."""
+    m, M = 10, 16
+    _, L, U = _padded_eigensystem(m, M)
+    v = np.zeros(M)
+    v[:m] = RNG.normal(size=m)
+    z = jnp.asarray(U).T @ jnp.asarray(v)
+    assert not bool(rankone._merge_fires(jnp.asarray(L), z,
+                                         jnp.float64(1.3), jnp.int32(m)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n_cluster=st.integers(2, 6),
+       sigma=st.sampled_from([0.7, -0.7, 2.5]))
+def test_pair_merge_fallback_property(seed, n_cluster, sigma):
+    """Property form: for random near-degenerate spectra the fused pair
+    (with fallback) always reproduces the sequential path and keeps the
+    updated eigenvectors orthogonal."""
+    m, M = 9, 12
+    L, U, v1, v2 = _clustered_eigensystem(m, M, n_cluster=n_cluster,
+                                          seed=seed,
+                                          width=10.0 ** -np.random.default_rng(
+                                              seed).integers(12, 16))
+    Ls, Us = rankone.rank_one_update(L, U, v1, jnp.float64(sigma),
+                                     jnp.int32(m))
+    Ls, Us = rankone.rank_one_update(Ls, Us, v2, jnp.float64(-sigma),
+                                     jnp.int32(m))
+    Lp, Up = rankone.rank_one_update_pair(L, U, v1, jnp.float64(sigma),
+                                          v2, jnp.float64(-sigma),
+                                          jnp.int32(m))
+    np.testing.assert_allclose(np.asarray(Lp[:m]), np.asarray(Ls[:m]),
+                               atol=1e-9)
+    G = np.asarray(Up[:m, :m]).T @ np.asarray(Up[:m, :m])
+    assert np.abs(G - np.eye(m)).max() < 1e-8

@@ -155,3 +155,40 @@ def test_sharded_rank_one_update_matches_local():
     np.testing.assert_allclose(np.asarray(Ls), np.asarray(Ll), atol=1e-10)
     np.testing.assert_allclose(np.abs(np.asarray(Us)),
                                np.abs(np.asarray(Ul)), atol=1e-8)
+
+
+def test_sharded_pair_update_matches_local_pair():
+    """Fused ±sigma pair under shard_map (one psum for both z vectors) must
+    match the local fused pair; plans come from the engine layer."""
+    from repro.core import distributed as dkpca, engine as eng, rankone
+
+    rng = np.random.default_rng(8)
+    m, M = 10, 16
+    A = rng.normal(size=(m, m)); A = A @ A.T
+    lam, vec = np.linalg.eigh(A)
+    L = np.zeros(M); U = np.eye(M)
+    L[:m] = lam; U[:m, :m] = vec
+    L = rankone.sentinelize(jnp.asarray(L), jnp.int32(m), jnp.float64(0.0))
+    v1 = np.zeros(M); v1[:m] = rng.normal(size=m)
+    v2 = np.zeros(M); v2[:m] = rng.normal(size=m)
+
+    mesh = jax.make_mesh((1,), ("data",))
+    pair = dkpca.make_sharded_update_pair(mesh, plan=eng.UpdatePlan())
+    Ls, Us = pair(jnp.asarray(L), jnp.asarray(U), jnp.asarray(v1),
+                  jnp.float64(1.7), jnp.asarray(v2), jnp.float64(-1.7),
+                  jnp.int32(m))
+    Ll, Ul = rankone.rank_one_update_pair(
+        jnp.asarray(L), jnp.asarray(U), jnp.asarray(v1), jnp.float64(1.7),
+        jnp.asarray(v2), jnp.float64(-1.7), jnp.int32(m), precise=False,
+        merge_fallback=False)
+    np.testing.assert_allclose(np.asarray(Ls), np.asarray(Ll), atol=1e-10)
+    np.testing.assert_allclose(np.abs(np.asarray(Us)),
+                               np.abs(np.asarray(Ul)), atol=1e-8)
+    # and against two sequential local updates (end-to-end semantics)
+    L2, U2 = rankone.rank_one_update(jnp.asarray(L), jnp.asarray(U),
+                                     jnp.asarray(v1), jnp.float64(1.7),
+                                     jnp.int32(m))
+    L2, U2 = rankone.rank_one_update(L2, U2, jnp.asarray(v2),
+                                     jnp.float64(-1.7), jnp.int32(m))
+    np.testing.assert_allclose(np.asarray(Ls[:m]), np.asarray(L2[:m]),
+                               atol=1e-8)
