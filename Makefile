@@ -11,13 +11,15 @@ check:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --quick --only flops_table
 	$(MAKE) bench-smoke
 
-# Toy-size perf-driver smoke: exercises the update-scaling and multi-tenant
-# benchmark drivers end-to-end and fails on non-finite output, so the perf
-# harness can't silently rot between full benchmark runs.  Never overwrites
-# the tracked BENCH_*.json numbers.
+# Toy-size perf-driver smoke: exercises the update-scaling, multi-tenant
+# and sharded benchmark drivers end-to-end and fails on non-finite output,
+# so the perf harness can't silently rot between full benchmark runs.
+# Never overwrites the tracked BENCH_*.json numbers.  (bench_sharded
+# re-execs itself per device count to set the XLA host-device override.)
 bench-smoke:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.bench_update_scaling --smoke
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.bench_multitenant --smoke
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.bench_sharded --smoke
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -q -m "not slow"

@@ -14,6 +14,13 @@ Two paths are timed at the same active count m and capacity M:
 * ``vmapped``— one ``engine.StreamBatch.update`` per round (one device
                step for the whole cohort, bucketed at max_i m_i).
 
+A second section times a MIXED-size cohort (m_i spread >= 4x): the
+``cohorts="max"`` baseline runs every tenant at the bucket of max_i m_i,
+while ``cohorts="bucket"`` (bucket-homogeneous cohorts) groups tenants by
+their own active bucket and runs one vmapped step per group at that
+group's M_b — small tenants stop paying the largest tenant's O(M³) and
+O(iters·M²).
+
 Emits ``BENCH_multitenant.json`` at the repo root.  ``--smoke`` runs a
 toy configuration, skips the JSON, and exits non-zero on non-finite
 output (the ``make bench-smoke`` gate).
@@ -39,6 +46,70 @@ def _check_finite(name: str, *arrays) -> None:
     for arr in arrays:
         if not bool(jnp.isfinite(arr).all()):
             raise SystemExit(f"[multitenant] non-finite output in {name}")
+
+
+def _grow_mixed(cohorts: str, m_per_tenant, capacity: int, d: int,
+                min_bucket: int, spec, rng) -> "eng.StreamBatch":
+    """A StreamBatch whose tenant i sits at active count m_per_tenant[i]."""
+    B = len(m_per_tenant)
+    m0 = 4
+    plan = eng.UpdatePlan(dispatch="bucketed", min_bucket=min_bucket)
+    seeds = jnp.asarray(rng.normal(size=(B, m0, d)), jnp.float32)
+    batch = eng.StreamBatch(seeds, capacity, spec, plan=plan, adjusted=True,
+                            cohorts=cohorts)
+    targets = np.asarray(m_per_tenant)
+    for step in range(int(targets.max()) - m0):
+        active = (m0 + step) < targets
+        xs = jnp.asarray(rng.normal(size=(B, d)), jnp.float32)
+        batch.update(xs, active=jnp.asarray(active))
+    return batch
+
+
+def bench_mixed_cohort(capacity: int, d: int, rounds: int, smoke: bool,
+                       rng) -> dict:
+    """Mixed-size cohort: bucket-homogeneous groups vs the max-m_i bucket.
+
+    Tenant sizes are chosen with enough headroom below their buckets that
+    no bucket crossing happens inside the timed window, so both paths run
+    fully-active steps at a stable bucket assignment.
+    """
+    if smoke:
+        m_profile, min_bucket, rounds = [4, 4, 4, 16], 8, 3
+        capacity = min(capacity, 64)
+    else:
+        # spread 100/16 > 6x: six small tenants in the 32-bucket, two
+        # large ones in the 128-bucket; rounds+warmup stays below both
+        # bucket boundaries.
+        m_profile, min_bucket = [16, 16, 16, 16, 16, 16, 100, 100], 32
+        rounds = min(rounds, 12)
+    spec = kf.KernelSpec(name="rbf", sigma=float(d))
+    B = len(m_profile)
+    xs_rounds = [jnp.asarray(rng.normal(size=(B, d)), jnp.float32)
+                 for _ in range(rounds)]
+
+    results = {}
+    for cohorts in ("max", "bucket"):
+        batch = _grow_mixed(cohorts, m_profile, capacity, d, min_bucket,
+                            spec, rng)
+        # warm-up at the final bucket assignment
+        batch.update(jnp.asarray(rng.normal(size=(B, d)), jnp.float32))
+        jax.block_until_ready([st.L for st in batch.working_states()])
+        ts = []
+        for xs in xs_rounds:
+            t0 = time.perf_counter()
+            batch.update(xs)
+            jax.block_until_ready([st.L for st in batch.working_states()])
+            ts.append(time.perf_counter() - t0)
+        results[cohorts] = float(np.median(ts))
+        _check_finite(f"mixed/{cohorts}",
+                      *(st.L for st in batch.working_states()))
+    return {
+        "m_profile": m_profile,
+        "min_bucket": min_bucket,
+        "mixed_step_s_max": results["max"],
+        "mixed_step_s_bucket": results["bucket"],
+        "speedup_bucket_cohorts": results["max"] / results["bucket"],
+    }
 
 
 def main(tenants: int = 8, capacity: int = 512, m_target: int = 64,
@@ -112,6 +183,13 @@ def main(tenants: int = 8, capacity: int = 512, m_target: int = 64,
           f"vmapped {t_vmap * 1e3:.1f} ms/round "
           f"({result['aggregate_updates_per_s_vmapped']:.0f} upd/s) "
           f"-> {result['speedup_vmapped']:.1f}x")
+
+    mixed = bench_mixed_cohort(capacity, d, rounds, smoke, rng)
+    result.update(mixed)
+    print(f"[multitenant] mixed cohort m={mixed['m_profile']}: "
+          f"max-bucket {mixed['mixed_step_s_max'] * 1e3:.1f} ms/step, "
+          f"bucket-homogeneous {mixed['mixed_step_s_bucket'] * 1e3:.1f} "
+          f"ms/step -> {mixed['speedup_bucket_cohorts']:.1f}x")
     if not smoke:
         OUT_PATH.write_text(json.dumps(result, indent=2) + "\n")
         print(f"[multitenant] wrote {OUT_PATH}")

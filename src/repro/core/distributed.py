@@ -14,21 +14,40 @@ Sharding scheme (designed for the production mesh in ``repro.launch.mesh``):
 
 All updates are constructed from an ``engine.UpdatePlan`` — the same
 object that drives the local and serving paths — so the sharded body
-shares ``rankone``'s factor pipeline verbatim: ``plan.matmul`` selects the
-rotation backend (the Pallas kernel with active-tile pruning engages
-whenever the local row block is square, i.e. P == 1 meshes or per-host
-sub-meshes; multi-device row blocks take the dense route), and the fused
-spellings ('jnp2'/'pallas2') route ±sigma pairs through
-``make_sharded_update_pair`` — ONE psum for both z vectors instead of two
-sequential collectives, with the O(M³/P) rotation applied once.
+shares ``rankone``'s factor pipeline verbatim (including the dlaed2
+cluster-merge: its Householder reflector acts on U's *columns*, which are
+local to every row block).  ``plan.matmul`` selects the rotation backend:
+the Pallas kernels take rectangular (M/P, M) row blocks directly, with
+each block's ``row_offset`` (= axis_index · M/P) driving row-axis
+active-tile pruning, so P > 1 meshes keep the paper's O(m³) per-update
+flop count instead of falling back to dense O(M³/P) rotations.  The
+fused spellings ('jnp2'/'pallas2') route ±sigma pairs through
+``make_sharded_update_pair``.
 
-Per update the communication volume is M floats (one all-reduce) against
-O(M^2 / P) local flops — strongly compute-bound for M ≳ P, which is what the
-roofline analysis in EXPERIMENTS.md shows.
+``plan.dispatch == "bucketed"`` additionally slices every *local* operand
+to the active power-of-two bucket before the update — row blocks become
+(min(M/P, M_b), M_b) rectangles — so the replicated secular solve runs at
+O(M_b²·iters) and the rotation at the bucket size, mirroring the engine's
+single-stream bucketed dispatch.  The global (sharded) shapes never
+change, so the slicing composes with any mesh; each bucket rung compiles
+once (host-side ``int(m)`` read per call, as in ``engine.rank_one``).
+
+Fused-pair merge fallback (``plan.merge_fallback``): the fused rotation
+skips the dlaed2 cluster-merge, so clustered spectra need the sequential
+two-update path.  Collectives inside a ``lax.cond`` branch would deadlock
+a multi-device mesh if any device disagreed on the predicate, so the pair
+body is *collective-balanced*: BOTH psums are always issued outside the
+conds (the fused steady state pays one redundant O(M) all-reduce), and
+the cond branches contain only local compute.  The merge predicate is a
+deterministic function of replicated operands, so every device takes the
+same branch.
+
+Per update the communication volume is M floats (one all-reduce; two for
+a guarded fused pair) against O(M_b²·m/P) local flops — strongly
+compute-bound for M ≳ P, which is what the roofline analysis in
+EXPERIMENTS.md shows.
 """
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -41,49 +60,94 @@ from repro.distributed.sharding import shard_map as _shard_map
 Array = jax.Array
 
 
+def _solve_kwargs(plan: eng.UpdatePlan, dtype) -> dict:
+    return dict(iters=eng.resolve_iters(plan.iters, dtype),
+                method=plan.method, precise=plan.precise)
+
+
 def _rank_one_update_sharded(L, U_local, v_local, sigma, m, *,
-                             axis: str, plan: eng.UpdatePlan):
+                             axis: str, plan: eng.UpdatePlan,
+                             rows_full: int | None = None):
     """Body run under shard_map: U_local is a row block of U.
 
-    The solve pipeline (deflation thresholds, flip identity, secular
-    bisection) is ``rankone._solve_factor`` — the same one the local and
-    fused paths use — run replicated on every device; no cluster-merge
-    (the fused pair path's fallback would need collectives inside a cond).
-    Only the row-block rotation is local; ``rankone._apply_factor`` routes
-    it through the Pallas kernel with active-tile pruning when the block
-    is square, dense Cauchy factors otherwise.
+    z comes from ONE psum; everything after is ``rankone._update_body`` —
+    the exact single-device pipeline (deflation thresholds, dlaed2
+    cluster-merge, flip identity, secular bisection) run replicated, with
+    only the row-block rotation local.  ``rankone._apply_factor`` routes
+    it through the rectangular Pallas kernel with row/column active-tile
+    pruning (``row_offset`` = this device's first global row; bucketed
+    dispatch passes the pre-slicing local row count as ``rows_full`` so
+    the offset stays the global one).
     """
-    M = L.shape[0]
-    mask = rankone.active_mask(M, m)
-
+    r0 = jax.lax.axis_index(axis) * (rows_full or U_local.shape[0])
     z = jax.lax.psum(U_local.T @ v_local, axis)
-    room = jnp.abs(sigma) * jnp.sum(z * z)
-    d_sent = rankone.sentinelize(L, m, room)
-    scale = jnp.max(jnp.abs(jnp.where(mask, L, 0.0))) + room + 1e-30
-    f = rankone._solve_factor(d_sent, z, sigma, m, scale,
-                              iters=eng.resolve_iters(plan.iters, L.dtype),
-                              method=plan.method, precise=plan.precise)
-    U_new = rankone._apply_factor(U_local, f, mask, m,
-                                  matmul=plan.inner_matmul)
-    perm = jnp.argsort(f.L_new)     # deflation can locally reorder
-    return f.L_new[perm], U_new[:, perm]
+    return rankone._update_body(L, U_local, v_local, sigma, m,
+                                matmul=plan.inner_matmul, z=z, row_offset=r0,
+                                **_solve_kwargs(plan, L.dtype))
 
 
 def _rank_one_update_pair_sharded(L, U_local, v1_local, sigma1, v2_local,
                                   sigma2, m, *, axis: str,
-                                  plan: eng.UpdatePlan):
-    """Fused ±sigma pair under shard_map: ONE psum carries both z vectors,
-    z₂ = U₁ᵀv₂ comes from the Cauchy transpose-matvec (replicated, no
-    second collective), and the local row block is rotated once by both
-    factors (``rankone._pair_rotate_block``)."""
+                                  plan: eng.UpdatePlan,
+                                  rows_full: int | None = None):
+    """Fused ±sigma pair under shard_map, with a collective-balanced
+    merge fallback.
+
+    ONE psum carries both z vectors; z₂ = U₁ᵀv₂ for the fused path comes
+    from the Cauchy transpose-matvec (replicated, no collective).  When
+    ``plan.merge_fallback`` is set, a dlaed2 cluster-merge firing on
+    either update re-routes the pair through the sequential two-update
+    pipeline — and to keep a multi-device mesh deadlock-free the second
+    psum is ALWAYS issued (on the post-update-1 row block, which is the
+    unchanged U when no merge fired), so both cond branches contain only
+    local compute and every device runs an identical collective schedule.
+    """
+    r0 = jax.lax.axis_index(axis) * (rows_full or U_local.shape[0])
+    kw = _solve_kwargs(plan, L.dtype)
     Z = jax.lax.psum(U_local.T @ jnp.stack([v1_local, v2_local], axis=1),
                      axis)
-    pf = rankone._pair_solve(L, Z[:, 0], sigma1, Z[:, 1], sigma2, m,
-                             iters=eng.resolve_iters(plan.iters, L.dtype),
-                             method=plan.method, precise=plan.precise)
-    U_new = rankone._pair_rotate_block(U_local, pf, m,
-                                       matmul=plan.inner_matmul)
-    return pf.L_new[pf.perm2], U_new
+    pf = rankone._pair_solve(L, Z[:, 0], sigma1, Z[:, 1], sigma2, m, **kw)
+
+    def _fused(U):
+        return pf.L_new[pf.perm2], rankone._pair_rotate_block(
+            U, pf, m, matmul=plan.inner_matmul, row_offset=r0)
+
+    if not plan.merge_fallback:
+        return _fused(U_local)
+
+    def _seq1(U):
+        return rankone._update_body(L, U, v1_local, sigma1, m, z=Z[:, 0],
+                                    row_offset=r0,
+                                    matmul=plan.inner_matmul, **kw)
+
+    def _keep(U):
+        return L, U
+
+    # Stage 1 (local compute only): run sequential update 1 iff a merge
+    # fires; otherwise pass the row block through untouched.
+    L1, U1 = jax.lax.cond(pf.merge_fired, _seq1, _keep, U_local)
+    # Collective balance: psum 2 is unconditional.  Merge-free steady
+    # state: U1 == U_local, so this recomputes Z[:, 1] redundantly — the
+    # O(M) price of a deadlock-free fallback.
+    z2 = jax.lax.psum(U1.T @ v2_local, axis)
+
+    def _seq2(U):
+        return rankone._update_body(L1, U, v2_local, sigma2, m, z=z2,
+                                    row_offset=r0,
+                                    matmul=plan.inner_matmul, **kw)
+
+    return jax.lax.cond(pf.merge_fired, _seq2, _fused, U1)
+
+
+# ------------------------------------------------- bucketed local slicing --
+# Soundness of the local bucket slice (L -> L[:Mb], row block ->
+# (min(R, Mb), Mb)) mirrors ``engine.slice_state`` plus one sharded
+# argument: every global row excluded from some device's slice has index
+# >= Mb (devices past the first keep rows whose global index starts at
+# R >= min(R, Mb); the first device keeps min(R, Mb) rows), and such rows
+# are exact identity rows with their unit entry OUTSIDE the sliced
+# columns — they contribute nothing to z and are provably unchanged by
+# the update, so slicing loses nothing while m < M_b.
 
 
 def make_sharded_update(mesh, *, axis: str = "data",
@@ -91,35 +155,113 @@ def make_sharded_update(mesh, *, axis: str = "data",
     """Build a pjit-compatible sharded rank-one update over ``mesh``.
 
     Returns f(L, U, v, sigma, m) with U sharded P(axis, None); everything
-    else replicated.  Composable under jit with other computation.
+    else replicated.  Composable under jit with other computation.  With
+    ``plan.dispatch == "bucketed"`` the returned callable reads
+    ``int(m)`` on the host and dispatches to a per-bucket compilation
+    whose local operands are sliced to the bucket (see module docstring).
     """
-    body = partial(_rank_one_update_sharded, axis=axis, plan=plan)
-    return _shard_map(
-        body, mesh=mesh,
-        in_specs=(P(), P(axis, None), P(axis), P(), P()),
-        out_specs=(P(), P(axis, None)),
-        check_vma=False,
-    )
+
+    def fixed_body(L, U_local, v_local, sigma, m):
+        return _rank_one_update_sharded(L, U_local, v_local, sigma, m,
+                                        axis=axis, plan=plan)
+
+    def sliced_body(Mb: int):
+        def body(L, U_local, v_local, sigma, m):
+            R = U_local.shape[0]
+            Rb = min(R, Mb)
+            Lb, Ub = _rank_one_update_sharded(
+                L[:Mb], U_local[:Rb, :Mb], v_local[:Rb], sigma, m,
+                axis=axis, plan=plan, rows_full=R)
+            L_new = rankone.sentinelize(L.at[:Mb].set(Lb), m,
+                                        jnp.zeros((), L.dtype))
+            return L_new, U_local.at[:Rb, :Mb].set(Ub)
+
+        return body
+
+    def build(Mb: int | None):
+        body = fixed_body if Mb is None else sliced_body(Mb)
+        # jit the shard_map so repeated eager calls hit the compile cache
+        # (bare shard_map re-traces per call).
+        return jax.jit(_shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(axis, None), P(axis), P(), P()),
+            out_specs=(P(), P(axis, None)),
+            check_vma=False,
+        ))
+
+    if plan.dispatch != "bucketed":
+        return build(None)
+
+    cache: dict[int, object] = {}
+
+    def dispatch(L, U, v, sigma, m):
+        M = L.shape[0]
+        # A rank-one update never grows m, so the bucket holds m itself
+        # (matching engine.rank_one): full-capacity states stay legal and
+        # m sitting exactly on a rung doesn't jump to the next one.
+        Mb = eng.bucket_for(max(int(m), 1), M, plan.min_bucket)
+        key = Mb if Mb < M else -1
+        if key not in cache:
+            cache[key] = build(None if Mb >= M else Mb)
+        return cache[key](L, U, v, sigma, m)
+
+    return dispatch
 
 
 def make_sharded_update_pair(mesh, *, axis: str = "data",
                              plan: eng.UpdatePlan = eng.DEFAULT_PLAN):
     """Sharded fused ±sigma pair: f(L, U, v1, sigma1, v2, sigma2, m).
 
-    Halves the collectives of two sequential sharded updates (one psum for
-    both z vectors) and reads/writes each U row block once.  Like the
-    local fused path it skips the dlaed2 cluster-merge; unlike the local
-    path there is no cond fallback (collectives inside a cond branch would
-    deadlock a multi-device mesh), so pathologically clustered spectra
-    should use two ``make_sharded_update`` calls instead.
+    Reads/writes each U row block once in the merge-free steady state and
+    issues two psums total (one carrying both z vectors, one balancing
+    the fallback — see module docstring).  ``plan.merge_fallback`` re-runs
+    clustered-spectrum pairs through the sequential two-update pipeline
+    under a cond whose branches are collective-free, closing the PR-2
+    clustered-spectrum gap without risking a mesh deadlock.  Bucketed
+    dispatch slices local operands exactly as ``make_sharded_update``.
     """
-    body = partial(_rank_one_update_pair_sharded, axis=axis, plan=plan)
-    return _shard_map(
-        body, mesh=mesh,
-        in_specs=(P(), P(axis, None), P(axis), P(), P(axis), P(), P()),
-        out_specs=(P(), P(axis, None)),
-        check_vma=False,
-    )
+
+    def fixed_body(L, U_local, v1_local, sigma1, v2_local, sigma2, m):
+        return _rank_one_update_pair_sharded(L, U_local, v1_local, sigma1,
+                                             v2_local, sigma2, m,
+                                             axis=axis, plan=plan)
+
+    def sliced_pair_body(Mb: int):
+        def body(L, U_local, v1_local, sigma1, v2_local, sigma2, m):
+            R = U_local.shape[0]
+            Rb = min(R, Mb)
+            Lb, Ub = _rank_one_update_pair_sharded(
+                L[:Mb], U_local[:Rb, :Mb], v1_local[:Rb], sigma1,
+                v2_local[:Rb], sigma2, m, axis=axis, plan=plan, rows_full=R)
+            L_new = rankone.sentinelize(L.at[:Mb].set(Lb), m,
+                                        jnp.zeros((), L.dtype))
+            return L_new, U_local.at[:Rb, :Mb].set(Ub)
+
+        return body
+
+    def build(Mb: int | None):
+        body = fixed_body if Mb is None else sliced_pair_body(Mb)
+        return jax.jit(_shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(axis, None), P(axis), P(), P(axis), P(), P()),
+            out_specs=(P(), P(axis, None)),
+            check_vma=False,
+        ))
+
+    if plan.dispatch != "bucketed":
+        return build(None)
+
+    cache: dict[int, object] = {}
+
+    def dispatch(L, U, v1, sigma1, v2, sigma2, m):
+        M = L.shape[0]
+        Mb = eng.bucket_for(max(int(m), 1), M, plan.min_bucket)
+        key = Mb if Mb < M else -1
+        if key not in cache:
+            cache[key] = build(None if Mb >= M else Mb)
+        return cache[key](L, U, v1, sigma1, v2, sigma2, m)
+
+    return dispatch
 
 
 def make_sharded_expand(mesh, *, axis: str = "data"):
@@ -133,12 +275,12 @@ def make_sharded_expand(mesh, *, axis: str = "data"):
         perm = jnp.argsort(L)
         return L[perm], U_local[:, perm], m_new
 
-    return _shard_map(
+    return jax.jit(_shard_map(
         body, mesh=mesh,
         in_specs=(P(), P(axis, None), P(), P()),
         out_specs=(P(), P(axis, None), P()),
         check_vma=False,
-    )
+    ))
 
 
 def sharded_gram_row(mesh, spec: kf.KernelSpec, *, axis: str = "data"):
@@ -147,5 +289,5 @@ def sharded_gram_row(mesh, spec: kf.KernelSpec, *, axis: str = "data"):
     def body(X_local, x_new):
         return kf.kernel_row(x_new, X_local, spec=spec)
 
-    return _shard_map(body, mesh=mesh, in_specs=(P(axis, None), P()),
-                         out_specs=P(axis), check_vma=False)
+    return jax.jit(_shard_map(body, mesh=mesh, in_specs=(P(axis, None), P()),
+                              out_specs=P(axis), check_vma=False))

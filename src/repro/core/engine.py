@@ -408,13 +408,21 @@ class Engine:
         return rank_one(L, U, v, sigma, m, plan=self.plan)
 
     # ---- Nyström landmarks ------------------------------------------------
-    def add_landmark(self, state, x_all, x_new: Array):
+    def add_landmark(self, state, x_all, x_new: Array, *,
+                     min_rows: int = 0):
         """Bucketed ``nystrom.add_landmark``: the O(M³) eigensystem update
-        and the O(n·M) column write both run at bucket capacity."""
+        and the O(n·M) column write both run at bucket capacity.
+
+        ``min_rows`` is the row-support floor, exactly as in ``update``: a
+        truncated-but-UNcompacted state keeps eigenvector mass on rows
+        beyond m, and bucketing below that support silently discards it —
+        pass the pre-truncation landmark count until the state is
+        compacted (``truncate(..., compact=True)`` needs no floor).
+        """
         from repro.core import nystrom
 
         M = state.kpca.L.shape[0]
-        Mb = self._bucket(M, int(state.kpca.m) + 1)
+        Mb = self._bucket(M, max(int(state.kpca.m) + 1, min_rows))
         plan = self.plan.kernel_plan()
         if Mb == M:
             return nystrom.add_landmark(state, x_all, x_new, self.spec,
@@ -449,7 +457,15 @@ class Engine:
           bucketed-dispatch engine compacts at UNCHANGED capacity, so a
           bare ``engine.truncate(state, k)`` is always safe to keep
           streaming from without any ``min_rows`` bookkeeping.
+
+        A ``NystromState`` (anything with a ``.kpca`` field) is routed
+        through ``_truncate_nystrom``: its rows are OBSERVED landmarks
+        with live ``Knm`` columns, so compaction is clamped to the
+        row-support floor instead of dropping out-of-support mass.
         """
+        if hasattr(state, "kpca"):
+            return self._truncate_nystrom(state, k, compact=compact,
+                                          capacity=capacity)
         keep_capacity = False
         if compact is None:
             compact = self.plan.compact_shrink
@@ -467,6 +483,70 @@ class Engine:
         if compact:
             out = self.compact(out, capacity=M if keep_capacity else capacity)
         return out
+
+    def _truncate_nystrom(self, state, k: int, *, compact: bool | None,
+                          capacity: int | None):
+        """Truncate a Nyström state's eigensystem without losing landmarks.
+
+        Unlike a pure KPCA stream — whose downstream consumers only ever
+        read the leading m rows — a Nyström state's rows are *observed*
+        landmarks: row j of the kpca block pairs with the live column
+        ``Knm[:, j]``, and ``nystrom_eigpairs``/``reconstruct_tilde``
+        contract over ALL rows carrying eigenvector mass.  Plain
+        ``compact`` would re-diagonalize the leading k×k block and drop
+        rows k..m — silently corrupting every later reconstruction.  Here
+        compaction is CLAMPED to the row-support floor r = m (the
+        landmark count): the truncated rank-k system is re-diagonalized
+        on all r rows (top-k spectrum plus r−k ≈ 0 eigenvalues), m stays
+        r, and the capacity shrinks to the bucket holding r+1 — memory
+        is freed without dropping a single observed row.  ``Knm`` columns
+        follow the new capacity; its rows (the observed stream) are never
+        touched.  An explicit ``capacity`` below r+1 raises.
+        """
+        kpca = state.kpca
+        if compact is None:
+            compact = (self.plan.compact_shrink
+                       or self.plan.dispatch == "bucketed")
+        r = int(kpca.m)                       # row-support floor: landmarks
+        trunc = self.truncate(kpca, k, compact=False)
+        if not compact:
+            # Uncompacted: eigenvector mass stays on all r landmark rows,
+            # and a bucketed engine would otherwise re-bucket at the NEW
+            # m and drop it — callers own the floor: pass min_rows=r (the
+            # pre-truncation landmark count) to every subsequent
+            # ``add_landmark``/``update`` until the state is compacted.
+            return state._replace(kpca=trunc)
+        M = kpca.L.shape[0]
+        cap = (capacity if capacity is not None
+               else bucket_for(r + 1, max(M, r + 1), self.plan.min_bucket))
+        if cap <= r:
+            raise ValueError(
+                f"compaction capacity {cap} would drop observed landmark "
+                f"rows (row support {r}) — Nyström compaction is clamped "
+                f"to the row-support floor")
+        dtype = kpca.L.dtype
+        mask = rankone.active_mask(M, trunc.m)
+        Lm = jnp.where(mask, trunc.L, 0.0)
+        Kc = ((trunc.U * Lm[None, :]) @ trunc.U.T)[:r, :r]
+        lam, vec = jnp.linalg.eigh(Kc)
+        # The block has rank <= k: flush the r-k numerically-zero
+        # eigenvalues to exact 0 so the Nyström pseudo-inverse consumers
+        # (nystrom_eigpairs / reconstruct_tilde) deflate them cleanly.
+        tol = r * jnp.finfo(dtype).eps * jnp.max(jnp.abs(lam))
+        lam = jnp.where(jnp.abs(lam) <= tol, 0.0, lam)
+        L = jnp.zeros((cap,), dtype).at[:r].set(lam.astype(dtype))
+        U = jnp.eye(cap, dtype=dtype).at[:r, :r].set(vec.astype(dtype))
+        mm = jnp.asarray(r, kpca.m.dtype)
+        L = rankone.sentinelize(L, mm, jnp.zeros((), dtype))
+        ncopy = min(cap, M)
+        K1 = jnp.zeros((cap,), dtype).at[:ncopy].set(kpca.K1[:ncopy])
+        X = jnp.zeros((cap,) + kpca.X.shape[1:],
+                      kpca.X.dtype).at[:ncopy].set(kpca.X[:ncopy])
+        new_kpca = kpca._replace(L=L, U=U, m=mm, K1=K1, X=X)
+        n = state.Knm.shape[0]
+        Knm = jnp.zeros((n, cap), state.Knm.dtype)
+        Knm = Knm.at[:, :ncopy].set(state.Knm[:, :ncopy])
+        return state._replace(kpca=new_kpca, Knm=Knm)
 
     def compact(self, state, capacity: int | None = None):
         """Re-express the active eigensystem on its leading m rows and
@@ -510,43 +590,68 @@ class StreamBatch:
     The production-serving shape: rather than one Python loop per tenant
     (B dispatches per wall-clock step), one stacked ``KPCAState`` folds a
     point into every tenant's eigendecomposition in a single device step.
-    Per-tenant active counts ``m_i`` may diverge (pass ``active`` masks);
-    bucketed dispatch runs the whole cohort at the bucket of
-    ``max_i m_i + 1``, so a cohort's cost tracks its largest tenant.
+    Per-tenant active counts ``m_i`` may diverge (pass ``active`` masks).
+
+    Cohort geometry (``cohorts=``):
+
+    * ``"max"`` (default) — bucketed dispatch runs the whole cohort at
+      the bucket of ``max_i m_i + 1``, so a cohort's cost tracks its
+      largest tenant.
+    * ``"bucket"`` — **bucket-homogeneous cohorts**: tenants are grouped
+      by their own active bucket, and one step runs one vmapped update
+      per GROUP at that group's M_b.  A mixed-size cohort (m_i spread
+      ≥ the bucket ratio) then pays Σ_b |group_b|·O(M_b³) instead of
+      B·O(max_b M_b³); the per-step device dispatch count equals the
+      number of occupied buckets (≤ log2(M/min_bucket)+1), not B.
+      Group membership migrates at bucket crossings (host-side
+      regroup + re-slice, amortized like any bucket crossing).
 
     Unlike the single-stream engine (which slices and scatters the
     capacity-M state every step), the working state here is *bucket
-    resident*: it lives at the cohort bucket between crossings, the cohort
-    ceiling is tracked on the host (no per-step device sync), and the
-    capacity-M arrays are materialized only at bucket crossings or when
-    ``.states`` is read — so a serving step is exactly one vmapped update
-    with no slice/scatter traffic, and steps can pipeline.
+    resident*: it lives at the cohort/group bucket between crossings,
+    active counts are tracked on the host (exact: every folded point
+    advances its tenant's m by one), and the capacity-M arrays are
+    materialized only at bucket crossings or when ``.states`` is read —
+    so a serving step has no slice/scatter traffic, and steps can
+    pipeline.
 
     x0: (B, m0, d) per-tenant seed points (same m0; tenants that should
-    start smaller can simply skip steps via ``active``).
+    start smaller can simply skip steps via ``active`` — their m_i, and
+    with ``cohorts="bucket"`` their cost, stays behind the cohort's).
     """
 
     def __init__(self, x0: Array, capacity: int, spec: kf.KernelSpec, *,
                  plan: UpdatePlan = DEFAULT_PLAN, adjusted: bool = True,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, cohorts: str = "max"):
+        import numpy as np
+
         from repro.core import inkpca
 
         x0 = jnp.asarray(x0)
         if x0.ndim != 3:
             raise ValueError(f"x0 must be (tenants, m0, d), got {x0.shape}")
+        if cohorts not in ("max", "bucket"):
+            raise ValueError(f"cohorts must be 'max' or 'bucket', "
+                             f"got {cohorts!r}")
         self.spec = spec
         self.plan = plan
         self.adjusted = adjusted
         self.capacity = capacity
+        self.cohorts = cohorts
         self.n_tenants = int(x0.shape[0])
         self._full = jax.vmap(
             lambda x: inkpca.init_state(x, capacity, spec, adjusted=adjusted,
                                         dtype=dtype))(x0)
-        self._sub = None          # bucket-resident working state
+        self._sub = None          # bucket-resident working state ("max")
         self._Mb = capacity
         # Host-side upper bound on max_i m_i (exact while every step is
         # fully active; re-synced from the device at crossings).
         self._ceiling = int(x0.shape[1])
+        # Exact host-side per-tenant active counts ("bucket" mode): every
+        # accepted point advances its tenant by exactly one.
+        self._m_host = np.full((self.n_tenants,), int(x0.shape[1]),
+                               dtype=np.int64)
+        self._groups: list[dict] | None = None
 
     # ---- bucket residency ---------------------------------------------------
     def _flush(self):
@@ -555,6 +660,57 @@ class StreamBatch:
             self._full = (_scatter_stacked(self._full, self._sub)
                           if self._Mb < self.capacity else self._sub)
             self._sub = None
+        if self._groups is not None:
+            for grp in self._groups:
+                self._scatter_group(grp)
+            self._groups = None
+
+    # ---- bucket-homogeneous groups ("bucket" cohorts) -----------------------
+    def _tenant_bucket(self, m: int) -> int:
+        if self.plan.dispatch != "bucketed":
+            return self.capacity
+        return bucket_for(min(m + 1, self.capacity), self.capacity,
+                          self.plan.min_bucket)
+
+    def _gather_group(self, idx) -> dict:
+        Mb = self._tenant_bucket(int(self._m_host[idx].max()))
+        rows = jax.tree.map(lambda leaf: leaf[idx], self._full)
+        state = _slice_stacked(rows, Mb) if Mb < self.capacity else rows
+        return {"Mb": Mb, "idx": idx, "state": state}
+
+    def _scatter_group(self, grp) -> None:
+        idx = grp["idx"]
+        full_rows = jax.tree.map(lambda leaf: leaf[idx], self._full)
+        rows = (jax.vmap(scatter_state)(full_rows, grp["state"])
+                if grp["Mb"] < self.capacity else grp["state"])
+        self._full = jax.tree.map(
+            lambda leaf, r: leaf.at[idx].set(r), self._full, rows)
+
+    def _regroup(self):
+        """(Re)partition tenants into bucket-homogeneous groups.
+
+        Called lazily: only when no grouping exists or some tenant's next
+        update would cross its group's bucket — the same crossing points
+        at which the "max" cohort re-slices.
+        """
+        import numpy as np
+
+        if self._groups is not None:
+            stale = any(
+                self._tenant_bucket(int(self._m_host[g["idx"]].max()))
+                != g["Mb"]
+                or len(set(self._tenant_bucket(int(mi))
+                           for mi in self._m_host[g["idx"]])) > 1
+                for g in self._groups)
+            if not stale:
+                return
+            for grp in self._groups:
+                self._scatter_group(grp)
+            self._groups = None
+        buckets = np.asarray([self._tenant_bucket(int(mi))
+                              for mi in self._m_host])
+        self._groups = [self._gather_group(np.nonzero(buckets == b)[0])
+                        for b in sorted(set(buckets.tolist()))]
 
     @property
     def states(self):
@@ -593,30 +749,83 @@ class StreamBatch:
 
     # ---- streaming ----------------------------------------------------------
     def update(self, xs: Array, active: Array | None = None):
-        """Fold xs[i] (shape (B, d)) into tenant i, one device step.
+        """Fold xs[i] (shape (B, d)) into tenant i, one device step per
+        occupied bucket (one total for ``cohorts="max"``).
 
-        Returns the bucket-resident stacked state (a valid stacked
-        ``KPCAState`` at the cohort bucket capacity).
+        Returns the bucket-resident stacked state ("max": the whole cohort
+        at the cohort bucket; "bucket": the LARGEST group's state — use
+        ``states``/``state_of`` for full-cohort reads).
         """
+        import numpy as np
+
         xs = jnp.asarray(xs)
-        sub = self._working(self._need())
         plan = self.plan.kernel_plan()
+        if self.cohorts == "bucket":
+            act_host = (np.ones(self.n_tenants, bool) if active is None
+                        else np.asarray(active, bool))
+            self._m_host_pending_check(act_host)
+            self._regroup()
+            act_dev = None if active is None else jnp.asarray(active)
+            for grp in self._groups:
+                idx = grp["idx"]
+                if active is None:
+                    grp["state"] = _batched_update(
+                        grp["state"], xs[idx], self.spec, self.adjusted,
+                        plan)
+                elif act_host[idx].any():
+                    grp["state"] = _batched_update_masked(
+                        grp["state"], xs[idx], act_dev[idx], self.spec,
+                        self.adjusted, plan)
+            self._m_host[act_host] += 1
+            self._ceiling = int(self._m_host.max())
+            return self._groups[-1]["state"]
+        sub = self._working(self._need())
         if active is None:
             self._sub = _batched_update(sub, xs, self.spec, self.adjusted,
                                         plan)
+            self._m_host += 1
         else:
             self._sub = _batched_update_masked(sub, xs, jnp.asarray(active),
                                                self.spec, self.adjusted,
                                                plan)
+            self._m_host[np.asarray(active, bool)] += 1
         self._ceiling += 1
         return self._sub
 
+    def _m_host_pending_check(self, act_host) -> None:
+        """Raise on capacity exhaustion BEFORE mutating any state."""
+        if ((self._m_host + act_host.astype(self._m_host.dtype))
+                > self.capacity).any():
+            worst = int(self._m_host.max())
+            raise ValueError(
+                f"tenant at active count {worst} exhausted capacity "
+                f"{self.capacity} — truncate/compact or re-shard the cohort")
+
     def update_block(self, xs: Array):
-        """Stream a (T, B, d) block: scan over T with all B tenants vmapped
-        per step; chunks are cut at cohort bucket crossings."""
+        """Stream a (T, B, d) block: scan over T with tenants vmapped per
+        step; chunks are cut at bucket crossings (any group's, in
+        ``cohorts="bucket"`` mode)."""
+        import numpy as np
+
         xs = jnp.asarray(xs)
         T = xs.shape[0]
         i = 0
+        if self.cohorts == "bucket":
+            ones = np.ones(self.n_tenants, bool)
+            plan = self.plan.kernel_plan()
+            while i < T:
+                self._m_host_pending_check(ones)
+                self._regroup()
+                take = min(min(g["Mb"] - int(self._m_host[g["idx"]].max())
+                               for g in self._groups), T - i)
+                for grp in self._groups:
+                    grp["state"] = _batched_scan(
+                        grp["state"], xs[i:i + take][:, grp["idx"]],
+                        self.spec, self.adjusted, plan)
+                self._m_host += take
+                i += take
+            self._ceiling = int(self._m_host.max())
+            return self._groups[-1]["state"]
         while i < T:
             sub = self._working(self._need())
             # Chunk at the working bucket even when it is the capacity rung,
@@ -625,15 +834,35 @@ class StreamBatch:
             self._sub = _batched_scan(sub, xs[i:i + take], self.spec,
                                       self.adjusted, self.plan.kernel_plan())
             self._ceiling += take
+            self._m_host += take
             i += take
         return self._sub
 
     def transform(self, q: Array, n_components: int) -> Array:
         """Project per-tenant query batches q: (B, nq, d) -> (B, nq, k)."""
-        st = self._sub if self._sub is not None else self._full
+        q = jnp.asarray(q)
         fn = partial(transform_state, spec=self.spec, adjusted=self.adjusted,
                      n_components=n_components)
-        return jax.vmap(fn)(st, jnp.asarray(q))
+        if self.cohorts == "bucket" and self._groups is not None:
+            out = None
+            for grp in self._groups:
+                yg = jax.vmap(fn)(grp["state"], q[grp["idx"]])
+                if out is None:
+                    out = jnp.zeros((self.n_tenants,) + yg.shape[1:],
+                                    yg.dtype)
+                out = out.at[grp["idx"]].set(yg)
+            return out
+        st = self._sub if self._sub is not None else self._full
+        return jax.vmap(fn)(st, q)
+
+    def working_states(self) -> list:
+        """The bucket-resident working state(s) without flushing: one
+        stacked state per occupied bucket group ("bucket" cohorts), else
+        the single cohort state.  For hot-path synchronization
+        (``jax.block_until_ready``) and inspection."""
+        if self.cohorts == "bucket" and self._groups is not None:
+            return [g["state"] for g in self._groups]
+        return [self._sub if self._sub is not None else self._full]
 
     def state_of(self, i: int):
         """Unstack tenant i's capacity-M state (checkpoint convenience)."""

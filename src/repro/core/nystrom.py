@@ -118,6 +118,16 @@ def add_landmark(state: NystromState, x_all: Array | None, x_new: Array,
     return state._replace(kpca=kpca, Knm=Knm)
 
 
+def _pinv_lam(L: Array, mask: Array) -> Array:
+    """Pseudo-inverse of the active spectrum: exact/near-zero eigenvalues
+    (a compacted rank-truncated state carries rank-deficient active pairs)
+    deflate to 0 instead of amplifying to 1/0."""
+    tol = (L.shape[0] * jnp.finfo(L.dtype).eps
+           * jnp.max(jnp.where(mask, jnp.abs(L), 0.0)))
+    ok = mask & (jnp.abs(L) > tol)
+    return jnp.where(ok, 1.0 / jnp.where(ok, L, 1.0), 0.0)
+
+
 def nystrom_eigpairs(state: NystromState, n: int) -> tuple[Array, Array]:
     """Approximate eigenpairs of the full K via the rescaling (paper eq. 7)."""
     st = state.kpca
@@ -125,8 +135,7 @@ def nystrom_eigpairs(state: NystromState, n: int) -> tuple[Array, Array]:
     mask = rankone.active_mask(M, st.m)
     mf = st.m.astype(st.L.dtype)
     lam_nys = jnp.where(mask, (n / mf) * st.L, 0.0)
-    inv_lam = jnp.where(mask, 1.0 / jnp.where(mask, st.L, 1.0), 0.0)
-    U_nys = jnp.sqrt(mf / n) * (state.Knm @ (st.U * inv_lam[None, :]))
+    U_nys = jnp.sqrt(mf / n) * (state.Knm @ (st.U * _pinv_lam(st.L, mask)[None, :]))
     U_nys = jnp.where(mask[None, :], U_nys, 0.0)
     return lam_nys, U_nys
 
@@ -137,7 +146,7 @@ def reconstruct_tilde(state: NystromState, *, use_pallas: bool = False) -> Array
     M = st.L.shape[0]
     mask = rankone.active_mask(M, st.m)
     B = state.Knm @ jnp.where(mask[None, :], st.U, 0.0)   # (n, M)
-    inv_lam = jnp.where(mask, 1.0 / jnp.where(mask, st.L, 1.0), 0.0)
+    inv_lam = _pinv_lam(st.L, mask)
     if use_pallas:
         from repro.kernels.nystrom_recon import ops as _ops
         return _ops.scaled_gram(B, inv_lam)

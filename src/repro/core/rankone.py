@@ -197,16 +197,28 @@ def _cauchy_W(d: Array, roots: Array, zhat: Array) -> tuple[Array, Array]:
 
 
 def _update_body(L: Array, U: Array, v: Array, sigma: Array, m: Array, *,
-                 iters: int, method: str, matmul: str, precise: bool
+                 iters: int, method: str, matmul: str, precise: bool,
+                 z: Array | None = None, row_offset: Array | None = None
                  ) -> tuple[Array, Array]:
     """Un-jitted body of ``rank_one_update`` (reused by the fused pair's
-    cond-guarded merge fallback, which must inline it under one jit)."""
+    cond-guarded merge fallback, which must inline it under one jit).
+
+    ``U`` may be a (R, M) row block of the full eigenvector matrix, in
+    which case ``z`` = Uᵀv must be supplied precomputed (the distributed
+    path obtains it with one psum over the row shards) and ``row_offset``
+    names the block's first global row so the Pallas rotation can prune
+    along the row axis too.  With z=None (default) it is computed locally
+    from the full square U — the original single-device semantics.
+    """
     M = L.shape[0]
     dtype = L.dtype
     mask = active_mask(M, m)
-    v = jnp.where(mask, v, 0.0)
 
-    z = U.T @ v
+    if z is None:
+        v = jnp.where(mask, v, 0.0)
+        z = U.T @ v
+    else:
+        z = jnp.where(mask, z, 0.0)
     # Deflation (Bunch §4, the case the paper handles by exclusion in §5):
     # eigendirections with |z_i| ~ 0 do not move — zero them out, pin their
     # roots at the poles, and skip them in every other root's bracket.
@@ -231,7 +243,8 @@ def _update_body(L: Array, U: Array, v: Array, sigma: Array, m: Array, *,
 
     f = _solve_factor(d_sent, z, sigma, m, scale, iters=iters, method=method,
                       precise=precise)
-    U_new = _apply_factor(U, f, mask, m, matmul=matmul)
+    U_new = _apply_factor(U, f, mask, m, matmul=matmul,
+                          row_offset=row_offset)
     # Deflation can locally reorder roots (a root may legitimately cross a
     # deflated pole); the next update's interlacing needs ascending order.
     perm = jnp.argsort(f.L_new)
@@ -347,28 +360,33 @@ def _solve_factor(d_sent: Array, z: Array, sigma: Array, m: Array,
 
 
 def _apply_factor(U: Array, f: _Factor, mask: Array, m: Array, *,
-                  matmul: str) -> Array:
+                  matmul: str, row_offset: Array | None = None) -> Array:
     """U @ Ŵn for a single factor, preserving the padding invariants.
 
     ``U`` may be a row *block* of the full eigenvector matrix (the
     distributed row-sharded path rotates only its local rows): every
     overwrite below selects old columns of ``U`` itself, never a fresh
     identity, so the result is exact for any row count.  The Pallas kernel
-    requires a square operand; non-square blocks take the dense route.
+    accepts rectangular (R, M) blocks; ``row_offset`` (the block's first
+    global row) lets it prune row tiles beyond the active prefix as well,
+    which is what keeps per-update MXU work at O(m_rows·m²) on P > 1
+    meshes.  Pruned rows of active columns come back as zeros — their
+    true value, since z is masked beyond the active prefix.
     """
     dtype = U.dtype
-    if matmul == "pallas" and U.shape[0] == U.shape[1]:
+    if matmul == "pallas":
         # The factor is regenerated tile-by-tile in VMEM from O(M) vectors
-        # (see kernels/eigvec_update), with tiles beyond ceil(m/B) pruned.
+        # (see kernels/eigvec_update), with tiles beyond the active range
+        # pruned along rows, columns and the reduction axis.
         from repro.kernels.eigvec_update import ops as _ops
         z_k = jnp.where(mask, f.z.astype(dtype), 0.0)
         d_k = jnp.where(mask, f.d.astype(dtype), 2e30)
         lam_k = jnp.where(mask, f.lam.astype(dtype), 1e30)
         inv_k = jnp.where(mask, f.inv.astype(dtype), 0.0)
-        C = _ops.rotate_vectors(U, z_k, d_k, lam_k, inv_k, m)
+        C = _ops.rotate_vectors(U, z_k, d_k, lam_k, inv_k, m, row_offset)
         # f.defl ⊇ ~mask (inactive entries always deflate), so this also
-        # restores the pruned inactive columns — which are identity columns
-        # of the full U by invariant.
+        # restores the pruned inactive columns — which are the block's own
+        # rows of identity columns by invariant.
         return jnp.where(f.defl[None, :], U, C)
     from repro.kernels.eigvec_update.ref import cauchy_factor_ref
     Wn = cauchy_factor_ref(f.z, f.d, f.lam, f.inv,
@@ -487,17 +505,22 @@ def _pair_solve(L: Array, z1: Array, sigma1: Array, z2_raw: Array,
 
 
 def _pair_rotate_block(U: Array, pf: _PairFactors, m: Array, *,
-                       matmul: str) -> Array:
+                       matmul: str, row_offset: Array | None = None
+                       ) -> Array:
     """Fused double rotation (U @ W1n @ W2n)[:, perm2] of a row block.
 
-    Like ``_apply_factor``, ``U`` may be a row block of the full
-    eigenvector matrix: the dense route's deflated/inactive columns are
-    e_{cid} columns of the factors themselves, so no full-height identity
-    is ever needed.  The Pallas kernel requires a square operand.
+    Like ``_apply_factor``, ``U`` may be a rectangular row block of the
+    full eigenvector matrix: the dense route's deflated/inactive columns
+    are e_{cid} columns of the factors themselves, so no full-height
+    identity is ever needed, and the Pallas kernel takes (R, M) operands
+    with ``row_offset`` naming the block's first global row (row-axis
+    pruning).  Columns pruned by the kernel (>= the active tile range)
+    are restored from ``U`` itself — by invariant those columns of any
+    row block are the block's rows of identity columns.
     """
     M = U.shape[-1]
     dtype = U.dtype
-    if matmul == "pallas" and U.shape[0] == M:
+    if matmul == "pallas":
         from repro.kernels.eigvec_update import ops as _ops
         C = _ops.rotate_vectors2(
             U,
@@ -505,9 +528,9 @@ def _pair_rotate_block(U: Array, pf: _PairFactors, m: Array, *,
             pf.inv1.astype(dtype), pf.defl1.astype(dtype), pf.cid1,
             pf.z2.astype(dtype), pf.d2.astype(dtype), pf.lam2.astype(dtype),
             pf.inv2.astype(dtype), pf.defl2.astype(dtype), pf.cid2,
-            m)
+            m, row_offset)
         mask = active_mask(M, m)
-        C = jnp.where(mask[None, :], C, jnp.eye(M, dtype=dtype))
+        C = jnp.where(mask[None, :], C, U)
     else:
         from repro.kernels.eigvec_update.ref import cauchy_factor_ref
         W1 = cauchy_factor_ref(pf.z1, pf.d1, pf.lam1, pf.inv1,

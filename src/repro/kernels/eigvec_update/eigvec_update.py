@@ -9,23 +9,41 @@ Roofline motivation (TPU v5e, bf16/f32): the naive two-step
 the fused kernel moves M^2 reads (U) + M^2 writes (C) — a ~2.5× cut on the
 memory term, and the VPU divide pipeline overlaps the MXU dot.
 
+Rectangular operands: ``u`` may be a row *block* (R, M) of the full
+eigenvector matrix with R != M — the shape the row-sharded distributed
+path hands each device ((M/P, M) per mesh slice).  ``row_offset`` carries
+the block's first global row index so active-tile pruning works along the
+row axis too (see below); R == M with row_offset 0 recovers the original
+square kernel exactly.
+
 Active-tile pruning: the incremental-KPCA state is fixed-capacity (M) with
 an *active count* m; beyond the active prefix, U is identity, zhat/inv are
 zero, and the consumer overwrites the columns anyway.  The grid therefore
-prefetches g = ceil(m/B) (scalar prefetch) and skips every (i, j, k) tile
-with a coordinate >= g: MXU work drops from ceil(M/B)^3 to ceil(m/B)^3
-tiles per update — the flop count the paper's ~8m^3 claim assumes.  Pruned
+prefetches TWO scalar tile counts,
+
+    g_cols = ceil(m / B)                       (column/reduction axes)
+    g_rows = ceil(clamp(m - row_offset, 0, R) / B)   (row axis)
+
+and skips every (i, j, k) tile with i >= g_rows or a column/reduction
+coordinate >= g_cols: MXU work drops from ceil(R/B)·ceil(M/B)^2 to
+ceil(m_rows/B)·ceil(m/B)^2 tiles per update — the flop count the paper's
+~8m^3 claim assumes, now preserved at any sharding factor P.  Pruned
 output tiles are written as zeros (their true value: rows past m of active
-columns are exactly 0; inactive columns are replaced by e_j downstream).
+columns are exactly 0 because z is masked beyond the active prefix;
+inactive columns are replaced by the caller's own identity columns
+downstream).  The original-domain un-flip in ``rankone._solve_factor``
+folds the sigma<0 flip's sign into z, so the active region is a prefix —
+and this pruning valid — for BOTH sigma signs.
 
 ``eigvec_rotate2`` additionally fuses the paper's back-to-back ±sigma
 rotations of eq. (2)/(3): C = U @ W1n @ W2n in one pass over U (both W
 tiles generated in VMEM), halving HBM round-trips of U per streamed point.
 Deflated columns are generated in-kernel as identity columns e_{cid[j]}
 (cid carries the inter-update sort permutation), so no intermediate U1 is
-ever needed.  The grid walks (i, k) U-tiles with every loop bounded by
-the active tile count g, so the fused kernel is also fully m-pruned —
-g³ MXU tiles per factor and only the active m×m corner of U fetched.
+ever needed.  The grid walks (i, k) U-tiles with the row axis bounded by
+g_rows and every column loop bounded by g_cols, so the fused kernel is
+also fully m-pruned at any block shape — g_rows·g_cols² MXU tiles per
+factor and only the active rows × active columns of U fetched.
 
 Tiling: (BI, BJ) output tiles, reduction over K in the innermost grid axis;
 MXU-aligned 128×128×128 blocks by default.  Vectors are carried as (M, 1) /
@@ -43,17 +61,42 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_BLOCK = 128
 
 
+def _tile_counts(num_active, row_offset, R: int, M: int, block: int,
+                 steps_r: int, steps_c: int) -> jax.Array:
+    """(2,) int32 scalar-prefetch vector [g_rows, g_cols].
+
+    g_cols bounds the column AND reduction axes (both indexed by the
+    factor's active prefix m); g_rows bounds the row axis of the (R, M)
+    block whose first global row is ``row_offset``.
+    """
+    if num_active is None:
+        return jnp.asarray([steps_r, steps_c], jnp.int32)
+    na = jnp.asarray(num_active, jnp.int32)
+    g_cols = jnp.minimum(-(-na // block), steps_c)
+    r0 = (jnp.zeros((), jnp.int32) if row_offset is None
+          else jnp.asarray(row_offset, jnp.int32))
+    rows_active = jnp.clip(na - r0, 0, R)
+    g_rows = jnp.minimum(-(-rows_active // block), steps_r)
+    return jnp.stack([g_rows, g_cols]).astype(jnp.int32)
+
+
+def _clamp(t, lim):
+    # Redirect pruned-tile block loads to tile 0: the iteration is skipped
+    # anyway, so don't spend HBM bandwidth on its operands.
+    return jnp.minimum(t, jnp.maximum(lim - 1, 0))
+
+
 def _kernel(g_ref, u_ref, z_ref, d_ref, lam_ref, inv_ref, out_ref, acc_ref,
             *, k_steps: int):
     i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
-    g = g_ref[0]
-    active = (i < g) & (j < g)
+    gr, gc = g_ref[0], g_ref[1]
+    active = (i < gr) & (j < gc)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    @pl.when(active & (k < g))
+    @pl.when(active & (k < gc))
     def _acc():
         # Generate the W tile in VMEM: (BK, 1) vectors against (1, BJ).
         zcol = z_ref[...]            # (BK, 1)
@@ -61,7 +104,7 @@ def _kernel(g_ref, u_ref, z_ref, d_ref, lam_ref, inv_ref, out_ref, acc_ref,
         lamrow = lam_ref[...]        # (1, BJ)
         w = zcol / (dcol - lamrow)   # (BK, BJ) — Cauchy tile, never hits HBM
         acc_ref[...] += jnp.dot(u_ref[...], w,
-                                preferred_element_type=jnp.float32)
+                                preferred_element_type=acc_ref.dtype)
 
     @pl.when(k == k_steps - 1)
     def _done():
@@ -73,67 +116,72 @@ def _kernel(g_ref, u_ref, z_ref, d_ref, lam_ref, inv_ref, out_ref, acc_ref,
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def eigvec_rotate(u: jax.Array, zhat: jax.Array, d: jax.Array,
                   lam: jax.Array, inv: jax.Array,
-                  num_active: jax.Array | None = None, *,
+                  num_active: jax.Array | None = None,
+                  row_offset: jax.Array | None = None, *,
                   block: int = DEFAULT_BLOCK,
                   interpret: bool = False) -> jax.Array:
     """C[i, j] = sum_k U[i,k] * zhat[k]/(d[k]-lam[j]) * inv[j].
 
-    u: (M, M); zhat, d, lam, inv: (M,).  M is padded internally to a multiple
-    of ``block``; padded columns use lam=1e30 / d=2e30 so generated W entries
-    are exactly 0 (no NaNs enter the accumulator).
+    u: (R, M) — a row block of the eigenvector matrix (R == M for the
+    single-device square case); zhat, d, lam, inv: (M,).  Both dims are
+    padded internally to a multiple of ``block``; padded columns use
+    lam=1e30 / d=2e30 so generated W entries are exactly 0 (no NaNs enter
+    the accumulator).
 
-    ``num_active`` (traced scalar, optional): active count m.  Tiles beyond
-    ceil(m/block) are skipped and their output written as zero — callers
-    must treat columns >= m as garbage-to-overwrite (rankone does).
+    ``num_active`` (traced scalar, optional): active count m.  Column and
+    reduction tiles beyond ceil(m/block) are skipped; row tiles beyond
+    ceil(clamp(m - row_offset, 0, R)/block) likewise (``row_offset`` is
+    the block's first global row, default 0).  Pruned output is written
+    as zero — callers must treat columns >= m as garbage-to-overwrite
+    (rankone does) while pruned *rows* of active columns are exactly 0 by
+    the padding contract, so zeros there are the true values.
     """
-    M = u.shape[0]
+    R, M = u.shape
+    Rp = -(-R // block) * block
     Mp = -(-M // block) * block
-    pad = Mp - M
+    pad_r, pad_c = Rp - R, Mp - M
     dtype = u.dtype
-    if pad:
-        u = jnp.pad(u, ((0, pad), (0, pad)))
-        zhat = jnp.pad(zhat, (0, pad))
-        d = jnp.pad(d, (0, pad), constant_values=2e30)
-        lam = jnp.pad(lam, (0, pad), constant_values=1e30)
-        inv = jnp.pad(inv, (0, pad))
+    if pad_r or pad_c:
+        u = jnp.pad(u, ((0, pad_r), (0, pad_c)))
+    if pad_c:
+        zhat = jnp.pad(zhat, (0, pad_c))
+        d = jnp.pad(d, (0, pad_c), constant_values=2e30)
+        lam = jnp.pad(lam, (0, pad_c), constant_values=1e30)
+        inv = jnp.pad(inv, (0, pad_c))
     zcol = zhat.reshape(Mp, 1).astype(dtype)
     dcol = d.reshape(Mp, 1).astype(dtype)
     lamrow = lam.reshape(1, Mp).astype(dtype)
     invrow = inv.reshape(1, Mp).astype(dtype)
 
+    steps_r = Rp // block
     steps = Mp // block
-    if num_active is None:
-        g = jnp.full((1,), steps, jnp.int32)
-    else:
-        na = jnp.asarray(num_active, jnp.int32)
-        g = jnp.minimum(-(-na // block), steps).reshape(1)
-
-    def _clamp(t, g_ref):
-        # Redirect pruned-tile block loads to tile 0: the iteration is
-        # skipped anyway, so don't spend HBM bandwidth on its operands.
-        return jnp.minimum(t, jnp.maximum(g_ref[0] - 1, 0))
+    g = _tile_counts(num_active, row_offset, R, M, block, steps_r, steps)
+    # Accumulate in f32 for <=32-bit operands, f64 for f64 states (the
+    # precise/x64 numerics tier needs the rotation itself at 1e-12).
+    acc_dtype = jnp.promote_types(dtype, jnp.float32)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(steps, steps, steps),
+        grid=(steps_r, steps, steps),
         in_specs=[
             pl.BlockSpec((block, block),
-                         lambda i, j, k, g: (_clamp(i, g), _clamp(k, g))),
-            pl.BlockSpec((block, 1), lambda i, j, k, g: (_clamp(k, g), 0)),
-            pl.BlockSpec((block, 1), lambda i, j, k, g: (_clamp(k, g), 0)),
-            pl.BlockSpec((1, block), lambda i, j, k, g: (0, _clamp(j, g))),
-            pl.BlockSpec((1, block), lambda i, j, k, g: (0, _clamp(j, g))),
+                         lambda i, j, k, g: (_clamp(i, g[0]),
+                                             _clamp(k, g[1]))),
+            pl.BlockSpec((block, 1), lambda i, j, k, g: (_clamp(k, g[1]), 0)),
+            pl.BlockSpec((block, 1), lambda i, j, k, g: (_clamp(k, g[1]), 0)),
+            pl.BlockSpec((1, block), lambda i, j, k, g: (0, _clamp(j, g[1]))),
+            pl.BlockSpec((1, block), lambda i, j, k, g: (0, _clamp(j, g[1]))),
         ],
         out_specs=pl.BlockSpec((block, block), lambda i, j, k, g: (i, j)),
-        scratch_shapes=[pltpu.VMEM((block, block), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((block, block), acc_dtype)],
     )
     out = pl.pallas_call(
         functools.partial(_kernel, k_steps=steps),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((Mp, Mp), dtype),
+        out_shape=jax.ShapeDtypeStruct((Rp, Mp), dtype),
         interpret=interpret,
     )(g, u, zcol, dcol, lamrow, invrow)
-    return out[:M, :M]
+    return out[:R, :M]
 
 
 def _w_tile(z_ref, d_ref, lam_ref, inv_ref, defl_ref, cid_ref, k, l, *,
@@ -142,6 +190,8 @@ def _w_tile(z_ref, d_ref, lam_ref, inv_ref, defl_ref, cid_ref, k, l, *,
 
     w[r, c] = defl[c] ? (row_r == cid[c]) : z[r] * inv[c] / (d[r] - lam[c])
     with r/c the in-tile offsets of global rows k·B+r, columns l·B+c.
+    (W's row space is the eigenvector COLUMN index, so this is independent
+    of any row-blocking of U.)
     """
     rs = pl.dslice(k * block, block)
     cs = pl.dslice(l * block, block)
@@ -164,15 +214,15 @@ def _kernel2(g_ref, u_ref,
              z2_ref, d2_ref, lam2_ref, inv2_ref, defl2_ref, cid2_ref,
              out_ref, t_ref, *, k_steps: int, block: int, eps: float):
     i, k = pl.program_id(0), pl.program_id(1)
-    g = g_ref[0]
+    gr, gc = g_ref[0], g_ref[1]
 
     @pl.when(k == 0)
     def _init():
         t_ref[...] = jnp.zeros_like(t_ref)
 
     # Accumulate T = U_row @ W1n one (i, k) U-tile at a time, so both the
-    # MXU work and the U HBM fetches stop at the active tile range g.
-    @pl.when((i < g) & (k < g))
+    # MXU work and the U HBM fetches stop at the active tile ranges.
+    @pl.when((i < gr) & (k < gc))
     def _acc():
         u_blk = u_ref[...]                               # (block, block)
 
@@ -181,10 +231,10 @@ def _kernel2(g_ref, u_ref,
                          cid1_ref, k, l, block=block, eps=eps)
             sl = pl.dslice(l * block, block)
             t_ref[:, sl] += jnp.dot(u_blk, w1,
-                                    preferred_element_type=jnp.float32)
+                                    preferred_element_type=t_ref.dtype)
             return carry
 
-        jax.lax.fori_loop(0, g, body1, 0)
+        jax.lax.fori_loop(0, gc, body1, 0)
 
     # Second factor once T is complete.  Pruned column slabs (and pruned
     # row blocks entirely) are zero — correct for the padding contract.
@@ -192,7 +242,7 @@ def _kernel2(g_ref, u_ref,
     def _emit():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-        @pl.when(i < g)
+        @pl.when(i < gr)
         def _second():
             def body2(j, carry):
                 def inner(l, acc):
@@ -200,16 +250,16 @@ def _kernel2(g_ref, u_ref,
                                  defl2_ref, cid2_ref, l, j, block=block,
                                  eps=eps)
                     t_blk = t_ref[:, pl.dslice(l * block, block)]
-                    return acc + jnp.dot(t_blk, w2.astype(jnp.float32),
-                                         preferred_element_type=jnp.float32)
+                    return acc + jnp.dot(t_blk, w2.astype(t_ref.dtype),
+                                         preferred_element_type=t_ref.dtype)
 
-                acc0 = jnp.zeros((block, block), jnp.float32)
+                acc0 = jnp.zeros((block, block), t_ref.dtype)
                 out_ref[:, pl.dslice(j * block, block)] = (
-                    jax.lax.fori_loop(0, g, inner, acc0).astype(
+                    jax.lax.fori_loop(0, gc, inner, acc0).astype(
                         out_ref.dtype))
                 return carry
 
-            jax.lax.fori_loop(0, g, body2, 0)
+            jax.lax.fori_loop(0, gc, body2, 0)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
@@ -218,32 +268,37 @@ def eigvec_rotate2(u: jax.Array,
                    inv1: jax.Array, defl1: jax.Array, cid1: jax.Array,
                    z2: jax.Array, d2: jax.Array, lam2: jax.Array,
                    inv2: jax.Array, defl2: jax.Array, cid2: jax.Array,
-                   num_active: jax.Array | None = None, *,
+                   num_active: jax.Array | None = None,
+                   row_offset: jax.Array | None = None, *,
                    block: int = DEFAULT_BLOCK,
                    interpret: bool = False) -> jax.Array:
     """Fused double rotation  C = U @ W1n @ W2n  in one pass over U.
 
     Each factor is W[k, j] = z[k]·inv[j]/(d[k]-lam[j]), except deflated
     columns (defl[j] != 0) which are identity columns e_{cid[j]} — cid
-    carries the sort permutation applied between the two updates.  The
-    grid walks (i, k) U-tiles; the intermediate T = U_row @ W1n lives
-    only in VMEM scratch (never HBM).  VMEM footprint per program is the
-    (B, M) T row plus (B, B) tiles ≈ B·M·4 bytes.
+    carries the sort permutation applied between the two updates.  ``u``
+    may be a rectangular (R, M) row block (``row_offset`` = first global
+    row); the grid walks (i, k) U-tiles bounded by (g_rows, g_cols); the
+    intermediate T = U_row @ W1n lives only in VMEM scratch (never HBM).
+    VMEM footprint per program is the (B, M) T row plus (B, B) tiles
+    ≈ B·M·4 bytes.
     """
-    M = u.shape[0]
+    R, M = u.shape
+    Rp = -(-R // block) * block
     Mp = -(-M // block) * block
-    pad = Mp - M
+    pad_r, pad_c = Rp - R, Mp - M
     dtype = u.dtype
-    if pad:
-        u = jnp.pad(u, ((0, pad), (0, pad)))
-        z1, z2 = (jnp.pad(v, (0, pad)) for v in (z1, z2))
-        d1, d2 = (jnp.pad(v, (0, pad), constant_values=2e30)
+    if pad_r or pad_c:
+        u = jnp.pad(u, ((0, pad_r), (0, pad_c)))
+    if pad_c:
+        z1, z2 = (jnp.pad(v, (0, pad_c)) for v in (z1, z2))
+        d1, d2 = (jnp.pad(v, (0, pad_c), constant_values=2e30)
                   for v in (d1, d2))
-        lam1, lam2 = (jnp.pad(v, (0, pad), constant_values=1e30)
+        lam1, lam2 = (jnp.pad(v, (0, pad_c), constant_values=1e30)
                       for v in (lam1, lam2))
-        inv1, inv2 = (jnp.pad(v, (0, pad)) for v in (inv1, inv2))
-        defl1, defl2 = (jnp.pad(v, (0, pad)) for v in (defl1, defl2))
-        cid1, cid2 = (jnp.pad(v, (0, pad), constant_values=Mp)
+        inv1, inv2 = (jnp.pad(v, (0, pad_c)) for v in (inv1, inv2))
+        defl1, defl2 = (jnp.pad(v, (0, pad_c)) for v in (defl1, defl2))
+        cid1, cid2 = (jnp.pad(v, (0, pad_c), constant_values=Mp)
                       for v in (cid1, cid2))
 
     def col(v):
@@ -252,15 +307,10 @@ def eigvec_rotate2(u: jax.Array,
     def row(v, as_dtype=None):
         return v.reshape(1, Mp).astype(as_dtype or dtype)
 
+    steps_r = Rp // block
     steps = Mp // block
-    if num_active is None:
-        g = jnp.full((1,), steps, jnp.int32)
-    else:
-        na = jnp.asarray(num_active, jnp.int32)
-        g = jnp.minimum(-(-na // block), steps).reshape(1)
-
-    def _clamp(t, g_ref):
-        return jnp.minimum(t, jnp.maximum(g_ref[0] - 1, 0))
+    g = _tile_counts(num_active, row_offset, R, M, block, steps_r, steps)
+    acc_dtype = jnp.promote_types(dtype, jnp.float32)
 
     vec_specs = [
         pl.BlockSpec((Mp, 1), lambda i, k, g: (0, 0)),   # z
@@ -272,23 +322,23 @@ def eigvec_rotate2(u: jax.Array,
     ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(steps, steps),
+        grid=(steps_r, steps),
         in_specs=[pl.BlockSpec(
             (block, block),
-            lambda i, k, g: (_clamp(i, g), _clamp(k, g)))]
+            lambda i, k, g: (_clamp(i, g[0]), _clamp(k, g[1])))]
         + vec_specs + vec_specs,
         out_specs=pl.BlockSpec((block, Mp), lambda i, k, g: (i, 0)),
-        scratch_shapes=[pltpu.VMEM((block, Mp), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((block, Mp), acc_dtype)],
     )
     eps = float(jnp.finfo(dtype).eps)
     out = pl.pallas_call(
         functools.partial(_kernel2, k_steps=steps, block=block, eps=eps),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((Mp, Mp), dtype),
+        out_shape=jax.ShapeDtypeStruct((Rp, Mp), dtype),
         interpret=interpret,
     )(g, u,
       col(z1), col(d1), row(lam1), row(inv1), row(defl1),
       row(cid1, jnp.int32),
       col(z2), col(d2), row(lam2), row(inv2), row(defl2),
       row(cid2, jnp.int32))
-    return out[:M, :M]
+    return out[:R, :M]

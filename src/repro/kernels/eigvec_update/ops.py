@@ -27,12 +27,16 @@ def _force(force: str | None) -> str | None:
 
 def rotate_vectors(u: jax.Array, zhat: jax.Array, d: jax.Array,
                    lam: jax.Array, inv: jax.Array,
-                   num_active: jax.Array | None = None, *,
+                   num_active: jax.Array | None = None,
+                   row_offset: jax.Array | None = None, *,
                    force: str | None = None) -> jax.Array:
     """C = U @ (diag-normalized Cauchy factor).
 
-    ``num_active`` enables active-tile grid pruning (see eigvec_update.py);
-    pruned columns come back as zeros for the caller to overwrite.
+    ``u`` may be square (M, M) or a rectangular (R, M) row block whose
+    first global row is ``row_offset`` (the distributed row-sharded
+    shape).  ``num_active`` enables active-tile grid pruning along both
+    axes (see eigvec_update.py); pruned columns come back as zeros for
+    the caller to overwrite.
 
     force in {None, 'pallas', 'interpret', 'ref'} overrides dispatch; the
     REPRO_PALLAS_FORCE env var does the same (tests set it to 'interpret'
@@ -46,8 +50,8 @@ def rotate_vectors(u: jax.Array, zhat: jax.Array, d: jax.Array,
         # forever under an ambient jax.disable_jit() on this JAX version.
         with jax.disable_jit(False):
             return eigvec_rotate(u, zhat, d, lam, inv, num_active,
-                                 interpret=True)
-    return eigvec_rotate(u, zhat, d, lam, inv, num_active)
+                                 row_offset, interpret=True)
+    return eigvec_rotate(u, zhat, d, lam, inv, num_active, row_offset)
 
 
 def rotate_vectors2(u: jax.Array,
@@ -55,13 +59,14 @@ def rotate_vectors2(u: jax.Array,
                     inv1: jax.Array, defl1: jax.Array, cid1: jax.Array,
                     z2: jax.Array, d2: jax.Array, lam2: jax.Array,
                     inv2: jax.Array, defl2: jax.Array, cid2: jax.Array,
-                    num_active: jax.Array | None = None, *,
+                    num_active: jax.Array | None = None,
+                    row_offset: jax.Array | None = None, *,
                     force: str | None = None) -> jax.Array:
     """Fused double rotation C = U @ W1n @ W2n (eq. (2)/(3) back-to-back).
 
-    Same dispatch contract as ``rotate_vectors``.  Deflated columns are
-    generated as identity columns e_{cid[j]} inside the kernel, so the
-    intermediate U @ W1n never exists in HBM.
+    Same dispatch and rectangular-operand contract as ``rotate_vectors``.
+    Deflated columns are generated as identity columns e_{cid[j]} inside
+    the kernel, so the intermediate U @ W1n never exists in HBM.
     """
     force = _force(force)
     args = (u, z1, d1, lam1, inv1, defl1, cid1,
@@ -70,8 +75,9 @@ def rotate_vectors2(u: jax.Array,
         return eigvec_rotate2_ref(*args)
     if force == "interpret":
         with jax.disable_jit(False):
-            return eigvec_rotate2(*args, num_active, interpret=True)
-    return eigvec_rotate2(*args, num_active)
+            return eigvec_rotate2(*args, num_active, row_offset,
+                                  interpret=True)
+    return eigvec_rotate2(*args, num_active, row_offset)
 
 
 def rotate(u: jax.Array, wn: jax.Array) -> jax.Array:

@@ -5,9 +5,34 @@ import jax.numpy as jnp
 
 def eigvec_rotate_ref(u: jax.Array, zhat: jax.Array, d: jax.Array,
                       lam: jax.Array, inv: jax.Array) -> jax.Array:
-    """Materialize W then matmul — the unfused baseline the kernel beats."""
+    """Materialize W then matmul — the unfused baseline the kernel beats.
+
+    ``u`` may be square (M, M) or a rectangular (R, M) row block; the
+    product is over u's columns either way.
+    """
     W = zhat[:, None] / (d[:, None] - lam[None, :])
     return (u @ W) * inv[None, :]
+
+
+def pruned_region_mask(R: int, M: int, m, row_offset=None, *,
+                       block: int) -> tuple[jax.Array, jax.Array]:
+    """(row_mask (R,), col_mask (M,)) of the tiles the pruned kernels WRITE.
+
+    True = inside the active tile range (kernel computes real values);
+    False = pruned (kernel writes exact zeros).  Mirrors ``_tile_counts``
+    in eigvec_update.py so tests and callers can assert the contract:
+    within the active region the kernel matches ``eigvec_rotate_ref``,
+    outside it the output is zero (which is also the true value for rows
+    past the active prefix of active columns).
+    """
+    r0 = 0 if row_offset is None else row_offset
+    m = jnp.asarray(m, jnp.int32)
+    rows_active = jnp.clip(m - r0, 0, R)
+    g_rows = -(-rows_active // block)
+    g_cols = -(-m // block)
+    row_mask = jnp.arange(R) < g_rows * block
+    col_mask = jnp.arange(M) < g_cols * block
+    return row_mask, col_mask
 
 
 def cauchy_factor_ref(z: jax.Array, d: jax.Array, lam: jax.Array,

@@ -18,7 +18,10 @@ Two serving workloads share this entry point:
   (the per-update latencies printed at the end show the staircase), and
   ``--tenants B`` serves B independent streams through the vmapped
   ``engine.StreamBatch`` — one device step folds a point into every
-  tenant, instead of B Python-loop dispatches.
+  tenant, instead of B Python-loop dispatches.  ``--cohorts bucket``
+  shards a mixed-size cohort into bucket-homogeneous groups: each group
+  runs its vmapped step at its OWN bucket M_b, so small tenants stop
+  paying the largest tenant's O(M³).
 
       PYTHONPATH=src python -m repro.launch.serve --mode kpca \
           --capacity 512 --points 200 --dispatch bucketed
@@ -105,7 +108,8 @@ def kpca_multitenant_main(args) -> dict:
     spec = kf.KernelSpec(name="rbf", sigma=float(d))
     x0 = jnp.asarray(rng.normal(size=(B, 4, d)), jnp.float32)
     batch = eng.StreamBatch(x0, args.capacity, spec, plan=_make_plan(args),
-                            adjusted=True, dtype=jnp.float32)
+                            adjusted=True, dtype=jnp.float32,
+                            cohorts=args.cohorts)
 
     lat_ms: list[float] = []
     n_served = 0
@@ -113,12 +117,14 @@ def kpca_multitenant_main(args) -> dict:
     for i in range(args.points):
         xs = jnp.asarray(rng.normal(size=(B, d)), jnp.float32)
         t0 = time.perf_counter()
-        states = batch.update(xs)
-        jax.block_until_ready(states.L)
+        batch.update(xs)
+        jax.block_until_ready([st.L for st in batch.working_states()])
         lat_ms.append((time.perf_counter() - t0) * 1e3)
         if (i + 1) % args.transform_every == 0:
             q = jnp.asarray(rng.normal(size=(B, args.batch, d)), jnp.float32)
-            y = batch.transform(q, n_components=min(8, int(states.m.min())))
+            n_comp = min(8, min(int(v) for st in batch.working_states()
+                                for v in st.m))
+            y = batch.transform(q, n_components=n_comp)
             jax.block_until_ready(y)
             n_served += B * args.batch
     t_total = time.time() - t_total
@@ -128,7 +134,8 @@ def kpca_multitenant_main(args) -> dict:
     steady = np.median(lat)
     result = {
         "mode": "kpca-multitenant", "tenants": B,
-        "dispatch": args.dispatch, "capacity": args.capacity,
+        "dispatch": args.dispatch, "cohorts": args.cohorts,
+        "capacity": args.capacity,
         "points": args.points, "m_final": m_final,
         "step_ms_p50": float(np.percentile(lat, 50)),
         "step_ms_p90": float(np.percentile(lat, 90)),
@@ -166,6 +173,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--tenants", type=int, default=1,
                     help="number of independent KPCA streams folded per "
                          "vmapped device step (kpca mode)")
+    ap.add_argument("--cohorts", choices=("max", "bucket"), default="max",
+                    help="multi-tenant cohort geometry: 'max' runs the "
+                         "whole cohort at the largest tenant's bucket; "
+                         "'bucket' groups tenants by their own bucket")
     args = ap.parse_args(argv)
 
     if args.mode == "kpca":

@@ -189,22 +189,33 @@ def loss_fn(params: dict, cfg: ArchConfig, batch: dict) -> tuple[Array, dict]:
 # ------------------------------------------------------------- decode -------
 def _slot_cache_init(params_slot: dict, cfg: ArchConfig, slot: int,
                      batch: int, max_seq: int):
+    """Per-slot decode cache: {'mixer': ..., 'ffn': ...} with the 'ffn'
+    entry present only for MoE slots (running per-expert assignment counts
+    so decode replays the parallel path's capacity drops)."""
     kind = cfg.block_kind(slot)
+    np_ = n_periods(cfg)
     if kind == "attn":
         if cfg.attention == "nystrom":
-            return jax.vmap(lambda p: nys.nystrom_cache_init(p, cfg, batch)
-                            )(params_slot["mixer"])
-        np_ = n_periods(cfg)
-        return jax.vmap(lambda _: attention_cache_init(cfg, batch, max_seq)
-                        )(jnp.arange(np_))
-    np_ = n_periods(cfg)
-    if kind == "mamba":
-        fn = lambda _: ssm.mamba_cache_init(cfg, batch)        # noqa: E731
-    elif kind == "mlstm":
-        fn = lambda _: xlstm.mlstm_cache_init(cfg, batch)      # noqa: E731
+            mixer = jax.vmap(lambda p: nys.nystrom_cache_init(p, cfg, batch)
+                             )(params_slot["mixer"])
+        else:
+            mixer = jax.vmap(
+                lambda _: attention_cache_init(cfg, batch, max_seq)
+            )(jnp.arange(np_))
     else:
-        fn = lambda _: xlstm.slstm_cache_init(cfg, batch)      # noqa: E731
-    return jax.vmap(fn)(jnp.arange(np_))
+        if kind == "mamba":
+            fn = lambda _: ssm.mamba_cache_init(cfg, batch)        # noqa: E731
+        elif kind == "mlstm":
+            fn = lambda _: xlstm.mlstm_cache_init(cfg, batch)      # noqa: E731
+        else:
+            fn = lambda _: xlstm.slstm_cache_init(cfg, batch)      # noqa: E731
+        mixer = jax.vmap(fn)(jnp.arange(np_))
+    cache = {"mixer": mixer}
+    if cfg.ffn_kind(slot) == "moe":
+        cache["ffn"] = jax.vmap(
+            lambda _: moe_mod.moe_cache_init(cfg, batch, max_seq)
+        )(jnp.arange(np_))
+    return cache
 
 
 def init_caches(params: dict, cfg: ArchConfig, batch: int, max_seq: int):
@@ -240,19 +251,32 @@ def decode_step(params: dict, cfg: ArchConfig, caches: dict, token: Array,
         new_caches = {}
         for j in range(cfg.period):
             p = period_params[f"slot{j}"]
+            cache = period_caches[f"slot{j}"]
             kind = cfg.block_kind(j)
             ffn = cfg.ffn_kind(j)
             rs = cfg.residual_scale
             hn = rmsnorm_apply(p["norm1"], h)
-            y, new_caches[f"slot{j}"] = _mixer_decode(
-                p["mixer"], cfg, kind, hn, period_caches[f"slot{j}"], pos)
+            y, new_mixer = _mixer_decode(p["mixer"], cfg, kind, hn,
+                                         cache["mixer"], pos)
+            new_cache = {"mixer": new_mixer}
+
+            def ffn_decode(x):
+                # MoE slots thread the per-expert count cache so decode
+                # replays the parallel path's capacity drops (capacity
+                # fixed at cache init from max_seq — see moe_cache_init).
+                if "ffn" in cache:
+                    out, new_cache["ffn"] = moe_mod.moe_decode(
+                        p["ffn"], cfg, x, cache["ffn"])
+                    return out
+                return _ffn_apply(p["ffn"], cfg, x)
+
             if cfg.parallel_block and ffn != "none":
-                h = h + rs * (y + _ffn_apply(p["ffn"], cfg, hn))
+                h = h + rs * (y + ffn_decode(hn))
             else:
                 h = h + rs * y
                 if ffn != "none":
-                    h = h + rs * _ffn_apply(p["ffn"], cfg,
-                                            rmsnorm_apply(p["norm2"], h))
+                    h = h + rs * ffn_decode(rmsnorm_apply(p["norm2"], h))
+            new_caches[f"slot{j}"] = new_cache
         return h, new_caches
 
     h, new_caches = jax.lax.scan(period_body, h, (params["slots"], caches))

@@ -82,55 +82,91 @@ def _experts_ffn(p: dict, cfg: ArchConfig, xe: Array) -> Array:
     return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
 
 
-def _moe_einsum(p: dict, cfg: ArchConfig, x2d: Array) -> Array:
-    mo = cfg.moe
-    T, d = x2d.shape
-    E, K = mo.n_experts, mo.top_k
-    C = _capacity(cfg, T)
-    gate_vals, idx, _ = _router(p, cfg, x2d)
+def _causal_positions(onehot: Array, counts0: Array | None = None
+                      ) -> tuple[Array, Array]:
+    """Per-(group, expert) capacity-slot positions, causal within each group.
 
-    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)          # (T, K, E)
-    pos_in_e = jnp.cumsum(onehot.reshape(T * K, E), axis=0).reshape(T, K, E) - 1
-    pos = jnp.sum(pos_in_e * onehot, axis=-1)                 # (T, K)
+    onehot: (G, S, K, E) int32 assignment one-hots.  The slot position of
+    each assignment counts earlier assignments of the SAME group only,
+    token-major then k-major — so the drop decision for token (g, s)
+    depends exclusively on tokens (g, <= s), and a decode loop can
+    reproduce it exactly from a running per-expert count (``counts0``, the
+    counts carried in from previous tokens of the same sequence).
+
+    Returns (pos (G, S, K), counts_end (G, E)).  Counts include dropped
+    assignments — the parallel cumsum does too, so parity holds after
+    capacity is exceeded.
+    """
+    G, S, K, E = onehot.shape
+    flat = onehot.reshape(G, S * K, E)
+    pos_in_e = jnp.cumsum(flat, axis=1).reshape(G, S, K, E) - 1
+    if counts0 is not None:
+        pos_in_e = pos_in_e + counts0[:, None, None, :]
+    pos = jnp.sum(pos_in_e * onehot, axis=-1)
+    counts_end = jnp.sum(flat, axis=1)
+    if counts0 is not None:
+        counts_end = counts_end + counts0
+    return pos, counts_end
+
+
+def _moe_einsum(p: dict, cfg: ArchConfig, x3d: Array) -> Array:
+    """GShard one-hot dispatch over (G, S, d): G groups (batch rows), each
+    with its own capacity C = _capacity(cfg, S) and causal slot positions
+    (see ``_causal_positions`` — this is what makes decode reproducible)."""
+    mo = cfg.moe
+    G, S, d = x3d.shape
+    E, K = mo.n_experts, mo.top_k
+    C = _capacity(cfg, S)
+    gate_vals, idx, _ = _router(p, cfg, x3d.reshape(G * S, d))
+    gate_vals = gate_vals.reshape(G, S, K)
+
+    onehot = jax.nn.one_hot(idx.reshape(G, S, K), E,
+                            dtype=jnp.int32)                  # (G, S, K, E)
+    pos, _ = _causal_positions(onehot)
     keep = pos < C
-    # dispatch tensor (T, E, C): combines expert one-hot and capacity slot.
+    # dispatch tensor (G, S, E, C): combines expert one-hot and slot.
     slot = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1,
-                          dtype=x2d.dtype)[..., :C]           # (T, K, C)
-    disp = jnp.einsum("tke,tkc->tec", onehot.astype(x2d.dtype), slot)
-    comb = jnp.einsum("tk,tke,tkc->tec",
-                      gate_vals.astype(x2d.dtype), onehot.astype(x2d.dtype),
-                      slot)
-    xe = jnp.einsum("td,tec->ecd", x2d, disp)                 # (E, C, d)
-    ye = _experts_ffn(p, cfg, xe)
-    return jnp.einsum("ecd,tec->td", ye, comb)
+                          dtype=x3d.dtype)[..., :C]           # (G, S, K, C)
+    oh = onehot.astype(x3d.dtype)
+    disp = jnp.einsum("gske,gskc->gsec", oh, slot)
+    comb = jnp.einsum("gsk,gske,gskc->gsec",
+                      gate_vals.astype(x3d.dtype), oh, slot)
+    xe = jnp.einsum("gsd,gsec->egcd", x3d, disp)              # (E, G, C, d)
+    ye = _experts_ffn(p, cfg, xe.reshape(E, G * C, d))
+    ye = ye.reshape(E, G, C, d)
+    return jnp.einsum("egcd,gsec->gsd", ye, comb)
 
 
-def _moe_scatter(p: dict, cfg: ArchConfig, x2d: Array) -> Array:
+def _moe_scatter(p: dict, cfg: ArchConfig, x3d: Array) -> Array:
+    """Scatter/gather dispatch over (G, S, d) with the same per-group
+    causal slot positions as ``_moe_einsum`` (identical keep sets)."""
     mo = cfg.moe
-    T, d = x2d.shape
+    G, S, d = x3d.shape
     E, K = mo.n_experts, mo.top_k
-    C = _capacity(cfg, T)
-    gate_vals, idx, _ = _router(p, cfg, x2d)
+    C = _capacity(cfg, S)
+    gate_vals, idx, _ = _router(p, cfg, x3d.reshape(G * S, d))
 
-    flat_e = idx.reshape(T * K)                                # (TK,)
-    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)        # (TK, E) ints
-    pos = jnp.sum(onehot * (jnp.cumsum(onehot, axis=0) - 1), axis=-1)  # (TK,)
-    keep = pos < C
+    flat_e = idx.reshape(G, S * K)                             # (G, SK)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)        # (G, SK, E)
+    pos = jnp.sum(onehot * (jnp.cumsum(onehot, axis=1) - 1), axis=-1)
+    keep = pos < C                                             # (G, SK)
     pos_c = jnp.where(keep, pos, C - 1)
+    g_idx = jnp.broadcast_to(jnp.arange(G)[:, None], (G, S * K))
+    tok_idx = jnp.broadcast_to(jnp.repeat(jnp.arange(S), K)[None],
+                               (G, S * K))
 
-    # Scatter tokens into (E, C, d) — bytes, not matmul flops.
-    tok_idx = jnp.repeat(jnp.arange(T), K)
-    xe = jnp.zeros((E, C, d), x2d.dtype)
-    upd = x2d[tok_idx] * keep[:, None].astype(x2d.dtype)
-    xe = xe.at[flat_e, pos_c].add(upd)
+    # Scatter tokens into (E, G, C, d) — bytes, not matmul flops.
+    xe = jnp.zeros((E, G, C, d), x3d.dtype)
+    upd = x3d[g_idx, tok_idx] * keep[..., None].astype(x3d.dtype)
+    xe = xe.at[flat_e, g_idx, pos_c].add(upd)
 
-    ye = _experts_ffn(p, cfg, xe)
+    ye = _experts_ffn(p, cfg, xe.reshape(E, G * C, d))
+    ye = ye.reshape(E, G, C, d)
 
     # Gather back and combine with gate weights.
-    out_tk = ye[flat_e, pos_c] * keep[:, None].astype(x2d.dtype)
-    out_tk = out_tk * gate_vals.reshape(T * K, 1).astype(x2d.dtype)
-    y = jnp.zeros((T, d), x2d.dtype).at[tok_idx].add(out_tk)
-    return y
+    out_tk = ye[flat_e, g_idx, pos_c] * keep[..., None].astype(x3d.dtype)
+    out_tk = out_tk * gate_vals.reshape(G, S * K, 1).astype(x3d.dtype)
+    return jnp.zeros((G, S, d), x3d.dtype).at[g_idx, tok_idx].add(out_tk)
 
 
 # ------------------------------------------------- explicit EP (shard_map) --
@@ -288,6 +324,12 @@ def _moe_ep(p: dict, cfg: ArchConfig, x: Array) -> Array | None:
     return fn(x, p["router"], p["w_up"], p["w_gate"], p["w_down"])
 
 
+def _shared_experts(p: dict, x2d: Array) -> Array:
+    sp = p["shared"]
+    h = jax.nn.silu(x2d @ sp["w_gate"]) * (x2d @ sp["w_up"])
+    return h @ sp["w_down"]
+
+
 def moe_apply(p: dict, cfg: ArchConfig, x: Array) -> Array:
     B, T, d = x.shape
     x2d = x.reshape(B * T, d)
@@ -297,12 +339,67 @@ def moe_apply(p: dict, cfg: ArchConfig, x: Array) -> Array:
         y3d = _moe_ep(p, cfg, x)
         y = None if y3d is None else y3d.reshape(B * T, d)
     if y is None:
+        # einsum/scatter dispatch groups = batch rows: capacity is per
+        # sequence and slot positions are causal within it, so a decode
+        # loop with a count cache reproduces the drops exactly.
         if impl == "scatter":
-            y = _moe_scatter(p, cfg, x2d)
+            y = _moe_scatter(p, cfg, x).reshape(B * T, d)
         else:
-            y = _moe_einsum(p, cfg, x2d)
+            y = _moe_einsum(p, cfg, x).reshape(B * T, d)
     if cfg.moe.n_shared_experts:
-        sp = p["shared"]
-        h = jax.nn.silu(x2d @ sp["w_gate"]) * (x2d @ sp["w_up"])
-        y = y + h @ sp["w_down"]
+        y = y + _shared_experts(p, x2d)
     return y.reshape(B, T, d)
+
+
+# ------------------------------------------------------------- decode ------
+def moe_cache_init(cfg: ArchConfig, batch: int, max_seq: int) -> dict:
+    """Per-sequence decode state: running per-expert assignment counts and
+    the capacity the parallel path would use for a ``max_seq`` sequence.
+
+    The einsum/scatter paths drop tokens by causal per-row slot position,
+    so decode parity just needs the count each row's earlier tokens (and
+    earlier k-slots of the same token) contributed per expert — PLUS a
+    matching capacity: decode replays a T-token parallel pass exactly iff
+    ``_capacity(cfg, max_seq) == _capacity(cfg, T)`` (init the caches
+    with ``max_seq`` equal to the sequence length being compared; a
+    serving loop that only ever decodes just needs ONE consistent
+    capacity, which ``max_seq`` provides).
+    """
+    return {
+        "counts": jnp.zeros((batch, cfg.moe.n_experts), jnp.int32),
+        "capacity": jnp.asarray(_capacity(cfg, max_seq), jnp.int32),
+    }
+
+
+def moe_decode(p: dict, cfg: ArchConfig, x: Array, cache: dict
+               ) -> tuple[Array, dict]:
+    """One decode chunk x: (B, S, d) (S is typically 1) through the MoE FFN.
+
+    Matches ``moe_apply`` on the einsum/scatter paths token-for-token: the
+    router and gates are identical per token, and the capacity-drop
+    decision replays the parallel path's causal slot positions from the
+    cached counts (given the capacity contract in ``moe_cache_init``).
+    The expert compute itself is dense over the few decode tokens (the
+    ``_ep_decode_local`` trick) — at S·B tokens the dispatch machinery
+    costs more than it saves.  Includes the shared experts.
+    """
+    mo = cfg.moe
+    B, S, d = x.shape
+    E, K = mo.n_experts, mo.top_k
+    x2d = x.reshape(B * S, d)
+    gate_vals, idx, _ = _router(p, cfg, x2d)
+    onehot = jax.nn.one_hot(idx.reshape(B, S, K), E, dtype=jnp.int32)
+    pos, counts = _causal_positions(onehot, cache["counts"])
+    keep = pos < cache["capacity"]                           # (B, S, K)
+    gates = jnp.einsum(
+        "bsk,bske->bse",
+        jnp.where(keep, gate_vals.reshape(B, S, K), 0.0).astype(x.dtype),
+        onehot.astype(x.dtype))                              # dense (B,S,E)
+
+    h = jnp.einsum("bsd,edf->bsef", x, p["w_up"])
+    g = jnp.einsum("bsd,edf->bsef", x, p["w_gate"])
+    ye = jnp.einsum("bsef,efd->bsed", jax.nn.silu(g) * h, p["w_down"])
+    y = jnp.einsum("bsed,bse->bsd", ye, gates)
+    if mo.n_shared_experts:
+        y = y + _shared_experts(p, x2d).reshape(B, S, d)
+    return y, {"counts": counts, "capacity": cache["capacity"]}

@@ -244,3 +244,165 @@ def test_streambatch_capacity_exhaustion_raises():
 def test_streambatch_rejects_non_batched_seeds():
     with pytest.raises(ValueError):
         eng.StreamBatch(jnp.zeros((4, 3)), 16, SPEC)
+
+
+# ------------------------------------------- bucket-homogeneous cohorts ---
+def _mixed_batches(cohorts, B=6, d=4, capacity=64):
+    rng = np.random.default_rng(23)
+    plan = eng.UpdatePlan(dispatch="bucketed", min_bucket=8)
+    seeds = jnp.asarray(rng.normal(size=(B, 3, d)))
+    batch = eng.StreamBatch(seeds, capacity, SPEC, plan=plan, adjusted=True,
+                            dtype=jnp.float64, cohorts=cohorts)
+    streams = [inkpca.KPCAStream(seeds[i], capacity, SPEC, adjusted=True,
+                                 dtype=jnp.float64, plan=plan)
+               for i in range(B)]
+    return batch, streams, rng
+
+
+def test_streambatch_bucket_cohorts_match_per_tenant_loop():
+    """Bucket-homogeneous cohorts (masked updates diverging tenant sizes,
+    then a block) must equal B independent Python-loop streams."""
+    batch, streams, rng = _mixed_batches("bucket")
+    B, d = len(streams), 4
+    for step in range(18):
+        xs = jnp.asarray(rng.normal(size=(B, d)))
+        active = np.array([(step % (i + 1)) == 0 for i in range(B)])
+        batch.update(xs, active=jnp.asarray(active))
+        for i, s in enumerate(streams):
+            if active[i]:
+                s.update(xs[i])
+    xs_blk = jnp.asarray(rng.normal(size=(6, B, d)))
+    batch.update_block(xs_blk)
+    for i, s in enumerate(streams):
+        s.update_block(xs_blk[:, i])
+    # the cohort actually split into >1 bucket group
+    assert batch._groups is not None and len(batch._groups) > 1
+    assert len({g["Mb"] for g in batch._groups}) == len(batch._groups)
+    sts = batch.states
+    for i, s in enumerate(streams):
+        np.testing.assert_allclose(np.asarray(sts.L[i]),
+                                   np.asarray(s.state.L), atol=1e-9)
+        np.testing.assert_allclose(
+            np.asarray(rankone.reconstruct(sts.L[i], sts.U[i], sts.m[i])),
+            np.asarray(s.reconstruction()), atol=1e-8)
+
+
+def test_streambatch_bucket_cohorts_transform_matches_max():
+    """transform() must agree between cohort geometries (same states)."""
+    rng = np.random.default_rng(29)
+    B, d = 4, 4
+    seeds = jnp.asarray(rng.normal(size=(B, 3, d)))
+    plan = eng.UpdatePlan(dispatch="bucketed", min_bucket=8)
+    kw = dict(plan=plan, adjusted=True, dtype=jnp.float64)
+    a = eng.StreamBatch(seeds, 32, SPEC, cohorts="max", **kw)
+    b = eng.StreamBatch(seeds, 32, SPEC, cohorts="bucket", **kw)
+    xs = jnp.asarray(rng.normal(size=(8, B, d)))
+    a.update_block(xs)
+    b.update_block(xs)
+    q = jnp.asarray(rng.normal(size=(B, 5, d)))
+    ya = a.transform(q, n_components=3)
+    yb = b.transform(q, n_components=3)
+    np.testing.assert_allclose(np.asarray(yb), np.asarray(ya), atol=1e-8)
+
+
+def test_streambatch_bucket_cohorts_capacity_exhaustion_raises():
+    rng = np.random.default_rng(31)
+    x0 = jnp.asarray(rng.normal(size=(2, 4, 3)))
+    plan = eng.UpdatePlan(dispatch="bucketed", min_bucket=4)
+    batch = eng.StreamBatch(x0, 8, SPEC, plan=plan, dtype=jnp.float64,
+                            cohorts="bucket")
+    batch.update_block(jnp.asarray(rng.normal(size=(4, 2, 3))))
+    with pytest.raises(ValueError):
+        batch.update(jnp.asarray(rng.normal(size=(2, 3))))
+
+
+# ------------------------------------- Nyström truncate/compact guard ---
+def test_nystrom_truncate_compact_preserves_observed_rows():
+    """Engine.truncate(compact=True) on a grow_rows Nyström state must keep
+    every observed row/landmark (row-support clamp) while shrinking
+    capacity, and reproduce the uncompacted truncated reconstruction."""
+    from repro.core import nystrom
+
+    rng = np.random.default_rng(37)
+    d, cap = 4, 64
+    engine = eng.Engine(SPEC, eng.UpdatePlan(dispatch="bucketed",
+                                             min_bucket=8), adjusted=False)
+    x0 = jnp.asarray(rng.normal(size=(4, d)))
+    st = nystrom.init_nystrom(None, x0, cap, SPEC, dtype=jnp.float64,
+                              grow_rows=True)
+    for _ in range(16):
+        st = engine.add_landmark(st, None, jnp.asarray(rng.normal(size=d)))
+    st = nystrom.observe_rows(st, jnp.asarray(rng.normal(size=(10, d))),
+                              SPEC)
+    n_rows, m_before = st.Knm.shape[0], int(st.kpca.m)
+
+    t_nc = engine.truncate(st, 8, compact=False)
+    t_c = engine.truncate(st, 8, compact=True)
+    # observed rows and landmark support survive; capacity shrinks
+    assert t_c.Knm.shape[0] == n_rows
+    assert t_c.Xrows.shape == st.Xrows.shape
+    assert int(t_c.kpca.m) == m_before
+    assert t_c.kpca.L.shape[0] < cap
+    np.testing.assert_allclose(
+        np.asarray(nystrom.reconstruct_tilde(t_c)),
+        np.asarray(nystrom.reconstruct_tilde(t_nc)), atol=1e-10)
+    # streaming continues on the compacted state
+    t2 = nystrom.observe_rows(t_c, jnp.asarray(rng.normal(size=(2, d))),
+                              SPEC)
+    t2 = engine.add_landmark(t2, None, jnp.asarray(rng.normal(size=d)))
+    assert bool(jnp.isfinite(nystrom.reconstruct_tilde(t2)).all())
+    # explicit capacity below the row-support floor is refused
+    with pytest.raises(ValueError):
+        engine.truncate(st, 8, compact=True, capacity=16)
+
+
+def test_nystrom_uncompacted_truncate_add_landmark_min_rows():
+    """After an UNcompacted Nyström truncate, bucketed add_landmark must
+    honor the row-support floor (min_rows = pre-truncation landmark
+    count) and then match the fixed-dispatch reference exactly."""
+    from repro.core import nystrom
+
+    rng = np.random.default_rng(41)
+    d, cap = 4, 64
+    buk = eng.Engine(SPEC, eng.UpdatePlan(dispatch="bucketed",
+                                          min_bucket=8), adjusted=False)
+    fix = eng.Engine(SPEC, eng.UpdatePlan(), adjusted=False)
+    x0 = jnp.asarray(rng.normal(size=(4, d)))
+    st = nystrom.init_nystrom(None, x0, cap, SPEC, dtype=jnp.float64,
+                              grow_rows=True)
+    for _ in range(16):
+        st = buk.add_landmark(st, None, jnp.asarray(rng.normal(size=d)))
+    r = int(st.kpca.m)
+    t = buk.truncate(st, 8, compact=False)
+    x_new = [jnp.asarray(rng.normal(size=d)) for _ in range(3)]
+    a = b = t
+    for x in x_new:
+        a = buk.add_landmark(a, None, x, min_rows=r)
+        b = fix.add_landmark(b, None, x)
+    np.testing.assert_allclose(
+        np.asarray(nystrom.reconstruct_tilde(a)),
+        np.asarray(nystrom.reconstruct_tilde(b)), atol=1e-9)
+
+
+def test_sharded_bucketed_update_full_capacity_state():
+    """A full state (m == M) still receives rank-one corrections: the
+    bucketed sharded dispatcher must not demand room for m+1."""
+    from repro.core import distributed as dkpca, rankone
+
+    rng = np.random.default_rng(43)
+    M = 16
+    A = rng.normal(size=(M, M)); A = A @ A.T
+    lam, vec = np.linalg.eigh(A)
+    L = jnp.asarray(np.sort(lam))
+    U = jnp.asarray(vec)
+    v = jnp.asarray(rng.normal(size=M))
+    mesh = jax.make_mesh((1,), ("data",))
+    upd = dkpca.make_sharded_update(
+        mesh, plan=eng.UpdatePlan(dispatch="bucketed", min_bucket=8))
+    Ls, Us = upd(L, U, v, jnp.float64(1.7), jnp.int32(M))
+    Ll, Ul = rankone.rank_one_update(L, U, v, jnp.float64(1.7),
+                                     jnp.int32(M))
+    np.testing.assert_allclose(np.asarray(Ls), np.asarray(Ll), atol=1e-10)
+    np.testing.assert_allclose(
+        np.asarray(rankone.reconstruct(Ls, Us, jnp.int32(M))),
+        np.asarray(rankone.reconstruct(Ll, Ul, jnp.int32(M))), atol=1e-8)

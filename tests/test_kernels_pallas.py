@@ -98,6 +98,114 @@ def test_eigvec_rotate2_matches_two_rotations():
                                    rtol=5e-3, atol=5e-3)
 
 
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5),
+                                       (jnp.float64, 1e-12)])
+@pytest.mark.parametrize("R,off", [(100, 0), (100, 100), (64, 64),
+                                   (90, 30)])
+def test_eigvec_rotate_rectangular_matches_ref(R, off, dtype, tol):
+    """Rectangular (R, M) row blocks at any row offset must match the
+    dense ref on the active columns (rel. tol 1e-5 f32 / 1e-12 f64) and
+    return exact zeros on kernel-pruned rows/columns."""
+    from repro.kernels.eigvec_update.ref import pruned_region_mask
+    M, m, block = 200, 70, 64
+    u, z, d, lam, inv = (v.astype(dtype)
+                         for v in _padded_rotation_inputs(M, m))
+    blk = u[off:off + R]
+    out = eigvec_rotate(blk, z, d, lam, inv, jnp.int32(m), jnp.int32(off),
+                        interpret=True, block=block)
+    ref = eigvec_rotate_ref(u, z, d, lam, inv)[off:off + R]
+    np.testing.assert_allclose(np.asarray(out[:, :m], np.float64),
+                               np.asarray(ref[:, :m], np.float64),
+                               rtol=tol, atol=tol)
+    row_mask, col_mask = (np.asarray(v) for v in
+                          pruned_region_mask(R, M, m, off, block=block))
+    if (~col_mask).any():
+        assert np.abs(np.asarray(out[:, ~col_mask])).max() == 0.0
+    if (~row_mask).any():
+        assert np.abs(np.asarray(out[~row_mask])).max() == 0.0
+
+
+def test_eigvec_rotate_grid_is_pruned_when_m_below_capacity():
+    """The scalar-prefetched tile counts must shrink below the full grid
+    whenever m < M — on both axes, including offset row blocks."""
+    from repro.kernels.eigvec_update.eigvec_update import _tile_counts
+    M, R, m, block = 512, 128, 70, 64
+    steps_r, steps_c = R // block, M // block
+    g = np.asarray(_tile_counts(jnp.int32(m), jnp.int32(0), R, M, block,
+                                steps_r, steps_c))
+    assert g[1] == -(-m // block) < steps_c          # columns pruned
+    assert g[0] == -(-m // block) == g[1]            # offset-0 rows pruned
+    # block fully past the active prefix: zero row tiles survive
+    g = np.asarray(_tile_counts(jnp.int32(m), jnp.int32(256), R, M, block,
+                                steps_r, steps_c))
+    assert g[0] == 0 and g[1] == -(-m // block)
+    # no pruning info -> full grid
+    g = np.asarray(_tile_counts(None, None, R, M, block, steps_r, steps_c))
+    assert g[0] == steps_r and g[1] == steps_c
+
+
+def test_eigvec_rotate2_rectangular_matches_ref():
+    """Fused double rotation on rectangular row blocks == dense ref rows,
+    including deflated identity columns and row-axis pruning."""
+    from repro.kernels.eigvec_update.eigvec_update import eigvec_rotate2
+    from repro.kernels.eigvec_update.ref import eigvec_rotate2_ref
+    M, m, block = 200, 70, 64
+    u, z1, d1, lam1, inv1 = _padded_rotation_inputs(M, m)
+    _, z2, d2, lam2, inv2 = _padded_rotation_inputs(M, m, extra_shift=0.9)
+    defl1 = jnp.zeros(M, jnp.float32).at[5].set(1.0)
+    defl2 = jnp.zeros(M, jnp.float32).at[9].set(1.0)
+    cid1 = jnp.arange(M, dtype=jnp.int32).at[5].set(12)
+    cid2 = jnp.arange(M, dtype=jnp.int32)
+    args = (z1, d1, lam1, inv1, defl1, cid1, z2, d2, lam2, inv2, defl2,
+            cid2)
+    ref = eigvec_rotate2_ref(u, *args)
+    for R, off in ((100, 0), (100, 100), (90, 30)):
+        out = eigvec_rotate2(u[off:off + R], *args, jnp.int32(m),
+                             jnp.int32(off), interpret=True, block=block)
+        scale = np.abs(np.asarray(ref[off:off + R, :m])).max() + 1.0
+        np.testing.assert_allclose(
+            np.asarray(out[:, :m], np.float64) / scale,
+            np.asarray(ref[off:off + R, :m], np.float64) / scale,
+            rtol=1e-5, atol=1e-5)
+
+
+def test_rank_one_update_row_blocks_match_full_both_signs():
+    """rank_one_update applied to row blocks (via the interpret-mode rect
+    Pallas kernel and the un-flip) must reproduce the full update's rows
+    for sigma of EITHER sign — active stays a prefix under the flip."""
+    import os
+    from repro.core import rankone
+    rng = np.random.default_rng(11)
+    m, M, R = 10, 32, 16
+    A = rng.normal(size=(m, m))
+    A = A @ A.T
+    lam, vec = np.linalg.eigh(A)
+    L0 = np.zeros(M, np.float32)
+    U0 = np.eye(M, dtype=np.float32)
+    L0[:m] = lam
+    U0[:m, :m] = vec
+    L0 = rankone.sentinelize(jnp.asarray(L0), jnp.int32(m), jnp.float32(0.0))
+    v = np.zeros(M, np.float32)
+    v[:m] = rng.normal(size=m)
+    for sigma in (1.3, -1.3):
+        Lf, Uf = rankone.rank_one_update(
+            L0, jnp.asarray(U0), jnp.asarray(v), jnp.float32(sigma),
+            jnp.int32(m), precise=False)
+        os.environ["REPRO_PALLAS_FORCE"] = "interpret"
+        try:
+            for off in (0, R):
+                blk = jnp.asarray(U0[off:off + R])
+                z = jnp.asarray(U0.T @ v)
+                Lb, Ub = rankone._update_body(
+                    L0, blk, jnp.asarray(v), jnp.float32(sigma),
+                    jnp.int32(m), iters=32, method="gu", matmul="pallas",
+                    precise=False, z=z, row_offset=jnp.int32(off))
+        finally:
+            os.environ["REPRO_PALLAS_FORCE"] = "ref"
+        np.testing.assert_allclose(np.asarray(Lb[:m]), np.asarray(Lf[:m]),
+                                   atol=2e-5)
+
+
 def test_rank_one_update_pair_matches_sequential_pallas():
     """rank_one_update_pair(matmul='pallas') through the interpret-mode
     fused kernel == two sequential jnp updates."""
