@@ -20,6 +20,7 @@ bench-smoke:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.bench_update_scaling --smoke
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.bench_multitenant --smoke
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.bench_sharded --smoke
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.bench_window --smoke
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -q -m "not slow"

@@ -1,0 +1,183 @@
+"""Decremental-path benchmarks: downdate cost vs m, and landmark
+replacement vs from-scratch recompute.
+
+Two claims of the decremental subsystem are measured:
+
+* **Downdate scales with m, not M** — ``Engine.downdate`` under bucketed
+  dispatch runs the inverse ±sigma pair and the contraction at the
+  active bucket M_b, so evicting from a small window in a large-capacity
+  state costs O(M_b³), mirroring what PR 1 did for updates.  The fixed
+  dispatch column pays capacity O(M³) at every m — the gap is the win.
+
+* **replace_landmark beats recompute-from-scratch** — swapping one
+  Nyström landmark via downdate+update touches O(M_b³) eigensystem work
+  plus ONE new K_{n,m} column (n kernel evals), while rebuilding the
+  state from the swapped landmark set pays the full O(n·m·d) gram + the
+  m×m eigh + the capacity-sized allocations.  The replace side is timed
+  as the steady-state lifecycle it serves: a CHAIN of donated swaps
+  (``donate=True``), so the (n, M) Knm updates in place instead of
+  being copied per swap — O(n + M_b²) traffic, flat in n.  The ISSUE
+  acceptance bar is ≥ 5× at m=64, M=512 on CPU.
+
+Emits ``BENCH_window.json`` at the repo root.  ``--smoke`` runs a toy
+configuration, skips the JSON, and exits non-zero on non-finite output
+(the ``make bench-smoke`` gate).
+
+    PYTHONPATH=src python -m benchmarks.bench_window [--smoke]
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine as eng, inkpca, kernels_fn as kf, nystrom
+
+OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_window.json"
+
+
+def _check_finite(name: str, *arrays) -> None:
+    for arr in arrays:
+        if not bool(jnp.isfinite(arr).all()):
+            raise SystemExit(f"[window] non-finite output in {name}")
+
+
+def _median_time(fn, rounds: int) -> float:
+    ts = []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def bench_downdate_scaling(capacity: int, ms, d: int, rounds: int,
+                           rng) -> dict:
+    """Per-downdate wall-clock at active count m: bucketed vs fixed."""
+    spec = kf.KernelSpec(name="rbf", sigma=float(d))
+    rows = []
+    for m in ms:
+        states = {}
+        for dispatch in ("fixed", "bucketed"):
+            # min_bucket below the smallest m so each m lands in its own
+            # bucket rung — the staircase IS the cost-scales-with-m claim.
+            plan = eng.UpdatePlan(dispatch=dispatch,
+                                  min_bucket=min(32, capacity))
+            engine = eng.Engine(spec, plan, adjusted=True)
+            stream = inkpca.KPCAStream(
+                jnp.asarray(rng.normal(size=(4, d)), jnp.float32),
+                capacity, spec, adjusted=True, plan=plan)
+            stream.update_block(jnp.asarray(rng.normal(size=(m - 4, d)),
+                                            jnp.float32))
+            state = stream.state
+            # Engine.downdate is pure: time it repeatedly on one input.
+            fn = lambda e=engine, s=state: e.downdate(s, int(s.m) - 1).L
+            jax.block_until_ready(fn())        # compile at this bucket
+            states[dispatch] = _median_time(fn, rounds)
+            _check_finite(f"downdate/{dispatch}/m={m}",
+                          engine.downdate(state, int(state.m) - 1).L)
+        rows.append({
+            "m": m,
+            "downdate_ms_fixed": states["fixed"] * 1e3,
+            "downdate_ms_bucketed": states["bucketed"] * 1e3,
+            "speedup": states["fixed"] / states["bucketed"],
+        })
+        print(f"[window] downdate m={m:4d} @ M={capacity}: "
+              f"fixed {rows[-1]['downdate_ms_fixed']:.1f} ms, "
+              f"bucketed {rows[-1]['downdate_ms_bucketed']:.1f} ms "
+              f"-> {rows[-1]['speedup']:.1f}x")
+    return {"capacity": capacity, "per_m": rows}
+
+
+def bench_replace_landmark(capacity: int, m: int, n_rows: int, d: int,
+                           rounds: int, rng) -> dict:
+    """replace_landmark (donated lifecycle chain) vs from-scratch."""
+    spec = kf.KernelSpec(name="rbf", sigma=float(d))
+    plan = eng.UpdatePlan(dispatch="bucketed",
+                          min_bucket=min(128, capacity))
+    engine = eng.Engine(spec, plan, adjusted=False)
+    x_all = jnp.asarray(rng.normal(size=(n_rows, d)), jnp.float32)
+    state = nystrom.init_nystrom(x_all, x_all[:4], capacity, spec)
+    for i in range(4, m):
+        state = engine.add_landmark(state, x_all, x_all[i])
+    x_new = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+
+    # Steady-state lifecycle: each swap consumes the previous state
+    # (donate=True -> Knm updates in place), rotating the victim.
+    st = engine.replace_landmark(state, x_all, 0, x_new, donate=True)
+    jax.block_until_ready(st.Knm)                  # compile + warm
+    ts = []
+    for r in range(rounds):
+        t0 = time.perf_counter()
+        st = engine.replace_landmark(st, x_all, (3 + 7 * r) % m, x_new,
+                                     donate=True)
+        jax.block_until_ready(st.Knm)
+        ts.append(time.perf_counter() - t0)
+    t_replace = float(np.median(ts))
+    _check_finite("replace", st.Knm, st.kpca.L)
+
+    # From-scratch: rebuild from the swapped landmark set (gram + eigh +
+    # dense K_{n,m} + capacity-sized alloc — everything replace avoids).
+    lm = np.asarray(st.kpca.X[:m]).copy()
+    lm[m // 2] = np.asarray(x_new)
+    lm = jnp.asarray(lm)
+
+    def recompute():
+        return nystrom.init_nystrom(x_all, lm, capacity, spec).Knm
+
+    jax.block_until_ready(recompute())
+    t_scratch = _median_time(recompute, rounds)
+    _check_finite("recompute", recompute())
+    out = {
+        "capacity": capacity, "m": m, "n_rows": n_rows,
+        "replace_ms": t_replace * 1e3,
+        "recompute_ms": t_scratch * 1e3,
+        "speedup_replace": t_scratch / t_replace,
+    }
+    print(f"[window] replace_landmark m={m} M={capacity} n={n_rows}: "
+          f"replace {out['replace_ms']:.1f} ms vs recompute "
+          f"{out['recompute_ms']:.1f} ms -> "
+          f"{out['speedup_replace']:.1f}x")
+    return out
+
+
+def main(capacity: int = 512, d: int = 16, rounds: int = 15,
+         smoke: bool = False) -> dict:
+    rng = np.random.default_rng(0)
+    if smoke:
+        capacity, rounds = 64, 3
+        ms = [8, 16]
+        rep = bench_replace_landmark(capacity, 16, 128, d, rounds, rng)
+    else:
+        ms = [16, 32, 64, 128]
+        # Serving-shaped rows: the from-scratch gram is O(n·m·d) while a
+        # donated replace is flat in n (one column + in-place Knm).
+        rep = bench_replace_landmark(capacity, 64, 16384, 64, rounds, rng)
+    down = bench_downdate_scaling(capacity, ms, d, rounds, rng)
+
+    result = {
+        "backend": jax.default_backend(),
+        "dtype": "float32",
+        "rounds": rounds,
+        "downdate_scaling": down,
+        "replace_landmark": rep,
+        "finite": True,
+    }
+    if not smoke:
+        OUT_PATH.write_text(json.dumps(result, indent=2) + "\n")
+        print(f"[window] wrote {OUT_PATH}")
+    return result
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy sizes, no JSON, non-zero exit on non-finite")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

@@ -53,6 +53,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import downdate as dd
 from repro.core import engine as eng
 from repro.core import kernels_fn as kf, rankone
 from repro.distributed.sharding import shard_map as _shard_map
@@ -260,6 +261,107 @@ def make_sharded_update_pair(mesh, *, axis: str = "data",
         if key not in cache:
             cache[key] = build(None if Mb >= M else Mb)
         return cache[key](L, U, v1, sigma1, v2, sigma2, m)
+
+    return dispatch
+
+
+def _downdate_sharded(L, U_local, a, k_new, m, *, axis: str,
+                      plan: eng.UpdatePlan, rows_full: int | None = None):
+    """Row-sharded decremental update: evict the boundary point q = m−1.
+
+    The inverse ±sigma pair reuses ``_rank_one_update_pair_sharded``
+    verbatim (so it inherits the collective-balanced merge fallback);
+    the kernel row ``a`` arrives REPLICATED — it is O(M) and the caller
+    typically built it with one ``sharded_gram_row`` psum — and each
+    device slices its local rows.  The contraction needs row q of the
+    post-pair U, which lives on one shard: ONE extra psum of M floats
+    broadcasts it, and the Householder that folds the decoupled
+    eigenpair into an exact identity pair acts on U's *columns* — local
+    to every row block, like the dlaed2 reflector.  Total per downdate:
+    three psums of O(M) floats (two from the guarded pair), against the
+    same O(M_b²·m/P) local rotation flops as an update.
+    """
+    M = L.shape[0]
+    dtype = L.dtype
+    R = U_local.shape[0]
+    q = m - 1
+    r0 = jax.lax.axis_index(axis) * (rows_full or R)
+    local_idx = jnp.arange(R) + r0
+
+    kn = jnp.maximum(k_new, jnp.finfo(dtype).tiny)
+    a = jnp.where(jnp.arange(M) < q, a, 0.0)
+    v1 = a.at[q].set(kn / 2.0)
+    v2 = a.at[q].set(kn / 4.0)
+    sigma = 4.0 / kn
+    v1_l = jax.lax.dynamic_slice(v1, (r0,), (R,))
+    v2_l = jax.lax.dynamic_slice(v2, (r0,), (R,))
+    L, U_local = _rank_one_update_pair_sharded(
+        L, U_local, v2_l, sigma, v1_l, -sigma, m, axis=axis, plan=plan,
+        rows_full=rows_full)
+
+    # Contraction: ONE psum broadcasts the global row q of the post-pair
+    # U; the Householder + column permutation + identity forcing are
+    # column-local and shared with the single-device path
+    # (``downdate.contract_rows`` — the row block passes its global row
+    # indices so the forced identity pair lands on the owner shard).
+    eq_local = (local_idx == q).astype(dtype)
+    w = jax.lax.psum(U_local.T @ eq_local, axis)        # global row q of U
+    w = jnp.where(rankone.active_mask(M, m), w, 0.0)
+    return dd.contract_rows(L, U_local, w, m, row_ids=local_idx)
+
+
+def make_sharded_downdate(mesh, *, axis: str = "data",
+                          plan: eng.UpdatePlan = eng.DEFAULT_PLAN):
+    """Sharded decremental update: f(L, U, a, k_new, m) -> (L, U, m−1).
+
+    Evicts the ACTIVE BOUNDARY point (row m−1) of the unadjusted system —
+    the caller permutes the victim there first (``downdate.boundary_perm``
+    is a pure function of (i, m); applying it to row-sharded U is a
+    gather along the replicated dimension).  ``a`` is the victim's kernel
+    row against the stored points, replicated; with
+    ``plan.dispatch == "bucketed"`` local operands are sliced to the
+    bucket holding m (a downdate never grows the system), exactly as in
+    ``make_sharded_update``.
+    """
+
+    def fixed_body(L, U_local, a, k_new, m):
+        return _downdate_sharded(L, U_local, a, k_new, m, axis=axis,
+                                 plan=plan)
+
+    def sliced_body(Mb: int):
+        def body(L, U_local, a, k_new, m):
+            R = U_local.shape[0]
+            Rb = min(R, Mb)
+            Lb, Ub, m_new = _downdate_sharded(
+                L[:Mb], U_local[:Rb, :Mb], a[:Mb], k_new, m, axis=axis,
+                plan=plan, rows_full=R)
+            L_new = rankone.sentinelize(L.at[:Mb].set(Lb), m_new,
+                                        jnp.zeros((), L.dtype))
+            return L_new, U_local.at[:Rb, :Mb].set(Ub), m_new
+
+        return body
+
+    def build(Mb: int | None):
+        body = fixed_body if Mb is None else sliced_body(Mb)
+        return jax.jit(_shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(axis, None), P(), P(), P()),
+            out_specs=(P(), P(axis, None), P()),
+            check_vma=False,
+        ))
+
+    if plan.dispatch != "bucketed":
+        return build(None)
+
+    cache: dict[int, object] = {}
+
+    def dispatch(L, U, a, k_new, m):
+        M = L.shape[0]
+        Mb = eng.bucket_for(max(int(m), 1), M, plan.min_bucket)
+        key = Mb if Mb < M else -1
+        if key not in cache:
+            cache[key] = build(None if Mb >= M else Mb)
+        return cache[key](L, U, a, k_new, m)
 
     return dispatch
 

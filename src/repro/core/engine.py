@@ -87,6 +87,15 @@ class UpdatePlan(NamedTuple):
                     a truncated state on its leading rows and shrink the
                     arrays to the active bucket
     precise:        solve the secular systems in f64 when x64 is enabled
+    window:         default sliding-window size for streams built from
+                    this plan (``KPCAStream``/``StreamBatch`` evict the
+                    oldest point before ingesting past the window); None
+                    keeps the append-only behaviour
+    landmark_policy: Nyström landmark admission — "append" (every offered
+                    point becomes a landmark, the paper's §4 loop) or
+                    "leverage" (admit on projection residual, replace the
+                    lowest-leverage landmark when at budget; see
+                    ``nystrom.consider_landmark``)
     """
 
     method: str = "gu"
@@ -97,6 +106,8 @@ class UpdatePlan(NamedTuple):
     merge_fallback: bool = True
     compact_shrink: bool = False
     precise: bool = True
+    window: int | None = None
+    landmark_policy: str = "append"
 
     @property
     def fused(self) -> bool:
@@ -114,7 +125,9 @@ class UpdatePlan(NamedTuple):
         than once per dispatch/bucket-ladder combination."""
         return self._replace(dispatch="fixed",
                              min_bucket=DEFAULT_MIN_BUCKET,
-                             compact_shrink=False)
+                             compact_shrink=False,
+                             window=None,
+                             landmark_policy="append")
 
 
 DEFAULT_PLAN = UpdatePlan()
@@ -318,6 +331,43 @@ def _batched_update_masked(states, xs: Array, active: Array,
 
 
 @partial(jax.jit, static_argnames=("spec", "adjusted", "plan"))
+def _batched_downdate_masked(states, rows: Array, active: Array,
+                             spec: kf.KernelSpec, adjusted: bool,
+                             plan: UpdatePlan):
+    """One vmapped step: evict row rows[i] from tenant i where active[i]
+    (the decremental mirror of ``_batched_update_masked``)."""
+    from repro.core import downdate as dd
+
+    def one(st, r, act):
+        new = dd.downdate(st, r, spec, adjusted=adjusted, plan=plan)
+        return jax.tree.map(lambda n, o: jnp.where(act, n, o), new, st)
+
+    return jax.vmap(one)(states, rows, active)
+
+
+@partial(jax.jit, static_argnames=("spec", "adjusted", "plan"))
+def _batched_scan_masked(states, xs: Array, active: Array,
+                         spec: kf.KernelSpec, adjusted: bool,
+                         plan: UpdatePlan):
+    """Scan a (T, B, d) block with a T-constant tenant mask (used by
+    padded cohorts, whose pad lanes must never advance)."""
+    from repro.core import inkpca
+
+    def step(sts, x_row):
+        def one(st, x, act):
+            a, k_new = masked_row(st, x, spec)
+            fn = (inkpca.update_adjusted if adjusted
+                  else inkpca.update_unadjusted)
+            new = fn(st, a, k_new, x, plan=plan)
+            return jax.tree.map(lambda n, o: jnp.where(act, n, o), new, st)
+
+        return jax.vmap(one)(sts, x_row, active), None
+
+    out, _ = jax.lax.scan(step, states, xs)
+    return out
+
+
+@partial(jax.jit, static_argnames=("spec", "adjusted", "plan"))
 def _batched_scan(states, xs: Array, spec: kf.KernelSpec, adjusted: bool,
                   plan: UpdatePlan):
     """Scan a (T, B, d) block: T sequential steps, B tenants per step."""
@@ -401,6 +451,47 @@ class Engine:
             i += take
         return state
 
+    # ---- decremental path --------------------------------------------------
+    def downdate(self, state, i: int, *, min_rows: int = 0):
+        """Remove point ``i`` from the stream at bucket capacity — the
+        decremental mirror of ``update`` (see ``core/downdate.py``).
+
+        The downdate never grows the system, so the bucket only needs to
+        hold the CURRENT active count; once m drops below a rung, the
+        next call (update or downdate) re-buckets downward automatically
+        since bucket choice reads ``int(m)``.  A ``NystromState`` routes
+        to ``remove_landmark``.  Requires m ≥ 2.
+        """
+        if hasattr(state, "kpca"):
+            return self.remove_landmark(state, i, min_rows=min_rows)
+        from repro.core import downdate as dd
+
+        M = state.L.shape[0]
+        m = int(state.m)
+        if m < 2:
+            raise ValueError(f"downdate needs at least 2 active points, "
+                             f"got m={m}")
+        if not 0 <= i < m:
+            raise ValueError(f"point index {i} outside active range "
+                             f"[0, {m})")
+        Mb = self._bucket(M, max(m, min_rows, 1))
+        sub = slice_state(state, Mb) if Mb < M else state
+        sub = dd.downdate(sub, jnp.asarray(i, jnp.int32), self.spec,
+                          adjusted=self.adjusted,
+                          plan=self.plan.kernel_plan())
+        return scatter_state(state, sub) if Mb < M else sub
+
+    def replace(self, state, i: int, x_new: Array, *, min_rows: int = 0):
+        """Swap point ``i`` for ``x_new``: downdate then update, both at
+        bucket capacity.  Works on full states (downdate first frees the
+        slot the update needs).  A ``NystromState`` routes to
+        ``replace_landmark`` (grow_rows mode)."""
+        if hasattr(state, "kpca"):
+            return self.replace_landmark(state, None, i, x_new,
+                                         min_rows=min_rows)
+        state = self.downdate(state, i, min_rows=min_rows)
+        return self.update(state, x_new, min_rows=min_rows)
+
     # ---- low-level rank-one -----------------------------------------------
     def rank_one(self, L: Array, U: Array, v: Array, sigma: Array, m: Array
                  ) -> tuple[Array, Array]:
@@ -433,6 +524,96 @@ class Engine:
         return state._replace(kpca=scatter_state(state.kpca, sub.kpca),
                               Knm=state.Knm.at[:, :Mb].set(sub.Knm),
                               Xrows=sub.Xrows)
+
+    def remove_landmark(self, state, j: int, *, min_rows: int = 0):
+        """Bucketed ``nystrom.remove_landmark``: the eigensystem downdate
+        and the Knm column shuffle both run at the bucket holding the
+        current landmark count (no growth, so the bucket needs m rows,
+        not m+1)."""
+        from repro.core import nystrom
+
+        M = state.kpca.L.shape[0]
+        m = int(state.kpca.m)
+        if m < 2:
+            raise ValueError(f"remove_landmark needs at least 2 landmarks, "
+                             f"got m={m}")
+        if not 0 <= j < m:
+            raise ValueError(f"landmark index {j} outside active range "
+                             f"[0, {m})")
+        Mb = self._bucket(M, max(m, min_rows, 1))
+        plan = self.plan.kernel_plan()
+        if Mb == M:
+            return nystrom.remove_landmark(state, jnp.asarray(j, jnp.int32),
+                                           self.spec, plan=plan)
+        sub = state._replace(kpca=slice_state(state.kpca, Mb),
+                             Knm=state.Knm[:, :Mb])
+        sub = nystrom.remove_landmark(sub, jnp.asarray(j, jnp.int32),
+                                      self.spec, plan=plan)
+        return state._replace(kpca=scatter_state(state.kpca, sub.kpca),
+                              Knm=state.Knm.at[:, :Mb].set(sub.Knm))
+
+    def replace_landmark(self, state, x_all, j: int, x_new: Array, *,
+                         min_rows: int = 0, donate: bool = False):
+        """Swap landmark ``j`` for ``x_new``: remove + add fused into ONE
+        jitted dispatch at the bucket (the eager slice/scatter of two
+        separate bucketed calls would rival the compute at serving
+        sizes).  O(M_b³ + n) against the O(n·m·d + m³ + n·M alloc)
+        from-scratch rebuild — the landmark-lifecycle fast path (see
+        benchmarks/bench_window.py).  The bucket needs m rows only: the
+        removal frees the slot before the add writes row m−1.
+
+        ``donate=True`` consumes the input state: the (n, M) Knm and the
+        (M, M) eigenvector buffers are updated in place, so the swap's
+        memory traffic is O(n + M_b²) instead of O(n·M).  Use it in the
+        steady-state lifecycle (serve loop, benchmarks) where the
+        pre-swap state is dead anyway; the default copies.
+        """
+        M = state.kpca.L.shape[0]
+        m = int(state.kpca.m)
+        if m < 2:
+            raise ValueError(f"replace_landmark needs at least 2 "
+                             f"landmarks, got m={m}")
+        if not 0 <= j < m:
+            raise ValueError(f"landmark index {j} outside active range "
+                             f"[0, {m})")
+        Mb = self._bucket(M, max(m, min_rows, 1))
+        plan = self.plan.kernel_plan()
+        # Mb == M still routes through the jitted impl (the slice is a
+        # no-op there) so donation holds for fixed-dispatch and
+        # top-bucket states too — not just sliced buckets.
+        fn = (_replace_landmark_sliced_donated if donate
+              else _replace_landmark_sliced)
+        return fn(state, jnp.asarray(j, jnp.int32), x_new, x_all,
+                  self.spec, plan, Mb)
+
+    def offer_landmark(self, state, x: Array, *, x_all=None,
+                       budget: int | None = None, admit_tol: float = 1e-3,
+                       reg: float = 1e-6, min_rows: int = 0):
+        """Offer one candidate landmark under ``plan.landmark_policy``.
+
+        * ``"append"`` — the paper's §4 loop: admit every candidate until
+          the budget fills, then reject.
+        * ``"leverage"`` — residual-gated admission with lowest-leverage
+          replacement at budget (``nystrom.consider_landmark``).
+
+        Returns ``(state, action)`` with action in
+        {"admitted", "rejected", "replaced"}.
+        """
+        from repro.core import nystrom
+
+        if self.plan.landmark_policy == "leverage":
+            return nystrom.consider_landmark(
+                self, state, x, x_all=x_all, budget=budget,
+                admit_tol=admit_tol, reg=reg, min_rows=min_rows)
+        if self.plan.landmark_policy != "append":
+            raise ValueError(f"unknown landmark_policy "
+                             f"{self.plan.landmark_policy!r}")
+        M = state.kpca.L.shape[0]
+        budget = budget if budget is not None else M - 1
+        if int(state.kpca.m) < budget:
+            return self.add_landmark(state, x_all, x,
+                                     min_rows=min_rows), "admitted"
+        return state, "rejected"
 
     # ---- truncation / compaction ------------------------------------------
     def truncate(self, state, k: int, *, compact: bool | None = None,
@@ -583,6 +764,31 @@ class Engine:
         return state._replace(L=L, U=U, m=mm, K1=K1, X=X)
 
 
+def _replace_landmark_sliced_impl(state, j: Array, x_new: Array, x_all,
+                                  spec: kf.KernelSpec, plan: UpdatePlan,
+                                  Mb: int):
+    """slice → remove_landmark → add_landmark → scatter under one jit."""
+    from repro.core import nystrom
+
+    sub = state._replace(kpca=slice_state(state.kpca, Mb),
+                         Knm=state.Knm[:, :Mb])
+    sub = nystrom.replace_landmark(sub, x_all, j, x_new, spec, plan=plan)
+    return state._replace(kpca=scatter_state(state.kpca, sub.kpca),
+                          Knm=state.Knm.at[:, :Mb].set(sub.Knm),
+                          Xrows=sub.Xrows)
+
+
+_replace_landmark_sliced = jax.jit(
+    _replace_landmark_sliced_impl, static_argnames=("spec", "plan", "Mb"))
+# Donating spelling for the steady-state lifecycle: the O(n·M) Knm (and
+# the M×M eigenvectors) update IN PLACE instead of being copied per swap,
+# so a replace's memory traffic is O(n + M_b²), not O(n·M).  The caller's
+# input state is consumed.
+_replace_landmark_sliced_donated = jax.jit(
+    _replace_landmark_sliced_impl, static_argnames=("spec", "plan", "Mb"),
+    donate_argnums=(0,))
+
+
 # ---------------------------------------------------- multi-tenant batch --
 class StreamBatch:
     """B independent KPCA streams advanced in lockstep via vmap.
@@ -605,6 +811,23 @@ class StreamBatch:
       number of occupied buckets (≤ log2(M/min_bucket)+1), not B.
       Group membership migrates at bucket crossings (host-side
       regroup + re-slice, amortized like any bucket crossing).
+    * ``"bucket-padded"`` — like ``"bucket"``, but each group's tenant
+      axis is padded to the next power of two with inert copies of the
+      group's first tenant (masked out of every step, never scattered
+      back).  Each vmapped step then compiles per (pow2 group size,
+      M_b) pair — at most log2(B)+1 sizes per bucket — so tenant churn
+      (joins/leaves re-cutting group sizes every few steps) pays
+      bounded recompiles instead of one per distinct group size, at the
+      cost of ≤ 2× redundant lane compute inside a group.
+
+    Sliding windows (``window=W``): an active tenant sitting at m = W
+    first evicts its oldest point via a masked batched downdate
+    (``_batched_downdate_masked`` — the decremental mirror of the update
+    step) and then ingests, so per-tenant memory and cost are bounded
+    forever.  Lockstep FIFO means the oldest point is always physical
+    row 0 (the eviction permutation preserves survivor order), so no
+    per-tenant ring is needed here — single streams carry one in
+    ``core/window.py`` for checkpoint-portable eviction order.
 
     Unlike the single-stream engine (which slices and scatters the
     capacity-M state every step), the working state here is *bucket
@@ -622,7 +845,8 @@ class StreamBatch:
 
     def __init__(self, x0: Array, capacity: int, spec: kf.KernelSpec, *,
                  plan: UpdatePlan = DEFAULT_PLAN, adjusted: bool = True,
-                 dtype=jnp.float32, cohorts: str = "max"):
+                 dtype=jnp.float32, cohorts: str = "max",
+                 window: int | None = None):
         import numpy as np
 
         from repro.core import inkpca
@@ -630,14 +854,24 @@ class StreamBatch:
         x0 = jnp.asarray(x0)
         if x0.ndim != 3:
             raise ValueError(f"x0 must be (tenants, m0, d), got {x0.shape}")
-        if cohorts not in ("max", "bucket"):
-            raise ValueError(f"cohorts must be 'max' or 'bucket', "
-                             f"got {cohorts!r}")
+        if cohorts not in ("max", "bucket", "bucket-padded"):
+            raise ValueError(f"cohorts must be 'max', 'bucket' or "
+                             f"'bucket-padded', got {cohorts!r}")
+        if window is None:
+            window = plan.window
+        if window is not None:
+            if not 2 <= window <= capacity:
+                raise ValueError(f"window must be in [2, capacity], got "
+                                 f"{window} (capacity {capacity})")
+            if int(x0.shape[1]) > window:
+                raise ValueError(f"seed size {x0.shape[1]} exceeds window "
+                                 f"{window}")
         self.spec = spec
         self.plan = plan
         self.adjusted = adjusted
         self.capacity = capacity
         self.cohorts = cohorts
+        self.window = window
         self.n_tenants = int(x0.shape[0])
         self._full = jax.vmap(
             lambda x: inkpca.init_state(x, capacity, spec, adjusted=adjusted,
@@ -665,7 +899,11 @@ class StreamBatch:
                 self._scatter_group(grp)
             self._groups = None
 
-    # ---- bucket-homogeneous groups ("bucket" cohorts) -----------------------
+    # ---- bucket-homogeneous groups ("bucket"/"bucket-padded" cohorts) -------
+    @property
+    def _grouped(self) -> bool:
+        return self.cohorts in ("bucket", "bucket-padded")
+
     def _tenant_bucket(self, m: int) -> int:
         if self.plan.dispatch != "bucketed":
             return self.capacity
@@ -673,18 +911,41 @@ class StreamBatch:
                           self.plan.min_bucket)
 
     def _gather_group(self, idx) -> dict:
+        import numpy as np
+
         Mb = self._tenant_bucket(int(self._m_host[idx].max()))
-        rows = jax.tree.map(lambda leaf: leaf[idx], self._full)
+        n_real = len(idx)
+        if self.cohorts == "bucket-padded" and n_real > 0:
+            # Pad the tenant axis to the next power of two with inert
+            # copies of the first tenant: vmapped steps compile once per
+            # (pow2 size, Mb), bounding recompiles under tenant churn.
+            size = 1 << (n_real - 1).bit_length()
+            idx_pad = np.concatenate([idx, np.repeat(idx[:1],
+                                                     size - n_real)])
+        else:
+            idx_pad = idx
+        rows = jax.tree.map(lambda leaf: leaf[idx_pad], self._full)
         state = _slice_stacked(rows, Mb) if Mb < self.capacity else rows
-        return {"Mb": Mb, "idx": idx, "state": state}
+        return {"Mb": Mb, "idx": idx, "idx_pad": idx_pad, "n_real": n_real,
+                "state": state}
 
     def _scatter_group(self, grp) -> None:
         idx = grp["idx"]
+        sub = jax.tree.map(lambda leaf: leaf[:grp["n_real"]], grp["state"])
         full_rows = jax.tree.map(lambda leaf: leaf[idx], self._full)
-        rows = (jax.vmap(scatter_state)(full_rows, grp["state"])
-                if grp["Mb"] < self.capacity else grp["state"])
+        rows = (jax.vmap(scatter_state)(full_rows, sub)
+                if grp["Mb"] < self.capacity else sub)
         self._full = jax.tree.map(
             lambda leaf, r: leaf.at[idx].set(r), self._full, rows)
+
+    def _group_mask(self, grp, host_mask):
+        """Pad a per-tenant host mask to the group's (padded) lanes; pad
+        lanes are always inert."""
+        import numpy as np
+
+        out = np.asarray(host_mask)[grp["idx_pad"]].copy()
+        out[grp["n_real"]:] = False
+        return out
 
     def _regroup(self):
         """(Re)partition tenants into bucket-homogeneous groups.
@@ -734,6 +995,12 @@ class StreamBatch:
         """Rows the next update must fit, re-syncing the host ceiling from
         the device when it matters (crossing or apparent exhaustion) —
         idle tenants make the ceiling an overestimate."""
+        if self.window is not None:
+            # Sliding windows bound every tenant at m <= window <= capacity
+            # (active tenants at the window evict before ingesting; idle
+            # tenants don't grow), so exhaustion is impossible — an idle
+            # tenant parked at m == capacity must not trip the raise.
+            return min(self._ceiling + 1, self.capacity)
         resync = self._ceiling + 1 > self.capacity or (
             self.plan.dispatch == "bucketed" and self._sub is not None
             and bucket_for(min(self._ceiling + 1, self.capacity),
@@ -748,38 +1015,86 @@ class StreamBatch:
         return self._ceiling + 1
 
     # ---- streaming ----------------------------------------------------------
+    def _evict_mask(self, act_host):
+        """Tenants whose next active ingest must first evict (window full)."""
+        import numpy as np
+
+        if self.window is None:
+            return np.zeros(self.n_tenants, bool)
+        return act_host & (self._m_host >= self.window)
+
+    def _evict_grouped(self, evict, plan) -> None:
+        """Masked batched downdates of the oldest point (row 0) per group."""
+        for grp in self._groups:
+            ge = self._group_mask(grp, evict)
+            if ge.any():
+                rows = jnp.zeros((len(grp["idx_pad"]),), jnp.int32)
+                grp["state"] = _batched_downdate_masked(
+                    grp["state"], rows, jnp.asarray(ge), self.spec,
+                    self.adjusted, plan)
+        self._m_host[evict] -= 1
+        self._ceiling = int(self._m_host.max())
+
     def update(self, xs: Array, active: Array | None = None):
         """Fold xs[i] (shape (B, d)) into tenant i, one device step per
-        occupied bucket (one total for ``cohorts="max"``).
+        occupied bucket (one total for ``cohorts="max"``) — preceded, in
+        sliding-window mode, by one masked batched downdate per bucket
+        for the tenants whose window is full.
 
         Returns the bucket-resident stacked state ("max": the whole cohort
-        at the cohort bucket; "bucket": the LARGEST group's state — use
-        ``states``/``state_of`` for full-cohort reads).
+        at the cohort bucket; grouped cohorts: the LARGEST group's state —
+        use ``states``/``state_of`` for full-cohort reads).
         """
         import numpy as np
 
         xs = jnp.asarray(xs)
         plan = self.plan.kernel_plan()
-        if self.cohorts == "bucket":
-            act_host = (np.ones(self.n_tenants, bool) if active is None
-                        else np.asarray(active, bool))
-            self._m_host_pending_check(act_host)
+        act_host = (np.ones(self.n_tenants, bool) if active is None
+                    else np.asarray(active, bool))
+        evict = self._evict_mask(act_host)
+        if self._grouped:
+            self._m_host_pending_check(act_host, evict)
             self._regroup()
+            if evict.any():
+                self._evict_grouped(evict, plan)
             act_dev = None if active is None else jnp.asarray(active)
             for grp in self._groups:
-                idx = grp["idx"]
-                if active is None:
+                idxp = grp["idx_pad"]
+                if self.cohorts == "bucket-padded":
+                    ga = self._group_mask(grp, act_host)
+                    if ga.any():
+                        grp["state"] = _batched_update_masked(
+                            grp["state"], xs[idxp], jnp.asarray(ga),
+                            self.spec, self.adjusted, plan)
+                elif active is None:
                     grp["state"] = _batched_update(
-                        grp["state"], xs[idx], self.spec, self.adjusted,
+                        grp["state"], xs[idxp], self.spec, self.adjusted,
                         plan)
-                elif act_host[idx].any():
+                elif act_host[idxp].any():
                     grp["state"] = _batched_update_masked(
-                        grp["state"], xs[idx], act_dev[idx], self.spec,
+                        grp["state"], xs[idxp], act_dev[idxp], self.spec,
                         self.adjusted, plan)
             self._m_host[act_host] += 1
             self._ceiling = int(self._m_host.max())
             return self._groups[-1]["state"]
-        sub = self._working(self._need())
+        if evict.any():
+            # One bucket serves the evict AND the following update (a
+            # larger bucket is always sound), so a steady-state window
+            # step never re-slices between its two device calls.
+            post_max = int((self._m_host
+                            - evict.astype(self._m_host.dtype)).max())
+            need = max(int(self._m_host.max()),
+                       min(post_max + 1, self.capacity))
+            sub = self._working(need)
+            rows = jnp.zeros((self.n_tenants,), jnp.int32)
+            self._sub = _batched_downdate_masked(
+                sub, rows, jnp.asarray(evict), self.spec, self.adjusted,
+                plan)
+            self._m_host[evict] -= 1
+            self._ceiling = int(self._m_host.max())
+            sub = self._sub
+        else:
+            sub = self._working(self._need())
         if active is None:
             self._sub = _batched_update(sub, xs, self.spec, self.adjusted,
                                         plan)
@@ -792,10 +1107,14 @@ class StreamBatch:
         self._ceiling += 1
         return self._sub
 
-    def _m_host_pending_check(self, act_host) -> None:
-        """Raise on capacity exhaustion BEFORE mutating any state."""
-        if ((self._m_host + act_host.astype(self._m_host.dtype))
-                > self.capacity).any():
+    def _m_host_pending_check(self, act_host, evict=None) -> None:
+        """Raise on capacity exhaustion BEFORE mutating any state.
+        ``evict`` marks tenants whose ingest evicts first (window mode),
+        so their net growth is zero."""
+        after = self._m_host + act_host.astype(self._m_host.dtype)
+        if evict is not None:
+            after = after - evict.astype(self._m_host.dtype)
+        if (after > self.capacity).any():
             worst = int(self._m_host.max())
             raise ValueError(
                 f"tenant at active count {worst} exhausted capacity "
@@ -803,14 +1122,20 @@ class StreamBatch:
 
     def update_block(self, xs: Array):
         """Stream a (T, B, d) block: scan over T with tenants vmapped per
-        step; chunks are cut at bucket crossings (any group's, in
-        ``cohorts="bucket"`` mode)."""
+        step; chunks are cut at bucket crossings (any group's, in grouped
+        cohort modes).  Window mode steps point-by-point (each step may
+        evict, which is a host-side dispatch decision)."""
         import numpy as np
 
         xs = jnp.asarray(xs)
         T = xs.shape[0]
+        if self.window is not None:
+            out = None
+            for t in range(T):
+                out = self.update(xs[t])
+            return out
         i = 0
-        if self.cohorts == "bucket":
+        if self._grouped:
             ones = np.ones(self.n_tenants, bool)
             plan = self.plan.kernel_plan()
             while i < T:
@@ -819,9 +1144,16 @@ class StreamBatch:
                 take = min(min(g["Mb"] - int(self._m_host[g["idx"]].max())
                                for g in self._groups), T - i)
                 for grp in self._groups:
-                    grp["state"] = _batched_scan(
-                        grp["state"], xs[i:i + take][:, grp["idx"]],
-                        self.spec, self.adjusted, plan)
+                    blk = xs[i:i + take][:, grp["idx_pad"]]
+                    if self.cohorts == "bucket-padded":
+                        ga = self._group_mask(grp, ones)
+                        grp["state"] = _batched_scan_masked(
+                            grp["state"], blk, jnp.asarray(ga), self.spec,
+                            self.adjusted, plan)
+                    else:
+                        grp["state"] = _batched_scan(
+                            grp["state"], blk, self.spec, self.adjusted,
+                            plan)
                 self._m_host += take
                 i += take
             self._ceiling = int(self._m_host.max())
@@ -843,10 +1175,11 @@ class StreamBatch:
         q = jnp.asarray(q)
         fn = partial(transform_state, spec=self.spec, adjusted=self.adjusted,
                      n_components=n_components)
-        if self.cohorts == "bucket" and self._groups is not None:
+        if self._grouped and self._groups is not None:
             out = None
             for grp in self._groups:
-                yg = jax.vmap(fn)(grp["state"], q[grp["idx"]])
+                yg = jax.vmap(fn)(grp["state"], q[grp["idx_pad"]])
+                yg = yg[:grp["n_real"]]
                 if out is None:
                     out = jnp.zeros((self.n_tenants,) + yg.shape[1:],
                                     yg.dtype)
@@ -857,10 +1190,10 @@ class StreamBatch:
 
     def working_states(self) -> list:
         """The bucket-resident working state(s) without flushing: one
-        stacked state per occupied bucket group ("bucket" cohorts), else
+        stacked state per occupied bucket group (grouped cohorts), else
         the single cohort state.  For hot-path synchronization
         (``jax.block_until_ready``) and inspection."""
-        if self.cohorts == "bucket" and self._groups is not None:
+        if self._grouped and self._groups is not None:
             return [g["state"] for g in self._groups]
         return [self._sub if self._sub is not None else self._full]
 

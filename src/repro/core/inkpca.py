@@ -171,6 +171,14 @@ class KPCAStream:
     bucket capacity holding the active set, so per-update cost scales with
     m instead of the fixed capacity M (one extra compilation per bucket
     visited; see engine.py for the crossing/retrace cost model).
+
+    ``window=W`` turns the stream into a **sliding window** over the
+    trailing W points: ingesting past a full window first evicts the
+    oldest point via the decremental pipeline (``core/downdate.py``), so
+    memory and per-step cost are bounded on unbounded streams.  In this
+    mode ``self.state`` is a ``window.WindowState`` — the eigensystem
+    plus a FIFO arrival ring, so eviction order survives checkpoint
+    round-trips; ``kpca_state`` always exposes the inner ``KPCAState``.
     """
 
     def __init__(self, x0: Array, capacity: int, spec: kf.KernelSpec, *,
@@ -179,32 +187,77 @@ class KPCAStream:
                  matmul: Literal["jnp", "pallas", "jnp2", "pallas2"] = "jnp",
                  iters: int | None = None, dtype=jnp.float32,
                  dispatch: Literal["fixed", "bucketed"] = "fixed",
-                 min_bucket: int | None = None):
+                 min_bucket: int | None = None,
+                 window: int | None = None):
+        from repro.core import window as wnd
+
         if plan is None:
             plan = eng.UpdatePlan(
                 method=method, matmul=matmul, iters=iters, dispatch=dispatch,
                 min_bucket=(min_bucket if min_bucket is not None
-                            else eng.DEFAULT_MIN_BUCKET))
+                            else eng.DEFAULT_MIN_BUCKET),
+                window=window)
+        if window is None:
+            window = plan.window
         self.spec = spec
         self.adjusted = adjusted
         self.plan = plan
+        self.window = window
         self.engine = eng.Engine(spec, plan, adjusted=adjusted)
-        self.state = init_state(x0, capacity, spec, adjusted=adjusted,
-                                dtype=dtype)
+        if window is not None:
+            if not 2 <= window <= capacity:
+                raise ValueError(f"window must be in [2, capacity], got "
+                                 f"{window} (capacity {capacity})")
+            if int(jnp.asarray(x0).shape[0]) > window:
+                raise ValueError(f"seed size {jnp.asarray(x0).shape[0]} "
+                                 f"exceeds window {window}")
+            self.state = wnd.init_window(x0, capacity, spec,
+                                         adjusted=adjusted, dtype=dtype)
+        else:
+            self.state = init_state(x0, capacity, spec, adjusted=adjusted,
+                                    dtype=dtype)
         # Row-support floor for bucket selection: a truncated, uncompacted
         # state keeps eigenvector mass on rows beyond m (see Engine.truncate).
         self._min_rows = 0
 
-    def update(self, x_new: Array) -> KPCAState:
+    @property
+    def kpca_state(self) -> KPCAState:
+        """The eigensystem state, regardless of windowing."""
+        return self.state.kpca if self.window is not None else self.state
+
+    def update(self, x_new: Array):
+        if self.window is not None:
+            from repro.core import window as wnd
+            self.state = wnd.ingest(self.engine, self.state, x_new,
+                                    window=self.window,
+                                    min_rows=self._min_rows)
+            return self.state
         self.state = self.engine.update(self.state, x_new,
                                         min_rows=self._min_rows)
         return self.state
 
-    def update_block(self, xs: Array) -> KPCAState:
+    def downdate(self, i: int):
+        """Remove point ``i`` (physical row) from the stream."""
+        if self.window is not None:
+            from repro.core import window as wnd
+            self.state = wnd.evict(self.engine, self.state, i,
+                                   min_rows=self._min_rows)
+            return self.state
+        self.state = self.engine.downdate(self.state, i,
+                                          min_rows=self._min_rows)
+        return self.state
+
+    def update_block(self, xs: Array):
         """Scan over a block of points — one compilation, exact sequential
         semantics (the paper's per-point algorithm, amortized for TPU).
         Bucketed dispatch scans within a bucket and re-buckets at
-        crossings, keeping the same sequential semantics."""
+        crossings, keeping the same sequential semantics.  A windowed
+        stream steps point-by-point (each step may evict, a host-side
+        dispatch decision)."""
+        if self.window is not None:
+            for t in range(jnp.asarray(xs).shape[0]):
+                self.update(xs[t])
+            return self.state
         self.state = self.engine.update_block(self.state, xs,
                                               min_rows=self._min_rows)
         return self.state
@@ -223,6 +276,9 @@ class KPCAStream:
         survive a checkpoint, so compact a truncated stream before
         saving it mid-stream.
         """
+        if self.window is not None:
+            raise ValueError("truncate is not supported on a windowed "
+                             "stream — the window itself bounds the state")
         if compact is None:
             compact = self.plan.compact_shrink
         support = max(int(self.state.m), self._min_rows)
@@ -233,13 +289,14 @@ class KPCAStream:
     # ---- read-out utilities -------------------------------------------------
     def eigpairs(self) -> tuple[Array, Array]:
         """Active (descending) eigenvalues and eigenvectors."""
-        return eng.eigpairs(self.state)
+        return eng.eigpairs(self.kpca_state)
 
     def reconstruction(self) -> Array:
-        return rankone.reconstruct(self.state.L, self.state.U, self.state.m)
+        st = self.kpca_state
+        return rankone.reconstruct(st.L, st.U, st.m)
 
     def transform(self, x: Array, n_components: int) -> Array:
         """Project new points on the leading kernel principal components."""
-        return eng.transform_state(self.state, x, spec=self.spec,
+        return eng.transform_state(self.kpca_state, x, spec=self.spec,
                                    adjusted=self.adjusted,
                                    n_components=n_components)

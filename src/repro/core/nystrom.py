@@ -118,6 +118,181 @@ def add_landmark(state: NystromState, x_all: Array | None, x_new: Array,
     return state._replace(kpca=kpca, Knm=Knm)
 
 
+@partial(jax.jit, static_argnames=("spec", "plan"))
+def remove_landmark(state: NystromState, j: Array, spec: kf.KernelSpec, *,
+                    plan: eng.UpdatePlan = eng.DEFAULT_PLAN) -> NystromState:
+    """Shrink the landmark set by one point — the paper's admission loop
+    made reversible.
+
+    The eigensystem of K_{m,m} is downdated by the inverse ±sigma pair
+    (``downdate.downdate_unadjusted``, the exact inverse of Algorithm 1);
+    the Knm columns follow the same survivor-order-preserving permutation
+    the downdate applies to the landmark rows, and the evicted landmark's
+    column is zeroed.  Observed rows (``Xrows``/Knm rows) are untouched —
+    an ex-landmark remains an observed point.
+    """
+    from repro.core import downdate as dd
+
+    kpca = dd.permute_to_boundary(state.kpca, j)
+    order = dd.boundary_perm(j, state.kpca.m, state.kpca.L.shape[0])
+    q = state.kpca.m - 1
+    Knm = state.Knm[:, order]
+    Knm = Knm.at[:, q].set(jnp.zeros((Knm.shape[0],), Knm.dtype))
+    kpca = dd.downdate_unadjusted(kpca, spec, plan=plan)
+    return state._replace(kpca=kpca, Knm=Knm)
+
+
+def replace_landmark(state: NystromState, x_all: Array | None, j: Array,
+                     x_new: Array, spec: kf.KernelSpec, *,
+                     plan: eng.UpdatePlan = eng.DEFAULT_PLAN
+                     ) -> NystromState:
+    """Swap landmark ``j`` for ``x_new``: remove + add.
+
+    O(m³) eigensystem work plus ONE new Knm column (O(n) kernel evals)
+    versus the O(n·m·d) gram rebuild + eigh of a from-scratch recompute —
+    see ``benchmarks/bench_window.py`` for the measured gap.  Use
+    ``engine.Engine.replace_landmark`` for the bucketed spelling.
+    """
+    state = remove_landmark(state, jnp.asarray(j, jnp.int32), spec,
+                            plan=plan)
+    return add_landmark(state, x_all, x_new, spec, plan=plan)
+
+
+# ------------------------------------------------- landmark admission ----
+def leverage_scores(state: NystromState, reg: float = 1e-6) -> Array:
+    """Ridge leverage score of each landmark under the maintained
+    eigendecomposition: l_j = Σ_k U[j,k]² λ_k/(λ_k + reg·tr/m).
+
+    The regularizer is scaled by the mean active eigenvalue so ``reg``
+    is dimensionless.  Low-leverage landmarks are the redundant ones —
+    the replacement victims of the "leverage" admission policy
+    (leverage-style subset quality scoring follows Sterge &
+    Sriperumbudur, 2105.08875).
+    """
+    st = state.kpca
+    M = st.L.shape[0]
+    mask = rankone.active_mask(M, st.m)
+    lam = jnp.where(mask, st.L, 0.0)
+    lam_bar = jnp.sum(lam) / jnp.maximum(st.m.astype(st.L.dtype), 1.0)
+    lam_reg = jnp.maximum(reg * lam_bar, jnp.finfo(st.L.dtype).tiny)
+    w = jnp.where(mask, lam / (lam + lam_reg), 0.0)
+    scores = jnp.sum(st.U**2 * w[None, :], axis=1)
+    return jnp.where(mask, scores, 0.0)
+
+
+def admission_residual(state: NystromState, x: Array,
+                       spec: kf.KernelSpec) -> Array:
+    """Projection residual of a candidate landmark onto the current
+    landmark span: δ(x) = k(x,x) − b(x)ᵀ K_{m,m}⁺ b(x) ≥ 0.
+
+    This is the Schur complement of the candidate against the landmark
+    gram — exactly the marginal the incremental Nyström approximation
+    gains by admitting x (δ = 0 means x is already spanned).  O(m²) per
+    candidate from the maintained eigenpairs; no n×n object is formed.
+    """
+    st = state.kpca
+    mask = rankone.active_mask(st.L.shape[0], st.m)
+    b, k_xx = eng.masked_row(st, x, spec)
+    y = st.U.T @ b
+    return k_xx - jnp.sum(_pinv_lam(st.L, mask) * y * y)
+
+
+def trace_error(state: NystromState, spec: kf.KernelSpec,
+                x_all: Array | None = None) -> Array:
+    """Trace-norm of K − K̃ over the observed rows, incrementally.
+
+    For Nyström, K − K̃ is PSD, so the trace norm is the exact trace gap
+    Σ_i (k(x_i,x_i) − K̃_ii) — computable in O(n·m) from the maintained
+    eigenpairs without ever forming the n×n difference the offline
+    ``approximation_error`` needs.  This is the quantity whose plateau
+    the sufficient-subset stopping rule watches (the paper's headline
+    "empirical evaluation of when a subset of sufficient size has been
+    obtained", made online).
+    """
+    st = state.kpca
+    x_rows = state.Xrows if state.Xrows is not None else x_all
+    if x_rows is None:
+        raise ValueError("trace_error needs x_all for fixed-row states")
+    mask = rankone.active_mask(st.L.shape[0], st.m)
+    B = state.Knm @ jnp.where(mask[None, :], st.U, 0.0)
+    diag_tilde = jnp.sum(B**2 * _pinv_lam(st.L, mask)[None, :], axis=1)
+    diag_k = kf.kernel_diag(x_rows.astype(st.L.dtype), spec=spec)
+    return jnp.sum(diag_k - diag_tilde)
+
+
+class SufficientSubsetRule:
+    """Online stopping rule for landmark admission (paper §4 made online).
+
+    Feed the error trend (``trace_error`` after each admitted landmark);
+    the subset is declared sufficient once the *relative* improvement has
+    stayed below ``rel_tol`` for ``patience`` consecutive admissions —
+    the plateau of the paper's Fig. 2 curves, detected without a
+    reference spectrum.
+    """
+
+    def __init__(self, rel_tol: float = 1e-2, patience: int = 3):
+        self.rel_tol = float(rel_tol)
+        self.patience = int(patience)
+        self.history: list[float] = []
+        self._flat = 0
+
+    @property
+    def sufficient(self) -> bool:
+        return self._flat >= self.patience
+
+    def observe(self, err) -> bool:
+        """Record one error value; returns True once sufficient."""
+        err = float(err)
+        if self.history:
+            prev = self.history[-1]
+            rel = (prev - err) / max(abs(prev), 1e-30)
+            self._flat = self._flat + 1 if rel < self.rel_tol else 0
+        self.history.append(err)
+        return self.sufficient
+
+
+def consider_landmark(engine, state: NystromState, x: Array, *,
+                      x_all: Array | None = None,
+                      budget: int | None = None,
+                      admit_tol: float = 1e-3,
+                      reg: float = 1e-6,
+                      min_rows: int = 0) -> tuple[NystromState, str]:
+    """Leverage-policy admission of one candidate landmark.
+
+    Decision ladder (returns the new state and what happened):
+
+    * residual δ(x) ≤ admit_tol · k(x,x): already spanned — "rejected".
+    * below ``budget`` landmarks: "admitted" (bucketed add).
+    * at budget: find the lowest-leverage landmark; if its leverage is
+      below the candidate's normalized residual, swap — "replaced";
+      otherwise "rejected".
+
+    ``engine`` is an ``engine.Engine`` (adjusted=False) so every path
+    runs at bucket capacity; drive it from a ``SufficientSubsetRule`` to
+    stop offering candidates altogether.
+    """
+    import numpy as np
+
+    M = state.kpca.L.shape[0]
+    m = int(state.kpca.m)
+    budget = budget if budget is not None else M - 1
+    delta = float(admission_residual(state, jnp.asarray(x), engine.spec))
+    k_xx = float(kf.kernel_diag(jnp.asarray(x)[None].astype(state.kpca.L.dtype),
+                                spec=engine.spec)[0])
+    gain = delta / max(k_xx, 1e-30)
+    if gain <= admit_tol:
+        return state, "rejected"
+    if m < budget:
+        return engine.add_landmark(state, x_all, x, min_rows=min_rows), \
+            "admitted"
+    lev = np.asarray(leverage_scores(state, reg=reg)[:m])
+    victim = int(np.argmin(lev))
+    if float(lev[victim]) < gain:
+        return engine.replace_landmark(state, x_all, victim, x,
+                                       min_rows=min_rows), "replaced"
+    return state, "rejected"
+
+
 def _pinv_lam(L: Array, mask: Array) -> Array:
     """Pseudo-inverse of the active spectrum: exact/near-zero eigenvalues
     (a compacted rank-truncated state carries rank-deficient active pairs)

@@ -1,0 +1,112 @@
+"""Sliding-window incremental KPCA: bounded memory, unbounded streams.
+
+``KPCAStream(window=W)`` tracks the exact mean-adjusted (or raw) kernel
+eigensystem of the **trailing W points** of an endless stream: once the
+window is full, every ingested point first evicts the oldest one via the
+decremental pipeline (``core/downdate.py``) and then folds in as usual —
+so per-step cost stays at the window's bucket forever and memory never
+grows, which is what the ROADMAP's unbounded-stream serving scenario
+requires (append-only streams saturate at capacity instead).
+
+The FIFO ordering is carried **in the state** as an arrival-index ring
+(``ages``/``clock``), not as host-side stream bookkeeping, so a windowed
+stream checkpointed mid-window restores and continues identically to an
+uninterrupted run.  The eviction permutation (``downdate.boundary_perm``)
+preserves the survivors' arrival order, so physically the oldest active
+point is always row argmin(ages) — row 0 for a pure FIFO stream — but
+the ring stays authoritative across replace-arbitrary-row calls and
+checkpoint round-trips.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import downdate as dd
+from repro.core import engine as eng
+from repro.core import kernels_fn as kf
+
+Array = jax.Array
+
+def age_sentinel(dtype) -> int:
+    """Inactive-slot marker: far above any real arrival index.  Derived
+    from the REALIZED dtype — without x64, int64 requests silently become
+    int32 and a fixed 2⁶² constant would overflow into a negative value
+    that argmin then prefers over live rows."""
+    return int(jnp.iinfo(dtype).max // 2)
+
+
+class WindowState(NamedTuple):
+    """A ``KPCAState`` plus the FIFO arrival ring.
+
+    kpca:  the fixed-capacity eigensystem state (see ``inkpca.KPCAState``)
+    ages:  (M,) int64 arrival index of the point in each physical row;
+           ``AGE_SENTINEL`` marks inactive rows
+    clock: ()  int64 arrival index of the next ingested point
+    """
+
+    kpca: object
+    ages: Array
+    clock: Array
+
+
+def init_window(x0: Array, capacity: int, spec: kf.KernelSpec, *,
+                adjusted: bool = True, dtype=jnp.float32) -> WindowState:
+    from repro.core import inkpca
+
+    kpca = inkpca.init_state(x0, capacity, spec, adjusted=adjusted,
+                             dtype=dtype)
+    m0 = x0.shape[0]
+    ages = jnp.zeros((capacity,), jnp.int64)     # realized: int32 w/o x64
+    ages = jnp.full((capacity,), age_sentinel(ages.dtype), ages.dtype)
+    ages = ages.at[:m0].set(jnp.arange(m0, dtype=ages.dtype))
+    return WindowState(kpca=kpca, ages=ages,
+                       clock=jnp.asarray(m0, ages.dtype))
+
+
+def oldest_row(wstate: WindowState) -> int:
+    """Physical row of the oldest active point (host-side read)."""
+    return int(jnp.argmin(wstate.ages))
+
+
+def evict(engine: eng.Engine, wstate: WindowState, row: int, *,
+          min_rows: int = 0) -> WindowState:
+    """Remove the point in physical ``row`` and update the ages ring with
+    the same survivor-order-preserving permutation the downdate applied."""
+    kpca = engine.downdate(wstate.kpca, row, min_rows=min_rows)
+    order = dd.boundary_perm(jnp.asarray(row, jnp.int32), wstate.kpca.m,
+                             wstate.ages.shape[0])
+    ages = wstate.ages[order].at[wstate.kpca.m - 1].set(
+        age_sentinel(wstate.ages.dtype))
+    return wstate._replace(kpca=kpca, ages=ages)
+
+
+def rebase_ages(wstate: WindowState) -> WindowState:
+    """Shift all active arrival stamps (and the clock) down so the clock
+    restarts at ``capacity``.  Active ages live in [clock − m, clock), so
+    subtracting clock − capacity preserves their order and keeps them
+    non-negative; sentinel slots stay sentinels.  Called when the clock
+    nears the sentinel — without x64 the ring is int32 and a forever
+    stream would otherwise collide with the sentinel after ~10⁹ points
+    (argmin would then pick an inactive slot and eviction would raise).
+    """
+    sent = age_sentinel(wstate.ages.dtype)
+    base = wstate.clock - wstate.ages.shape[0]
+    ages = jnp.where(wstate.ages == sent, sent, wstate.ages - base)
+    return wstate._replace(ages=ages, clock=wstate.clock - base)
+
+
+def ingest(engine: eng.Engine, wstate: WindowState, x_new: Array, *,
+           window: int, min_rows: int = 0) -> WindowState:
+    """One sliding-window step: evict-oldest if the window is full, then
+    fold the new point in and stamp its arrival index."""
+    if int(wstate.clock) >= age_sentinel(wstate.ages.dtype) - 1:
+        wstate = rebase_ages(wstate)
+    if int(wstate.kpca.m) >= window:
+        wstate = evict(engine, wstate, oldest_row(wstate),
+                       min_rows=min_rows)
+    kpca = engine.update(wstate.kpca, x_new, min_rows=min_rows)
+    ages = wstate.ages.at[wstate.kpca.m].set(wstate.clock)
+    return WindowState(kpca=kpca, ages=ages, clock=wstate.clock + 1)

@@ -27,6 +27,23 @@ Two serving workloads share this entry point:
           --capacity 512 --points 200 --dispatch bucketed
       PYTHONPATH=src python -m repro.launch.serve --mode kpca \
           --capacity 512 --points 200 --tenants 8 --dispatch bucketed
+
+  ``--window W`` turns every stream (single and multi-tenant) into a
+  sliding window over the trailing W points: ingest past a full window
+  first evicts the oldest point through the decremental pipeline
+  (``core/downdate.py``), so the service runs forever in bounded memory
+  instead of exhausting capacity.
+
+* ``--mode nystrom``: streaming landmark-lifecycle service.  Points
+  arrive one at a time as observed rows; ``--landmark-policy append``
+  admits every point as a landmark until the budget fills (the paper's
+  §4 loop), while ``--landmark-policy leverage`` admits on projection
+  residual, replaces the lowest-leverage landmark when at budget, and
+  stops admitting once the incremental ``trace_error`` trend plateaus
+  (the sufficient-subset rule).
+
+      PYTHONPATH=src python -m repro.launch.serve --mode nystrom \
+          --capacity 128 --points 300 --landmark-policy leverage
 """
 from __future__ import annotations
 
@@ -47,7 +64,9 @@ from repro.models import lm
 def _make_plan(args):
     from repro.core import engine as eng
 
-    return eng.UpdatePlan(matmul=args.matmul, dispatch=args.dispatch)
+    return eng.UpdatePlan(matmul=args.matmul, dispatch=args.dispatch,
+                          window=args.window,
+                          landmark_policy=args.landmark_policy)
 
 
 def kpca_main(args) -> dict:
@@ -68,7 +87,8 @@ def kpca_main(args) -> dict:
     for i in range(args.points):
         x = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
         t0 = time.perf_counter()
-        st = stream.update(x)
+        stream.update(x)
+        st = stream.kpca_state
         jax.block_until_ready(st.L)
         lat_ms.append((time.perf_counter() - t0) * 1e3)
         if (i + 1) % args.transform_every == 0:
@@ -79,21 +99,76 @@ def kpca_main(args) -> dict:
     t_total = time.time() - t_total
 
     lat = np.asarray(lat_ms) if lat_ms else np.zeros((1,))
+    st = stream.kpca_state
     # First step per bucket pays compilation; report the steady-state view.
     result = {
         "mode": "kpca", "dispatch": args.dispatch, "capacity": args.capacity,
-        "points": args.points, "m_final": int(stream.state.m),
+        "window": args.window,
+        "points": args.points, "m_final": int(st.m),
         "update_ms_p50": float(np.percentile(lat, 50)),
         "update_ms_p90": float(np.percentile(lat, 90)),
         "update_ms_max": float(lat.max()),
         "transforms_served": n_served,
         "total_s": t_total,
-        "finite": bool(jnp.isfinite(stream.state.L).all()),
+        "finite": bool(jnp.isfinite(st.L).all()),
     }
     print(f"[serve/kpca] {args.dispatch}: {args.points} updates to "
-          f"m={result['m_final']} (capacity {args.capacity}), "
+          f"m={result['m_final']} (capacity {args.capacity}, "
+          f"window {args.window}), "
           f"p50 {result['update_ms_p50']:.1f} ms, "
           f"p90 {result['update_ms_p90']:.1f} ms  {result}")
+    return result
+
+
+def nystrom_main(args) -> dict:
+    """Streaming Nyström landmark-lifecycle service (grow_rows mode)."""
+    import numpy as np
+
+    from repro.core import engine as eng, kernels_fn as kf, nystrom
+
+    rng = np.random.default_rng(args.seed)
+    d = args.dim
+    spec = kf.KernelSpec(name="rbf", sigma=float(d))
+    engine = eng.Engine(spec, _make_plan(args), adjusted=False)
+    x0 = jnp.asarray(rng.normal(size=(4, d)), jnp.float32)
+    state = nystrom.init_nystrom(None, x0, args.capacity, spec,
+                                 grow_rows=True)
+    rule = nystrom.SufficientSubsetRule(rel_tol=args.stop_rel_tol,
+                                        patience=args.stop_patience)
+    budget = args.landmark_budget or args.capacity - 1
+    counts = {"admitted": 0, "rejected": 0, "replaced": 0}
+    stopped_at = None
+    t_total = time.time()
+    leverage = engine.plan.landmark_policy == "leverage"
+    for i in range(args.points):
+        x = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+        state = nystrom.observe_rows(state, x, spec)
+        if leverage and rule.sufficient:
+            counts["rejected"] += 1
+            continue
+        state, action = engine.offer_landmark(state, x, budget=budget)
+        counts[action] += 1
+        if leverage and action in ("admitted", "replaced"):
+            if rule.observe(nystrom.trace_error(state, spec)):
+                stopped_at = i
+    t_total = time.time() - t_total
+
+    err = float(nystrom.trace_error(state, spec))
+    result = {
+        "mode": "nystrom", "policy": args.landmark_policy,
+        "capacity": args.capacity, "budget": budget,
+        "points": args.points, "m_final": int(state.kpca.m),
+        "rows": int(state.Knm.shape[0]),
+        "trace_error": err, "stopped_at": stopped_at,
+        "total_s": t_total,
+        "finite": bool(jnp.isfinite(state.kpca.L).all()
+                       and np.isfinite(err)),
+        **counts,
+    }
+    print(f"[serve/nystrom] {args.landmark_policy}: {args.points} points, "
+          f"{counts['admitted']} admitted / {counts['replaced']} replaced / "
+          f"{counts['rejected']} rejected -> m={result['m_final']}, "
+          f"trace err {err:.4f}, stopped_at={stopped_at}  {result}")
     return result
 
 
@@ -109,7 +184,7 @@ def kpca_multitenant_main(args) -> dict:
     x0 = jnp.asarray(rng.normal(size=(B, 4, d)), jnp.float32)
     batch = eng.StreamBatch(x0, args.capacity, spec, plan=_make_plan(args),
                             adjusted=True, dtype=jnp.float32,
-                            cohorts=args.cohorts)
+                            cohorts=args.cohorts, window=args.window)
 
     lat_ms: list[float] = []
     n_served = 0
@@ -135,6 +210,7 @@ def kpca_multitenant_main(args) -> dict:
     result = {
         "mode": "kpca-multitenant", "tenants": B,
         "dispatch": args.dispatch, "cohorts": args.cohorts,
+        "window": args.window,
         "capacity": args.capacity,
         "points": args.points, "m_final": m_final,
         "step_ms_p50": float(np.percentile(lat, 50)),
@@ -154,7 +230,8 @@ def kpca_multitenant_main(args) -> dict:
 
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=("lm", "kpca"), default="lm")
+    ap.add_argument("--mode", choices=("lm", "kpca", "nystrom"),
+                    default="lm")
     ap.add_argument("--arch", default="qwen3_32b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
@@ -173,12 +250,34 @@ def main(argv=None) -> dict:
     ap.add_argument("--tenants", type=int, default=1,
                     help="number of independent KPCA streams folded per "
                          "vmapped device step (kpca mode)")
-    ap.add_argument("--cohorts", choices=("max", "bucket"), default="max",
+    ap.add_argument("--cohorts", choices=("max", "bucket", "bucket-padded"),
+                    default="max",
                     help="multi-tenant cohort geometry: 'max' runs the "
                          "whole cohort at the largest tenant's bucket; "
-                         "'bucket' groups tenants by their own bucket")
+                         "'bucket' groups tenants by their own bucket; "
+                         "'bucket-padded' additionally pads group sizes "
+                         "to powers of two (bounded recompiles under "
+                         "tenant churn)")
+    ap.add_argument("--window", type=int, default=None,
+                    help="sliding-window size W: evict the oldest point "
+                         "before ingesting past a full window (kpca mode, "
+                         "single and multi-tenant)")
+    ap.add_argument("--landmark-policy", choices=("append", "leverage"),
+                    default="append",
+                    help="nystrom mode admission policy (see module "
+                         "docstring)")
+    ap.add_argument("--landmark-budget", type=int, default=None,
+                    help="max landmarks (default capacity - 1)")
+    ap.add_argument("--stop-rel-tol", type=float, default=1e-2,
+                    help="sufficient-subset rule: relative improvement "
+                         "below this counts as flat")
+    ap.add_argument("--stop-patience", type=int, default=3,
+                    help="sufficient-subset rule: consecutive flat "
+                         "admissions before stopping")
     args = ap.parse_args(argv)
 
+    if args.mode == "nystrom":
+        return nystrom_main(args)
     if args.mode == "kpca":
         if args.tenants > 1:
             return kpca_multitenant_main(args)

@@ -7,6 +7,13 @@ eigenspectrum over training: effective rank collapse, feature drift and
 saturation show up as spectrum shape changes *without* ever forming an
 n×n gram matrix over the run — memory stays O(capacity²).
 
+The monitor rides the **sliding-window** stream (``core/window.py``): once
+the window is full every new activation evicts the oldest one, so the
+tracked spectrum is always that of the trailing ``window`` examples and
+the history keeps evolving for the entire run.  (The pre-window monitor
+silently stopped ingesting once the capacity filled — a run's later
+drift was invisible.)
+
 This is exactly the streaming use case the paper motivates (§1, §3): data
 examples arrive sequentially and a solution is desired at each step.
 """
@@ -17,15 +24,20 @@ from dataclasses import dataclass, field
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import inkpca, kernels_fn as kf, rankone
+from repro.core import inkpca, kernels_fn as kf
 
 
 @dataclass
 class SpectralMonitor:
+    """``window`` defaults to ``capacity``: the monitor always tracks the
+    trailing ``capacity`` examples instead of freezing at the first
+    ``capacity`` ingested."""
+
     capacity: int = 128
     kernel: str = "rbf"
     adjusted: bool = True
     dtype: object = jnp.float32
+    window: int | None = None
     _stream: inkpca.KPCAStream | None = field(default=None, repr=False)
     history: list = field(default_factory=list)
 
@@ -33,24 +45,26 @@ class SpectralMonitor:
         """activations: (n, d) block (e.g. pooled per-example features)."""
         x = jnp.asarray(activations, self.dtype)
         if self._stream is None:
-            seed = x[: max(4, min(16, x.shape[0] // 2))]
+            W = self.window or self.capacity
+            seed = x[: max(2, min(4, W, x.shape[0]),
+                           min(16, W, x.shape[0] // 2))]
             sigma = float(kf.median_heuristic(x))
             spec = kf.KernelSpec(name=self.kernel, sigma=max(sigma, 1e-6))
             self._stream = inkpca.KPCAStream(
                 seed, capacity=self.capacity, spec=spec,
-                adjusted=self.adjusted, dtype=self.dtype)
+                adjusted=self.adjusted, dtype=self.dtype,
+                window=self.window or self.capacity)
             rest = x[seed.shape[0]:]
         else:
             rest = x
-        room = self.capacity - int(self._stream.state.m)
-        if room > 0 and rest.shape[0] > 0:
-            self._stream.update_block(rest[:room])
+        if rest.shape[0] > 0:
+            self._stream.update_block(rest)
         stats = self.stats()
         self.history.append(stats)
         return stats
 
     def stats(self) -> dict:
-        st = self._stream.state
+        st = self._stream.kpca_state
         m = int(st.m)
         lam = np.sort(np.asarray(st.L[:m]))[::-1]
         lam = np.maximum(lam, 0.0)
@@ -59,6 +73,7 @@ class SpectralMonitor:
         entropy = float(-np.sum(p * np.log(p + 1e-30)))
         return {
             "m": m,
+            "seen": int(self._stream.state.clock),
             "top_eig": float(lam[0]) if m else 0.0,
             "trace": float(total),
             "effective_rank": float(np.exp(entropy)),
@@ -66,5 +81,5 @@ class SpectralMonitor:
         }
 
     def eigenvalues(self) -> np.ndarray:
-        st = self._stream.state
+        st = self._stream.kpca_state
         return np.sort(np.asarray(st.L[: int(st.m)]))[::-1]

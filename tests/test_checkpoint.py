@@ -158,6 +158,86 @@ def test_nystrom_state_roundtrip(tmp_path):
             np.asarray(nystrom.reconstruct_tilde(state)), atol=0)
 
 
+def test_windowed_kpca_midwindow_resume_equivalence(tmp_path):
+    """Save a SLIDING-WINDOW stream mid-window (evictions already past),
+    restore into a fresh process-alike stream, continue: the result must
+    equal the uninterrupted windowed run exactly.  This is what the FIFO
+    ring being IN the state (window.WindowState.ages/clock) buys — the
+    eviction order is checkpoint state, not host bookkeeping."""
+    from repro.core import inkpca, kernels_fn as kf
+
+    rng = np.random.default_rng(21)
+    X = rng.normal(size=(30, 4))
+    spec = kf.KernelSpec(name="rbf", sigma=5.0)
+
+    def make_stream():
+        return inkpca.KPCAStream(jnp.asarray(X[:4]), 16, spec,
+                                 adjusted=True, dtype=jnp.float64,
+                                 dispatch="bucketed", min_bucket=8,
+                                 window=8)
+
+    straight = make_stream()
+    for i in range(4, 30):
+        straight.update(jnp.asarray(X[i]))
+
+    part = make_stream()
+    for i in range(4, 18):                      # window full, 6 evictions
+        part.update(jnp.asarray(X[i]))
+    save_checkpoint(str(tmp_path), 18, part.state)
+
+    resumed = make_stream()                     # "crash": fresh stream
+    resumed.state = load_checkpoint(str(tmp_path), 18,
+                                    jax.eval_shape(lambda: part.state))
+    assert int(resumed.state.clock) == 18
+    for i in range(18, 30):
+        resumed.update(jnp.asarray(X[i]))
+
+    for a, b in zip(jax.tree.leaves(straight.state),
+                    jax.tree.leaves(resumed.state)):
+        np.testing.assert_allclose(np.asarray(a, np.float64),
+                                   np.asarray(b, np.float64), atol=1e-12)
+
+
+def test_replaced_landmark_nystrom_resume_equivalence(tmp_path):
+    """Save a NystromState right after a replace_landmark, restore,
+    continue the lifecycle (observe + add + replace): equals the
+    uninterrupted run bit-for-bit at save and to rounding afterwards."""
+    from repro.core import engine as eng, kernels_fn as kf, nystrom
+
+    rng = np.random.default_rng(33)
+    X = rng.normal(size=(26, 3))
+    spec = kf.KernelSpec(name="rbf", sigma=4.0)
+    engine = eng.Engine(spec, eng.UpdatePlan(dispatch="bucketed",
+                                             min_bucket=8), adjusted=False)
+
+    def grow():
+        st = nystrom.init_nystrom(None, jnp.asarray(X[:4]), capacity=16,
+                                  spec=spec, dtype=jnp.float64,
+                                  grow_rows=True)
+        st = nystrom.observe_rows(st, jnp.asarray(X[4:20]), spec)
+        for i in range(4, 10):
+            st = engine.add_landmark(st, None, jnp.asarray(X[i]))
+        return engine.replace_landmark(st, None, 2, jnp.asarray(X[15]))
+
+    def continue_lifecycle(st):
+        st = nystrom.observe_rows(st, jnp.asarray(X[20:]), spec)
+        st = engine.add_landmark(st, None, jnp.asarray(X[21]))
+        return engine.replace_landmark(st, None, 0, jnp.asarray(X[22]))
+
+    state = grow()
+    save_checkpoint(str(tmp_path), 1, state)
+    restored = load_checkpoint(str(tmp_path), 1,
+                               jax.eval_shape(lambda: state))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    straight = continue_lifecycle(state)
+    resumed = continue_lifecycle(restored)
+    np.testing.assert_allclose(
+        np.asarray(nystrom.reconstruct_tilde(resumed)),
+        np.asarray(nystrom.reconstruct_tilde(straight)), atol=0)
+
+
 def test_bucketed_kpca_midstream_resume_equivalence(tmp_path):
     """Save a bucketed stream mid-bucket (m inside M_b), restore, continue:
     the result must match the uninterrupted bucketed run exactly, bucket

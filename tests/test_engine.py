@@ -316,6 +316,63 @@ def test_streambatch_bucket_cohorts_capacity_exhaustion_raises():
         batch.update(jnp.asarray(rng.normal(size=(2, 3))))
 
 
+def test_streambatch_bucket_padded_identical_states():
+    """ISSUE satellite: padded and unpadded cohorts produce IDENTICAL
+    states — pad lanes are masked out of every step and never scattered
+    back (bitwise equality, masked updates + scans + regroup crossings)."""
+    rng = np.random.default_rng(43)
+    B, d = 6, 4
+    seeds = jnp.asarray(rng.normal(size=(B, 3, d)))
+    plan = eng.UpdatePlan(dispatch="bucketed", min_bucket=8)
+    kw = dict(plan=plan, adjusted=True, dtype=jnp.float64)
+    a = eng.StreamBatch(seeds, 64, SPEC, cohorts="bucket", **kw)
+    b = eng.StreamBatch(seeds, 64, SPEC, cohorts="bucket-padded", **kw)
+    padded_seen = False
+    for step in range(18):
+        xs = jnp.asarray(rng.normal(size=(B, d)))
+        act = np.array([(step % (i + 1)) == 0 for i in range(B)])
+        a.update(xs, active=jnp.asarray(act))
+        b.update(xs, active=jnp.asarray(act))
+        padded_seen |= any(len(g["idx_pad"]) > g["n_real"]
+                           for g in b._groups)
+    xs_blk = jnp.asarray(rng.normal(size=(6, B, d)))
+    a.update_block(xs_blk)
+    b.update_block(xs_blk)
+    # padding really happened at some point, and sizes stay powers of two
+    assert padded_seen
+    for g in b._groups:
+        size = len(g["idx_pad"])
+        assert size & (size - 1) == 0
+    for la, lb in zip(jax.tree.leaves(a.states), jax.tree.leaves(b.states)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    # transform agrees too (pad lanes sliced off)
+    q = jnp.asarray(rng.normal(size=(B, 4, d)))
+    np.testing.assert_allclose(np.asarray(b.transform(q, n_components=3)),
+                               np.asarray(a.transform(q, n_components=3)),
+                               atol=1e-12)
+
+
+def test_streambatch_bucket_padded_bounded_compile_keys():
+    """Padded group sizes take at most log2(B)+1 distinct values per
+    bucket, whatever churn does to group cuts (the recompile bound)."""
+    sizes = set()
+    rng = np.random.default_rng(47)
+    B = 7
+    seeds = jnp.asarray(rng.normal(size=(B, 3, 3)))
+    plan = eng.UpdatePlan(dispatch="bucketed", min_bucket=8)
+    batch = eng.StreamBatch(seeds, 32, SPEC, plan=plan, adjusted=True,
+                            dtype=jnp.float64, cohorts="bucket-padded")
+    for step in range(16):
+        xs = jnp.asarray(rng.normal(size=(B, 3)))
+        act = np.array([(step % (i + 2)) != 0 for i in range(B)])
+        batch.update(xs, active=jnp.asarray(act))
+        for g in batch._groups:
+            sizes.add((len(g["idx_pad"]), g["Mb"]))
+    pad_sizes = {s for s, _ in sizes}
+    assert all(s & (s - 1) == 0 for s in pad_sizes)
+    assert len(pad_sizes) <= int(np.ceil(np.log2(B))) + 1
+
+
 # ------------------------------------- Nyström truncate/compact guard ---
 def test_nystrom_truncate_compact_preserves_observed_rows():
     """Engine.truncate(compact=True) on a grow_rows Nyström state must keep

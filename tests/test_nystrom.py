@@ -1,6 +1,8 @@
 """Incremental Nyström (paper §4): exactness vs batch, error behaviour."""
 import numpy as np
+import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.core import inkpca, kernels_fn as kf, nystrom
 
@@ -119,6 +121,216 @@ def test_grow_rows_reconstruction_matches_fixed_rows():
     np.testing.assert_allclose(np.asarray(nystrom.reconstruct_tilde(grown)),
                                np.asarray(nystrom.reconstruct_tilde(fixed)),
                                atol=1e-9)
+
+
+# --------------------------------------------------- landmark lifecycle ---
+def test_remove_landmark_matches_batch():
+    """remove_landmark(j) == batch Nyström with landmark j dropped, at
+    every j (interior, first, boundary)."""
+    X, spec, K, state = _setup(n=30)
+    for m in range(5, 12):
+        state = nystrom.add_landmark(state, jnp.asarray(X),
+                                     jnp.asarray(X[m]), spec)
+    for j in (0, 3, 11):
+        st2 = nystrom.remove_landmark(state, jnp.int32(j), spec)
+        keep = [i for i in range(12) if i != j]
+        ref = K[:, keep] @ np.linalg.solve(K[np.ix_(keep, keep)],
+                                           K[:, keep].T)
+        np.testing.assert_allclose(np.asarray(nystrom.reconstruct_tilde(st2)),
+                                   ref, atol=1e-9)
+        assert int(st2.kpca.m) == 11
+        # evicted landmark's column zeroed, survivors' order preserved
+        assert float(jnp.abs(st2.Knm[:, 11:]).max()) == 0.0
+        np.testing.assert_allclose(np.asarray(st2.Knm[:, :11]), K[:, keep],
+                                   atol=1e-12)
+
+
+def test_replace_landmark_matches_batch():
+    """replace_landmark == remove + add == batch Nyström on the swapped
+    landmark set, and round-trips add∘remove of the same point."""
+    X, spec, K, state = _setup(n=30)
+    for m in range(5, 12):
+        state = nystrom.add_landmark(state, jnp.asarray(X),
+                                     jnp.asarray(X[m]), spec)
+    st2 = nystrom.replace_landmark(state, jnp.asarray(X), jnp.int32(2),
+                                   jnp.asarray(X[20]), spec)
+    keep = [i for i in range(12) if i != 2] + [20]
+    ref = K[:, keep] @ np.linalg.solve(K[np.ix_(keep, keep)], K[:, keep].T)
+    np.testing.assert_allclose(np.asarray(nystrom.reconstruct_tilde(st2)),
+                               ref, atol=1e-8)
+    # replacing a landmark with ITSELF is the identity (downdate∘update)
+    st3 = nystrom.replace_landmark(state, jnp.asarray(X), jnp.int32(11),
+                                   jnp.asarray(X[11]), spec)
+    np.testing.assert_allclose(np.asarray(nystrom.reconstruct_tilde(st3)),
+                               np.asarray(nystrom.reconstruct_tilde(state)),
+                               atol=1e-9)
+
+
+def test_engine_remove_landmark_bucketed_matches_fixed():
+    """Bucketed Engine.remove/replace_landmark == the fixed-dispatch
+    module functions (slice/scatter soundness for the decremental path)."""
+    from repro.core import engine as eng
+
+    X, spec, K, _ = _setup(n=30)
+    buk = eng.Engine(spec, eng.UpdatePlan(dispatch="bucketed", min_bucket=8),
+                     adjusted=False)
+    state = nystrom.init_nystrom(jnp.asarray(X), jnp.asarray(X[:5]),
+                                 capacity=24, spec=spec, dtype=jnp.float64)
+    for m in range(5, 12):
+        state = buk.add_landmark(state, jnp.asarray(X), jnp.asarray(X[m]))
+    a = buk.remove_landmark(state, 3)
+    b = nystrom.remove_landmark(state, jnp.int32(3), spec)
+    np.testing.assert_allclose(np.asarray(nystrom.reconstruct_tilde(a)),
+                               np.asarray(nystrom.reconstruct_tilde(b)),
+                               atol=1e-10)
+    c = buk.replace_landmark(state, jnp.asarray(X), 3, jnp.asarray(X[25]))
+    d = nystrom.replace_landmark(state, jnp.asarray(X), jnp.int32(3),
+                                 jnp.asarray(X[25]), spec)
+    np.testing.assert_allclose(np.asarray(nystrom.reconstruct_tilde(c)),
+                               np.asarray(nystrom.reconstruct_tilde(d)),
+                               atol=1e-10)
+
+
+def test_remove_landmark_grow_rows_keeps_observed_stream():
+    """In grow_rows mode an ex-landmark stays an observed ROW: only its
+    column dies, and the reconstruction matches batch on the survivors."""
+    X = RNG.normal(size=(20, 3))
+    spec = kf.KernelSpec(name="rbf", sigma=4.0)
+    state = nystrom.init_nystrom(None, jnp.asarray(X[:4]), capacity=12,
+                                 spec=spec, dtype=jnp.float64,
+                                 grow_rows=True)
+    state = nystrom.observe_rows(state, jnp.asarray(X[4:]), spec)
+    for i in range(4, 9):
+        state = nystrom.add_landmark(state, None, jnp.asarray(X[i]), spec)
+    n_rows = state.Knm.shape[0]
+    st2 = nystrom.remove_landmark(state, jnp.int32(1), spec)
+    assert st2.Knm.shape[0] == n_rows
+    assert st2.Xrows.shape == state.Xrows.shape
+    K = np.asarray(kf.gram_block(jnp.asarray(X), jnp.asarray(X), spec=spec))
+    keep = [0, 2, 3, 4, 5, 6, 7, 8]
+    ref = K[:, keep] @ np.linalg.solve(K[np.ix_(keep, keep)], K[:, keep].T)
+    np.testing.assert_allclose(np.asarray(nystrom.reconstruct_tilde(st2)),
+                               ref, atol=1e-9)
+
+
+def test_leverage_and_residual_scores():
+    X, spec, K, state = _setup(n=30)
+    for m in range(5, 12):
+        state = nystrom.add_landmark(state, jnp.asarray(X),
+                                     jnp.asarray(X[m]), spec)
+    lev = np.asarray(nystrom.leverage_scores(state, reg=1e-2))
+    m = int(state.kpca.m)
+    assert (lev[:m] > 0).all() and (lev[:m] <= 1.0 + 1e-9).all()
+    assert np.abs(lev[m:]).max() == 0.0
+    # a landmark is spanned: residual ~ 0; a held-out point is not
+    assert float(nystrom.admission_residual(state, jnp.asarray(X[3]),
+                                            spec)) < 1e-10
+    assert float(nystrom.admission_residual(state, jnp.asarray(X[25]),
+                                            spec)) > 1e-4
+
+
+def test_trace_error_matches_offline_trace_norm():
+    """trace_error (O(n·m), no n×n matrix) must equal the trace norm of
+    K − K̃ (K − K̃ is PSD for Nyström)."""
+    X, spec, K, state = _setup(n=40)
+    for m in range(5, 12):
+        state = nystrom.add_landmark(state, jnp.asarray(X),
+                                     jnp.asarray(X[m]), spec)
+    te = float(nystrom.trace_error(state, spec, x_all=jnp.asarray(X)))
+    off = nystrom.approximation_error(
+        jnp.asarray(K), jnp.asarray(nystrom.reconstruct_tilde(state))).trace
+    np.testing.assert_allclose(te, off, rtol=1e-8)
+
+
+def test_sufficient_subset_rule():
+    rule = nystrom.SufficientSubsetRule(rel_tol=0.05, patience=2)
+    assert not rule.observe(10.0)
+    assert not rule.observe(5.0)        # big improvement resets
+    assert not rule.observe(4.9)        # flat 1
+    assert rule.observe(4.89)           # flat 2 -> sufficient
+    assert rule.sufficient
+    # improvement after sufficiency would reset the counter
+    rule2 = nystrom.SufficientSubsetRule(rel_tol=0.05, patience=2)
+    rule2.observe(10.0); rule2.observe(9.99)
+    assert not rule2.observe(5.0)
+
+
+def test_consider_landmark_policy_paths():
+    """The leverage admission policy takes all three actions and the
+    error never regresses through a replace."""
+    from repro.core import engine as eng
+
+    X, spec, K, _ = _setup(n=40)
+    engine = eng.Engine(spec, eng.UpdatePlan(dispatch="bucketed",
+                                             min_bucket=8), adjusted=False)
+    state = nystrom.init_nystrom(jnp.asarray(X), jnp.asarray(X[:5]),
+                                 capacity=24, spec=spec, dtype=jnp.float64)
+    actions = []
+    for i in range(5, 40):
+        state, act = nystrom.consider_landmark(
+            engine, state, jnp.asarray(X[i]), x_all=jnp.asarray(X),
+            budget=10)
+        actions.append(act)
+    assert "admitted" in actions and "rejected" in actions
+    assert int(state.kpca.m) <= 10
+    # a duplicate of an existing landmark is always rejected
+    state2, act = nystrom.consider_landmark(engine, state,
+                                            jnp.asarray(X[0]),
+                                            x_all=jnp.asarray(X), budget=10)
+    assert act == "rejected"
+    assert state2 is state
+
+
+def test_offer_landmark_routes_on_plan_policy():
+    """UpdatePlan.landmark_policy drives Engine.offer_landmark: append
+    admits anything below budget (even a duplicate), leverage rejects
+    spanned candidates and replaces at budget."""
+    from repro.core import engine as eng
+
+    X, spec, K, _ = _setup(n=30)
+    state0 = nystrom.init_nystrom(jnp.asarray(X), jnp.asarray(X[:5]),
+                                  capacity=24, spec=spec,
+                                  dtype=jnp.float64)
+    app = eng.Engine(spec, eng.UpdatePlan(landmark_policy="append"),
+                     adjusted=False)
+    lev = eng.Engine(spec, eng.UpdatePlan(landmark_policy="leverage"),
+                     adjusted=False)
+    dup = jnp.asarray(X[0])                   # already a landmark
+    st, act = app.offer_landmark(state0, dup, x_all=jnp.asarray(X))
+    assert act == "admitted" and int(st.kpca.m) == 6
+    st, act = lev.offer_landmark(state0, dup, x_all=jnp.asarray(X))
+    assert act == "rejected" and int(st.kpca.m) == 5
+    # append rejects only at budget
+    st, act = app.offer_landmark(state0, dup, x_all=jnp.asarray(X),
+                                 budget=5)
+    assert act == "rejected"
+    with pytest.raises(ValueError):
+        eng.Engine(spec, eng.UpdatePlan(landmark_policy="bogus"),
+                   adjusted=False).offer_landmark(state0, dup)
+
+
+def test_replace_landmark_donate_matches_copy_at_full_bucket():
+    """donate=True must produce the same state as the copying spelling,
+    including for a fixed-dispatch plan where Mb == M (the donation
+    previously silently degraded there)."""
+    from repro.core import engine as eng
+
+    X, spec, K, _ = _setup(n=30)
+    engine = eng.Engine(spec, eng.UpdatePlan(), adjusted=False)  # fixed
+    state = nystrom.init_nystrom(jnp.asarray(X), jnp.asarray(X[:5]),
+                                 capacity=24, spec=spec,
+                                 dtype=jnp.float64)
+    for m in range(5, 10):
+        state = engine.add_landmark(state, jnp.asarray(X),
+                                    jnp.asarray(X[m]))
+    x_new = jnp.asarray(X[20])
+    ref = engine.replace_landmark(state, jnp.asarray(X), 2, x_new)
+    # donation consumes its input: hand it a throwaway copy
+    spare = jax.tree.map(lambda leaf: leaf + 0, state)
+    out = engine.replace_landmark(spare, jnp.asarray(X), 2, x_new,
+                                  donate=True)
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_grow_rows_argument_validation():

@@ -60,3 +60,35 @@ def test_serve_driver_smoke():
                       "--prompt-len", "4", "--gen", "4"])
     assert res["finite"]
     assert res["generated_shape"] == (2, 4)
+
+
+def test_serve_kpca_window_smoke():
+    """--window W: the stream slides instead of saturating — m stays at
+    W while points keep flowing past capacity."""
+    from repro.launch.serve import main as serve_main
+    res = serve_main(["--mode", "kpca", "--capacity", "32", "--points",
+                      "40", "--window", "16", "--dispatch", "bucketed",
+                      "--dim", "4"])
+    assert res["finite"]
+    assert res["m_final"] == 16
+    assert res["points"] == 40
+
+
+def test_serve_multitenant_window_smoke():
+    from repro.launch.serve import main as serve_main
+    res = serve_main(["--mode", "kpca", "--capacity", "32", "--points",
+                      "24", "--tenants", "2", "--window", "12",
+                      "--dispatch", "bucketed", "--cohorts",
+                      "bucket-padded", "--dim", "4"])
+    assert res["finite"]
+    assert res["m_final"] == [12, 12]
+
+
+def test_serve_nystrom_lifecycle_smoke():
+    from repro.launch.serve import main as serve_main
+    res = serve_main(["--mode", "nystrom", "--capacity", "16", "--points",
+                      "40", "--landmark-policy", "leverage", "--dim", "4",
+                      "--landmark-budget", "8"])
+    assert res["finite"]
+    assert res["m_final"] <= 8
+    assert res["admitted"] + res["rejected"] + res["replaced"] == 40
