@@ -1,13 +1,22 @@
-"""Decremental-path benchmarks: downdate cost vs m, and landmark
-replacement vs from-scratch recompute.
+"""Decremental-path benchmarks: downdate cost vs m, steady-state
+window_block throughput, and landmark replacement vs from-scratch
+recompute.
 
-Two claims of the decremental subsystem are measured:
+Three claims of the decremental subsystem are measured:
 
 * **Downdate scales with m, not M** — ``Engine.downdate`` under bucketed
   dispatch runs the inverse ±sigma pair and the contraction at the
   active bucket M_b, so evicting from a small window in a large-capacity
   state costs O(M_b³), mirroring what PR 1 did for updates.  The fixed
   dispatch column pays capacity O(M³) at every m — the gap is the win.
+
+* **Steady-state window_block beats the per-point windowed loop** — at
+  m ≡ W the evict+ingest pair is a fixed-shape composition, so
+  ``Engine.window_block`` folds a whole (T, d) block through ONE
+  ``lax.scan`` dispatch with the arrival ring advanced in-graph, while
+  the per-point loop pays dispatch + a host evict decision (device
+  sync) for every point.  The ISSUE acceptance bar is ≥ 3× at
+  m = W = 64, M = 512, T = 256 on CPU.
 
 * **replace_landmark beats recompute-from-scratch** — swapping one
   Nyström landmark via downdate+update touches O(M_b³) eigensystem work
@@ -94,6 +103,52 @@ def bench_downdate_scaling(capacity: int, ms, d: int, rounds: int,
     return {"capacity": capacity, "per_m": rows}
 
 
+def bench_window_block(capacity: int, W: int, T: int, d: int, rounds: int,
+                       rng) -> dict:
+    """Steady-state throughput: scanned window_block vs per-point loop."""
+    from repro.core import inkpca, window as wnd
+
+    spec = kf.KernelSpec(name="rbf", sigma=float(d))
+    plan = eng.UpdatePlan(dispatch="bucketed", min_bucket=min(32, capacity))
+    stream = inkpca.KPCAStream(
+        jnp.asarray(rng.normal(size=(4, d)), jnp.float32), capacity, spec,
+        adjusted=True, plan=plan, window=W)
+    stream.update_block(jnp.asarray(rng.normal(size=(W - 4, d)),
+                                    jnp.float32))
+    engine, ws = stream.engine, stream.state
+    assert int(ws.kpca.m) == W
+    xs = jnp.asarray(rng.normal(size=(T, d)), jnp.float32)
+
+    def loop():
+        s = ws
+        for t in range(T):
+            s = wnd.ingest(engine, s, xs[t], window=W)
+        return s.kpca.L
+
+    def block():
+        return engine.window_block(ws, xs, window=W).kpca.L
+
+    jax.block_until_ready(loop())              # compile both paths
+    jax.block_until_ready(block())
+    t_loop = _median_time(loop, rounds)
+    t_block = _median_time(block, rounds)
+    _check_finite("window_block", block())
+    _check_finite("window_loop", loop())
+    out = {
+        "capacity": capacity, "window": W, "block_T": T,
+        "loop_ms": t_loop * 1e3,
+        "block_ms": t_block * 1e3,
+        "loop_points_per_s": T / t_loop,
+        "block_points_per_s": T / t_block,
+        "speedup_block": t_loop / t_block,
+    }
+    print(f"[window] window_block W={W} M={capacity} T={T}: "
+          f"block {out['block_ms']:.1f} ms vs per-point "
+          f"{out['loop_ms']:.1f} ms -> {out['speedup_block']:.1f}x "
+          f"({out['block_points_per_s']:.0f} pts/s)")
+    return out
+
+
 def bench_replace_landmark(capacity: int, m: int, n_rows: int, d: int,
                            rounds: int, rng) -> dict:
     """replace_landmark (donated lifecycle chain) vs from-scratch."""
@@ -153,11 +208,15 @@ def main(capacity: int = 512, d: int = 16, rounds: int = 15,
         capacity, rounds = 64, 3
         ms = [8, 16]
         rep = bench_replace_landmark(capacity, 16, 128, d, rounds, rng)
+        blk = bench_window_block(capacity, 8, 8, d, rounds, rng)
     else:
         ms = [16, 32, 64, 128]
         # Serving-shaped rows: the from-scratch gram is O(n·m·d) while a
         # donated replace is flat in n (one column + in-place Knm).
         rep = bench_replace_landmark(capacity, 64, 16384, 64, rounds, rng)
+        # Steady-state scan vs per-point loop (ISSUE bar: >= 3x here).
+        blk = bench_window_block(capacity, 64, 256, d,
+                                 max(rounds // 3, 3), rng)
     down = bench_downdate_scaling(capacity, ms, d, rounds, rng)
 
     result = {
@@ -165,6 +224,7 @@ def main(capacity: int = 512, d: int = 16, rounds: int = 15,
         "dtype": "float32",
         "rounds": rounds,
         "downdate_scaling": down,
+        "window_block": blk,
         "replace_landmark": rep,
         "finite": True,
     }

@@ -46,6 +46,16 @@ Per update the communication volume is M floats (one all-reduce; two for
 a guarded fused pair) against O(M_b²·m/P) local flops — strongly
 compute-bound for M ≳ P, which is what the roofline analysis in
 EXPERIMENTS.md shows.
+
+Decremental path: ``make_sharded_downdate`` evicts the boundary row
+(victim pre-permuted by the host); ``make_sharded_evict`` lifts that
+restriction with an IN-GRAPH boundary permutation (one ppermute moving
+each device's boundary row + one psum gathering the victim row along
+the replicated axis), so the victim index may be traced.
+``make_sharded_window_block`` composes evict + ingest into the scanned
+steady-state sliding-window engine (m ≡ W, unadjusted system; X and
+the arrival ring replicated) — every collective in the step is
+unconditional, preserving the deadlock-free discipline above.
 """
 from __future__ import annotations
 
@@ -151,6 +161,35 @@ def _rank_one_update_pair_sharded(L, U_local, v1_local, sigma1, v2_local,
 # the update, so slicing loses nothing while m < M_b.
 
 
+def _bucketed_dispatch(build, plan: eng.UpdatePlan):
+    """Shared dispatch shell for every builder in this module.
+
+    ``build(Mb)`` returns the jitted shard_map for one bucket (None =
+    full capacity).  Fixed dispatch compiles once; bucketed dispatch
+    reads ``int(m)`` — by convention the LAST positional argument of
+    every builder's callable, with L first — on the host and caches one
+    compilation per bucket rung, exactly as ``engine.rank_one``.
+    """
+    if plan.dispatch != "bucketed":
+        return build(None)
+
+    cache: dict[int, object] = {}
+
+    def dispatch(*args):
+        L, m = args[0], args[-1]
+        M = L.shape[0]
+        # A downdate/evict never grows m and an update's caller passes
+        # the pre-update m, so the bucket holds m itself (full-capacity
+        # states stay legal; m on a rung doesn't jump to the next one).
+        Mb = eng.bucket_for(max(int(m), 1), M, plan.min_bucket)
+        key = Mb if Mb < M else -1
+        if key not in cache:
+            cache[key] = build(None if Mb >= M else Mb)
+        return cache[key](*args)
+
+    return dispatch
+
+
 def make_sharded_update(mesh, *, axis: str = "data",
                         plan: eng.UpdatePlan = eng.DEFAULT_PLAN):
     """Build a pjit-compatible sharded rank-one update over ``mesh``.
@@ -190,23 +229,7 @@ def make_sharded_update(mesh, *, axis: str = "data",
             check_vma=False,
         ))
 
-    if plan.dispatch != "bucketed":
-        return build(None)
-
-    cache: dict[int, object] = {}
-
-    def dispatch(L, U, v, sigma, m):
-        M = L.shape[0]
-        # A rank-one update never grows m, so the bucket holds m itself
-        # (matching engine.rank_one): full-capacity states stay legal and
-        # m sitting exactly on a rung doesn't jump to the next one.
-        Mb = eng.bucket_for(max(int(m), 1), M, plan.min_bucket)
-        key = Mb if Mb < M else -1
-        if key not in cache:
-            cache[key] = build(None if Mb >= M else Mb)
-        return cache[key](L, U, v, sigma, m)
-
-    return dispatch
+    return _bucketed_dispatch(build, plan)
 
 
 def make_sharded_update_pair(mesh, *, axis: str = "data",
@@ -249,20 +272,7 @@ def make_sharded_update_pair(mesh, *, axis: str = "data",
             check_vma=False,
         ))
 
-    if plan.dispatch != "bucketed":
-        return build(None)
-
-    cache: dict[int, object] = {}
-
-    def dispatch(L, U, v1, sigma1, v2, sigma2, m):
-        M = L.shape[0]
-        Mb = eng.bucket_for(max(int(m), 1), M, plan.min_bucket)
-        key = Mb if Mb < M else -1
-        if key not in cache:
-            cache[key] = build(None if Mb >= M else Mb)
-        return cache[key](L, U, v1, sigma1, v2, sigma2, m)
-
-    return dispatch
+    return _bucketed_dispatch(build, plan)
 
 
 def _downdate_sharded(L, U_local, a, k_new, m, *, axis: str,
@@ -350,20 +360,242 @@ def make_sharded_downdate(mesh, *, axis: str = "data",
             check_vma=False,
         ))
 
-    if plan.dispatch != "bucketed":
-        return build(None)
+    return _bucketed_dispatch(build, plan)
 
-    cache: dict[int, object] = {}
 
-    def dispatch(L, U, a, k_new, m):
-        M = L.shape[0]
-        Mb = eng.bucket_for(max(int(m), 1), M, plan.min_bucket)
-        key = Mb if Mb < M else -1
-        if key not in cache:
-            cache[key] = build(None if Mb >= M else Mb)
-        return cache[key](L, U, a, k_new, m)
+def _permute_rows_sharded(rows_block, i, m, *, axis: str, nshards: int,
+                          rows_full: int | None = None):
+    """Row-sharded boundary permutation: move global row ``i`` to the
+    active boundary q = m−1, survivors shifting up — entirely in-graph
+    (``i`` and ``m`` may be traced scalars, so no host round-trip decides
+    the victim).
 
-    return dispatch
+    The permutation is a cyclic shift confined to rows [i, m−1], so each
+    device needs only (a) its own rows, (b) ONE boundary row from the
+    next device — a ``ppermute`` of O(M) floats — and (c) global row i
+    for whichever device owns row m−1, gathered along the replicated
+    axis with one O(M) psum.  Bucketed local slicing is transparent:
+    either the slice keeps every per-device row (contiguous global ids)
+    or the bucket fits inside device 0's block and every other device
+    holds only inactive identity rows the shift never touches.  Both
+    collectives are unconditional, keeping the module's
+    collective-balanced discipline.
+    """
+    R = rows_block.shape[0]
+    r0 = jax.lax.axis_index(axis) * (rows_full or R)
+    gids = jnp.arange(R) + r0
+    # (b) next device's first row closes each device's local shift window.
+    nbr = jax.lax.ppermute(rows_block[0], axis,
+                           perm=[((p + 1) % nshards, p)
+                                 for p in range(nshards)])
+    shifted = jnp.concatenate([rows_block[1:], nbr[None]], axis=0)
+    # (c) global row i, replicated to every device.
+    sel = (gids == i).astype(rows_block.dtype)
+    row_i = jax.lax.psum(sel @ rows_block, axis)
+    keep = (gids < i) | (gids >= m)
+    last = gids == (m - 1)
+    return jnp.where(keep[:, None], rows_block,
+                     jnp.where(last[:, None], row_i[None, :], shifted))
+
+
+def make_sharded_evict(mesh, *, axis: str = "data",
+                       plan: eng.UpdatePlan = eng.DEFAULT_PLAN):
+    """Sharded eviction of an ARBITRARY active row:
+    f(L, U, a, k_new, i, m) -> (L, U, m−1).
+
+    Closes the boundary-permutation follow-up of ``make_sharded_downdate``
+    (which evicts row m−1 only and leaves the victim permutation to the
+    host): the survivor-order-preserving permutation runs in-graph via
+    ``_permute_rows_sharded``, so ``i`` may be a traced scalar — e.g. the
+    FIFO-oldest ``argmin(ages)`` of a sliding window — and the whole
+    evict needs no host round-trip.  ``a`` is the victim's kernel row
+    against the stored points (replicated, self-entry at position i,
+    inactive entries zero); ``k_new`` its diagonal value.  Cost on top of
+    the boundary downdate: one O(M) ppermute + one O(M) psum.
+    """
+    nsh = mesh.shape[axis]
+
+    def fixed_body(L, U_local, a, k_new, i, m):
+        U_p = _permute_rows_sharded(U_local, i, m, axis=axis, nshards=nsh)
+        order = dd.boundary_perm(i, m, L.shape[0])
+        return _downdate_sharded(L, U_p, a[order], k_new, m, axis=axis,
+                                 plan=plan)
+
+    def sliced_body(Mb: int):
+        def body(L, U_local, a, k_new, i, m):
+            R = U_local.shape[0]
+            Rb = min(R, Mb)
+            U_p = _permute_rows_sharded(U_local[:Rb, :Mb], i, m, axis=axis,
+                                        nshards=nsh, rows_full=R)
+            order = dd.boundary_perm(i, m, Mb)
+            Lb, Ub, m_new = _downdate_sharded(
+                L[:Mb], U_p, a[:Mb][order], k_new, m, axis=axis, plan=plan,
+                rows_full=R)
+            L_new = rankone.sentinelize(L.at[:Mb].set(Lb), m_new,
+                                        jnp.zeros((), L.dtype))
+            return L_new, U_local.at[:Rb, :Mb].set(Ub), m_new
+
+        return body
+
+    def build(Mb: int | None):
+        body = fixed_body if Mb is None else sliced_body(Mb)
+        return jax.jit(_shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(axis, None), P(), P(), P(), P()),
+            out_specs=(P(), P(axis, None), P()),
+            check_vma=False,
+        ))
+
+    return _bucketed_dispatch(build, plan)
+
+
+# ------------------------------------------------- sharded window engine --
+def _window_step_sharded(L, U_local, X, ages, clock, x_new, m, *,
+                         axis: str, spec: kf.KernelSpec,
+                         plan: eng.UpdatePlan, nshards: int,
+                         rows_full: int | None = None):
+    """One steady-state sliding-window step (m ≡ W) of the UNADJUSTED
+    sharded eigensystem: evict the FIFO-oldest row, ingest ``x_new``,
+    advance the arrival ring — all in-graph.
+
+    U is row-sharded; L, the stored points X, and the O(M) arrival ring
+    (``ages``/``clock``) are replicated, matching the module's "O(M)
+    bookkeeping is replicated" scheme (X is consumed by replicated kernel
+    rows, so sharding it would just add gathers).  The victim is
+    ``argmin(ages)`` — a traced read — permuted to the boundary by
+    ``_permute_rows_sharded``; the inverse pair + contraction and the
+    forward expansion + ±sigma pair reuse the sharded bodies above, so
+    the per-step collective schedule is fixed (ppermute + 6 O(M) psums,
+    all unconditional) and the step composes under ``lax.scan``.
+    """
+    M = L.shape[0]
+    dtype = L.dtype
+    victim = jnp.argmin(ages).astype(jnp.int32)
+    order = dd.boundary_perm(victim, m, M)
+
+    # --- evict: permute victim to the boundary, inverse pair + contract ---
+    U_p = _permute_rows_sharded(U_local, victim, m, axis=axis,
+                                nshards=nshards, rows_full=rows_full)
+    X_p = X[order]
+    q = m - 1
+    a = kf.kernel_row(X_p[q], X_p, spec=spec)
+    a = jnp.where(rankone.active_mask(M, m), a, 0.0)
+    L1, U1, m1 = _downdate_sharded(L, U_p, a, a[q], m, axis=axis, plan=plan,
+                                   rows_full=rows_full)
+    idx = jnp.arange(M)
+    X1 = jnp.where((idx == q)[:, None], 0.0, X_p)
+    # No sentinel write for the freed boundary slot: at m ≡ W the ingest
+    # below stamps the same index m1 with the clock.
+    ages1 = ages[order]
+
+    # --- ingest: expansion + forward ±sigma pair (Algorithm 1) ---
+    a_new = kf.kernel_row(x_new, X1, spec=spec)
+    a_new = jnp.where(rankone.active_mask(M, m1), a_new, 0.0)
+    k_new = kf.gram_block(x_new[None], x_new[None], spec=spec)[0, 0]
+    kn = jnp.maximum(k_new, jnp.finfo(dtype).tiny)
+    # expand_eigensystem only writes L and permutes U columns — both
+    # device-local on a row block, so the local helper is reused as-is.
+    L2, U2, m2 = rankone.expand_eigensystem(L1, U1, kn / 4.0, m1)
+    v1 = a_new.at[m1].set(kn / 2.0)
+    v2 = a_new.at[m1].set(kn / 4.0)
+    sigma = 4.0 / kn
+    R = U_local.shape[0]
+    r0 = jax.lax.axis_index(axis) * (rows_full or R)
+    v1_l = jax.lax.dynamic_slice(v1, (r0,), (R,))
+    v2_l = jax.lax.dynamic_slice(v2, (r0,), (R,))
+    L3, U3 = _rank_one_update_pair_sharded(L2, U2, v1_l, sigma, v2_l,
+                                           -sigma, m2, axis=axis, plan=plan,
+                                           rows_full=rows_full)
+    X2 = jnp.where((idx == m1)[:, None], x_new[None, :].astype(X1.dtype), X1)
+    ages2 = ages1.at[m1].set(clock)
+    return L3, U3, X2, ages2, clock + 1
+
+
+def _rebase_ring_traced(ages, clock, span: int):
+    """Traced mirror of ``window.maybe_rebase``, hoisted per block: shift
+    the arrival stamps down when ``clock + span`` could reach the
+    sentinel (without x64 the ring is int32 and a forever stream would
+    otherwise collide with it after ~10⁹ points).  Replicated elementwise
+    arithmetic — deterministic on every device, no collective.
+    """
+    from repro.core import window as wnd
+
+    sent = wnd.age_sentinel(ages.dtype)
+    base = clock - ages.shape[0]
+    reb = jnp.where(ages == sent, sent, ages - base)
+    need = clock >= sent - 1 - span
+    return (jnp.where(need, reb, ages),
+            jnp.where(need, clock - base, clock))
+
+
+def make_sharded_window_block(mesh, spec: kf.KernelSpec, *,
+                              axis: str = "data",
+                              plan: eng.UpdatePlan = eng.DEFAULT_PLAN):
+    """Sharded steady-state window engine:
+    f(L, U, X, ages, clock, xs, m) -> (L, U, X, ages, clock).
+
+    Folds a (T, d) block into a FULL sliding window (m ≡ W, unadjusted
+    system) with ONE dispatch: ``lax.scan`` over ``_window_step_sharded``
+    — the distributed mirror of ``engine.Engine.window_block``'s steady
+    state.  The FIFO-oldest victim of every step is chosen in-graph from
+    the replicated arrival ring, and the sharded boundary permutation
+    means no host round-trip anywhere inside the block.  ``m`` is
+    invariant (each step nets zero), so one compilation serves the
+    steady state forever; with ``plan.dispatch == "bucketed"`` every
+    local operand is sliced to the bucket holding W, as in the other
+    builders.  The int32 clock-rebase guard runs traced at block entry
+    (``_rebase_ring_traced``), mirroring ``Engine.window_block``'s
+    hoisted check, so forever streams never collide with the age
+    sentinel.  Pass T = 1 blocks for a single fused step.
+    """
+    nsh = mesh.shape[axis]
+
+    def fixed_body(L, U_local, X, ages, clock, xs, m):
+        ages, clock = _rebase_ring_traced(ages, clock, xs.shape[0])
+
+        def step(carry, x_new):
+            L, U_local, X, ages, clock = carry
+            return _window_step_sharded(
+                L, U_local, X, ages, clock, x_new, m, axis=axis, spec=spec,
+                plan=plan, nshards=nsh), None
+
+        carry, _ = jax.lax.scan(step, (L, U_local, X, ages, clock), xs)
+        return carry
+
+    def sliced_body(Mb: int):
+        def body(L, U_local, X, ages, clock, xs, m):
+            R = U_local.shape[0]
+            Rb = min(R, Mb)
+            ages_b, clock = _rebase_ring_traced(ages[:Mb], clock,
+                                                xs.shape[0])
+
+            def step(carry, x_new):
+                Lb, Ub, Xb, agb, clk = carry
+                return _window_step_sharded(
+                    Lb, Ub, Xb, agb, clk, x_new, m, axis=axis, spec=spec,
+                    plan=plan, nshards=nsh, rows_full=R), None
+
+            carry, _ = jax.lax.scan(
+                step, (L[:Mb], U_local[:Rb, :Mb], X[:Mb], ages_b, clock),
+                xs)
+            Lb, Ub, Xb, agb, clock = carry
+            L_new = rankone.sentinelize(L.at[:Mb].set(Lb), m,
+                                        jnp.zeros((), L.dtype))
+            return (L_new, U_local.at[:Rb, :Mb].set(Ub), X.at[:Mb].set(Xb),
+                    ages.at[:Mb].set(agb), clock)
+
+        return body
+
+    def build(Mb: int | None):
+        body = fixed_body if Mb is None else sliced_body(Mb)
+        return jax.jit(_shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(axis, None), P(), P(), P(), P(), P()),
+            out_specs=(P(), P(axis, None), P(), P(), P()),
+            check_vma=False,
+        ))
+
+    return _bucketed_dispatch(build, plan)
 
 
 def make_sharded_expand(mesh, *, axis: str = "data"):

@@ -368,6 +368,74 @@ def _batched_scan_masked(states, xs: Array, active: Array,
 
 
 @partial(jax.jit, static_argnames=("spec", "adjusted", "plan"))
+def _window_scan_chunk(sub, ages: Array, clock: Array, xs: Array,
+                       spec: kf.KernelSpec, adjusted: bool,
+                       plan: UpdatePlan):
+    """Steady-state sliding-window scan: every step evicts the oldest
+    point and ingests one new one, all under ONE dispatch.
+
+    At m ≡ W the evict+ingest pair is a fixed-shape composition (inverse
+    ±sigma pair + Householder contraction at m = W, then the forward
+    update back to W), so a whole (T, d) block folds through a single
+    ``lax.scan`` — the windowed mirror of ``_scan_chunk``.  The arrival
+    ring advances fully in-graph: the victim is ``argmin(ages)`` (a
+    traced read, not the host-side ``oldest_row``), the survivor
+    permutation reuses ``downdate.boundary_perm``, and the new point is
+    stamped with the traced clock.  Zero host syncs inside the block;
+    the caller hoists the rebase check to once per block.
+    """
+    from repro.core import downdate as dd
+    from repro.core import inkpca
+
+    def step(carry, x_new):
+        st, ages, clock = carry
+        victim = jnp.argmin(ages).astype(jnp.int32)
+        order = dd.boundary_perm(victim, st.m, ages.shape[0])
+        st = dd.downdate(st, victim, spec, adjusted=adjusted, plan=plan)
+        # No sentinel write for the evicted slot: at m ≡ W the freed
+        # boundary row W−1 is exactly where the new point lands below.
+        ages = ages[order]
+        a, k_new = masked_row(st, x_new, spec)
+        fn = inkpca.update_adjusted if adjusted else inkpca.update_unadjusted
+        st = fn(st, a, k_new, x_new, plan=plan)
+        ages = ages.at[st.m - 1].set(clock)            # new point's row
+        return (st, ages, clock + 1), None
+
+    (sub, ages, clock), _ = jax.lax.scan(step, (sub, ages, clock), xs)
+    return sub, ages, clock
+
+
+@partial(jax.jit, static_argnames=("spec", "adjusted", "plan"))
+def _batched_window_scan_masked(states, xs: Array, active: Array,
+                                spec: kf.KernelSpec, adjusted: bool,
+                                plan: UpdatePlan):
+    """Scan a (T, B, d) block of steady-state window steps: every active
+    tenant sits at m ≡ W, evicts its oldest point (physical row 0 —
+    lockstep FIFO, see ``StreamBatch``) and ingests, one device dispatch
+    for the whole block.  ``active`` is T-constant (pad lanes and parked
+    tenants stay bitwise untouched), which is what makes the whole block
+    a fixed-shape scan — the windowed mirror of ``_batched_scan_masked``.
+    """
+    from repro.core import downdate as dd
+    from repro.core import inkpca
+
+    def step(sts, x_row):
+        def one(st, x, act):
+            st_e = dd.downdate(st, jnp.zeros((), jnp.int32), spec,
+                               adjusted=adjusted, plan=plan)
+            a, k_new = masked_row(st_e, x, spec)
+            fn = (inkpca.update_adjusted if adjusted
+                  else inkpca.update_unadjusted)
+            new = fn(st_e, a, k_new, x, plan=plan)
+            return jax.tree.map(lambda n, o: jnp.where(act, n, o), new, st)
+
+        return jax.vmap(one)(sts, x_row, active), None
+
+    out, _ = jax.lax.scan(step, states, xs)
+    return out
+
+
+@partial(jax.jit, static_argnames=("spec", "adjusted", "plan"))
 def _batched_scan(states, xs: Array, spec: kf.KernelSpec, adjusted: bool,
                   plan: UpdatePlan):
     """Scan a (T, B, d) block: T sequential steps, B tenants per step."""
@@ -492,6 +560,74 @@ class Engine:
         state = self.downdate(state, i, min_rows=min_rows)
         return self.update(state, x_new, min_rows=min_rows)
 
+    # ---- steady-state sliding window ---------------------------------------
+    def _window_bucket(self, M: int, window: int, min_rows: int) -> int:
+        """Bucket for a steady-state window step: the downdate runs at
+        m = W and the following update needs W rows (m = W−1 growing by
+        one), so the whole evict+ingest pair fits at bucket_for(W)."""
+        return self._bucket(M, max(window, min_rows, 1))
+
+    def window_step(self, wstate, x_new: Array, *, window: int,
+                    min_rows: int = 0):
+        """One steady-state sliding-window step (m ≡ W): evict-oldest +
+        ingest fused under ONE jitted dispatch at the window's bucket —
+        against the two dispatches (plus slice/scatter traffic between
+        them) of ``window.ingest``.  Below a full window the point is
+        append-only (no eviction), exactly like ``window.ingest``.
+        """
+        return self.window_block(wstate, jnp.asarray(x_new)[None],
+                                 window=window, min_rows=min_rows)
+
+    def window_block(self, wstate, xs: Array, *, window: int,
+                     min_rows: int = 0):
+        """Fold a (T, d) block into a windowed stream — the windowed
+        mirror of ``update_block``.
+
+        Growth phase (m < W): the leading W − m points are append-only
+        and route through ``update_block`` (scan within buckets), with
+        their arrival stamps written in one fused slice.  Steady state
+        (m ≡ W): the remaining points fold through ``_window_scan_chunk``
+        — ONE dispatch for the whole chunk, victim selection and the
+        arrival ring fully in-graph, zero host syncs inside the block.
+        The rebase check is hoisted to once per block (the clock advances
+        by exactly T), so no per-point ``int(clock)`` read either.
+        """
+        from repro.core import window as wnd
+
+        xs = jnp.asarray(xs)
+        T = xs.shape[0]
+        if T == 0:
+            return wstate
+        m = int(wstate.kpca.m)
+        if m > window:
+            raise ValueError(f"active count {m} exceeds window {window}")
+        # Hoisted rebase guard: one host clock read per block.
+        if int(wstate.clock) + T >= wnd.age_sentinel(wstate.ages.dtype) - 1:
+            wstate = wnd.rebase_ages(wstate)
+        i = 0
+        if m < window:
+            g = min(window - m, T)
+            grown = self.update_block(wstate.kpca, xs[:g],
+                                      min_rows=min_rows)
+            wstate = wnd.stamp_grown_ages(wstate, grown, g)
+            i = g
+        if i == T:
+            return wstate
+        M = wstate.kpca.L.shape[0]
+        Mb = self._window_bucket(M, window, min_rows)
+        plan = self.plan.kernel_plan()
+        sub = slice_state(wstate.kpca, Mb) if Mb < M else wstate.kpca
+        ages_sub = wstate.ages[:Mb] if Mb < M else wstate.ages
+        sub, ages_sub, clock = _window_scan_chunk(
+            sub, ages_sub, wstate.clock, xs[i:], self.spec, self.adjusted,
+            plan)
+        if Mb < M:
+            kpca = scatter_state(wstate.kpca, sub)
+            ages = wstate.ages.at[:Mb].set(ages_sub)
+        else:
+            kpca, ages = sub, ages_sub
+        return wnd.WindowState(kpca=kpca, ages=ages, clock=clock)
+
     # ---- low-level rank-one -----------------------------------------------
     def rank_one(self, L: Array, U: Array, v: Array, sigma: Array, m: Array
                  ) -> tuple[Array, Array]:
@@ -588,13 +724,15 @@ class Engine:
 
     def offer_landmark(self, state, x: Array, *, x_all=None,
                        budget: int | None = None, admit_tol: float = 1e-3,
-                       reg: float = 1e-6, min_rows: int = 0):
+                       reg: float = 1e-6, min_rows: int = 0,
+                       residual: float | None = None):
         """Offer one candidate landmark under ``plan.landmark_policy``.
 
         * ``"append"`` — the paper's §4 loop: admit every candidate until
           the budget fills, then reject.
         * ``"leverage"`` — residual-gated admission with lowest-leverage
-          replacement at budget (``nystrom.consider_landmark``).
+          replacement at budget (``nystrom.consider_landmark``);
+          ``residual`` forwards a precomputed ``admission_residual``.
 
         Returns ``(state, action)`` with action in
         {"admitted", "rejected", "replaced"}.
@@ -604,7 +742,8 @@ class Engine:
         if self.plan.landmark_policy == "leverage":
             return nystrom.consider_landmark(
                 self, state, x, x_all=x_all, budget=budget,
-                admit_tol=admit_tol, reg=reg, min_rows=min_rows)
+                admit_tol=admit_tol, reg=reg, min_rows=min_rows,
+                residual=residual)
         if self.plan.landmark_policy != "append":
             raise ValueError(f"unknown landmark_policy "
                              f"{self.plan.landmark_policy!r}")
@@ -1123,17 +1262,45 @@ class StreamBatch:
     def update_block(self, xs: Array):
         """Stream a (T, B, d) block: scan over T with tenants vmapped per
         step; chunks are cut at bucket crossings (any group's, in grouped
-        cohort modes).  Window mode steps point-by-point (each step may
-        evict, which is a host-side dispatch decision)."""
+        cohort modes).  Window mode: tenants still below their window
+        step point-by-point (each step may evict, a host-side dispatch
+        decision), but once EVERY tenant sits at m ≡ W the remaining
+        steps are fixed-shape evict+ingest pairs and fold through ONE
+        scanned dispatch per cohort group
+        (``_batched_window_scan_masked``) — the multi-tenant mirror of
+        ``Engine.window_block``'s steady state."""
         import numpy as np
 
         xs = jnp.asarray(xs)
         T = xs.shape[0]
         if self.window is not None:
             out = None
-            for t in range(T):
+            t = 0
+            # Growth / mixed phase: some tenant below W — per-point steps
+            # (all tenants are active here, so every step closes the gap).
+            while t < T and int(self._m_host.min()) < self.window:
                 out = self.update(xs[t])
-            return out
+                t += 1
+            if t == T:
+                return out
+            # Steady state: every tenant at m ≡ W, active counts frozen
+            # (evict+ingest nets zero), so no bucket crossing can occur
+            # inside the block — one scanned dispatch per group.
+            plan = self.plan.kernel_plan()
+            ones = np.ones(self.n_tenants, bool)
+            if self._grouped:
+                self._regroup()
+                for grp in self._groups:
+                    ga = self._group_mask(grp, ones)
+                    grp["state"] = _batched_window_scan_masked(
+                        grp["state"], xs[t:][:, grp["idx_pad"]],
+                        jnp.asarray(ga), self.spec, self.adjusted, plan)
+                return self._groups[-1]["state"]
+            sub = self._working(max(int(self._m_host.max()), 1))
+            self._sub = _batched_window_scan_masked(
+                sub, xs[t:], jnp.asarray(ones), self.spec, self.adjusted,
+                plan)
+            return self._sub
         i = 0
         if self._grouped:
             ones = np.ones(self.n_tenants, bool)

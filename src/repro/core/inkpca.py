@@ -252,15 +252,21 @@ class KPCAStream:
         semantics (the paper's per-point algorithm, amortized for TPU).
         Bucketed dispatch scans within a bucket and re-buckets at
         crossings, keeping the same sequential semantics.  A windowed
-        stream steps point-by-point (each step may evict, a host-side
-        dispatch decision)."""
+        stream routes through ``Engine.window_block``: growth points scan
+        append-only, and once the window fills the evict+ingest pairs run
+        as ONE scanned dispatch per block (fixed shape at m ≡ W) instead
+        of the old per-point host-decided stepping."""
         if self.window is not None:
-            for t in range(jnp.asarray(xs).shape[0]):
-                self.update(xs[t])
+            self.state = self.engine.window_block(self.state, xs,
+                                                  window=self.window,
+                                                  min_rows=self._min_rows)
             return self.state
         self.state = self.engine.update_block(self.state, xs,
                                               min_rows=self._min_rows)
         return self.state
+
+    # sklearn-style spelling for streaming consumers: identical semantics.
+    partial_fit_block = update_block
 
     def truncate(self, k: int, *, compact: bool | None = None) -> KPCAState:
         """Keep only the k dominant eigenpairs (paper conclusion: 'adapt the

@@ -64,6 +64,13 @@ def kernel_row(x_new: Array, xs: Array, *, spec: KernelSpec) -> Array:
     return gram_block(xs, x_new[None, :], spec=spec)[:, 0]
 
 
+def constant_diag(spec: KernelSpec) -> float | None:
+    """k(x, x) when it is input-independent (stationary kernels: RBF,
+    Matérn), else None — lets consumers evaluate diagonal sums without
+    the row points (see ``nystrom.trace_error``)."""
+    return spec.scale if spec.name in ("rbf", "matern32") else None
+
+
 def kernel_diag(x: Array, *, spec: KernelSpec) -> Array:
     """k(x_i, x_i) for each row — O(n) (constant 'scale' for RBF)."""
     if spec.name == "rbf":

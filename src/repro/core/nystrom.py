@@ -197,6 +197,24 @@ def admission_residual(state: NystromState, x: Array,
     return k_xx - jnp.sum(_pinv_lam(st.L, mask) * y * y)
 
 
+def _rows_are_landmarks(state: NystromState, spec: kf.KernelSpec) -> bool:
+    """Do the stored landmark points coincide with the observed rows, in
+    order?  Verified by rebuilding the maintained K_{n,m} columns from
+    the stored points and comparing — O(n·m·d), the cost of one Knm
+    column rebuild, and the only evidence available once ``x_all`` is
+    gone.  A count match alone is NOT enough: ``add_landmark`` accepts
+    points from outside the observed rows.
+    """
+    st = state.kpca
+    n = state.Knm.shape[0]
+    m = int(st.m)
+    G = kf.gram_block(st.X[:n].astype(st.L.dtype), st.X[:m],
+                      spec=spec).astype(state.Knm.dtype)
+    scale = float(jnp.max(jnp.abs(G))) + 1e-30
+    err = float(jnp.max(jnp.abs(state.Knm[:, :m] - G)))
+    return err <= 1e-5 * scale
+
+
 def trace_error(state: NystromState, spec: kf.KernelSpec,
                 x_all: Array | None = None) -> Array:
     """Trace-norm of K − K̃ over the observed rows, incrementally.
@@ -211,13 +229,140 @@ def trace_error(state: NystromState, spec: kf.KernelSpec,
     """
     st = state.kpca
     x_rows = state.Xrows if state.Xrows is not None else x_all
-    if x_rows is None:
-        raise ValueError("trace_error needs x_all for fixed-row states")
+    n = state.Knm.shape[0]
+    if x_rows is not None:
+        diag_k = kf.kernel_diag(x_rows.astype(st.L.dtype), spec=spec)
+    elif kf.constant_diag(spec) is not None:
+        # Stationary kernels have an input-independent diagonal — the row
+        # points only ever feed Σ_i k(x_i, x_i), so nothing is lost.
+        diag_k = jnp.full((n,), kf.constant_diag(spec), st.L.dtype)
+    elif n == int(st.m) and _rows_are_landmarks(state, spec):
+        # The stored landmark points cover the observed stream (verified
+        # against the maintained Knm, not just the row count — landmarks
+        # admitted from OUTSIDE the observed rows must keep raising).
+        diag_k = kf.kernel_diag(st.X[:n].astype(st.L.dtype), spec=spec)
+    else:
+        raise ValueError(
+            "trace_error is underdetermined: fixed-row state without "
+            "x_all, a non-constant-diagonal kernel, and observed rows "
+            "not covered by the stored landmarks — pass x_all")
     mask = rankone.active_mask(st.L.shape[0], st.m)
     B = state.Knm @ jnp.where(mask[None, :], st.U, 0.0)
     diag_tilde = jnp.sum(B**2 * _pinv_lam(st.L, mask)[None, :], axis=1)
-    diag_k = kf.kernel_diag(x_rows.astype(st.L.dtype), spec=spec)
     return jnp.sum(diag_k - diag_tilde)
+
+
+def admission_trace_delta(state: NystromState, x: Array,
+                          spec: kf.KernelSpec,
+                          x_all: Array | None = None
+                          ) -> tuple[Array, Array]:
+    """Exact decrease of ``trace_error`` from admitting ``x`` as a
+    landmark — O(n·m), against the O(n·m²) full recompute.
+
+    Admitting x borders the landmark gram with (b, k_xx) and appends the
+    column c = k(X_rows, x); by the block-inverse (Schur complement)
+    identity the Nyström reconstruction gains exactly one PSD rank-one
+    term:
+
+        K̃' = K̃ + r rᵀ / δ,      r = K_nm K_mm⁺ b − c,
+
+    with δ = k_xx − bᵀ K_mm⁺ b the admission residual.  The trace gap
+    therefore drops by exactly Σ_i r_i² / δ.  Returns ``(delta,
+    residual)``; delta is clamped to 0 when δ is numerically zero (the
+    candidate is already spanned, nothing to gain).
+    """
+    st = state.kpca
+    x = jnp.asarray(x)
+    x_rows = state.Xrows if state.Xrows is not None else x_all
+    if x_rows is None:
+        raise ValueError("admission_trace_delta needs the observed rows "
+                         "(grow_rows state or x_all)")
+    mask = rankone.active_mask(st.L.shape[0], st.m)
+    b, k_xx = eng.masked_row(st, x, spec)
+    y = st.U.T @ b
+    alpha = _pinv_lam(st.L, mask) * y          # K_mm⁺ b in the eigenbasis
+    delta_res = k_xx - jnp.sum(y * alpha)
+    c = kf.kernel_row(x, x_rows.astype(st.L.dtype), spec=spec)
+    r = state.Knm @ (st.U @ alpha) - c
+    tol = jnp.finfo(st.L.dtype).eps * jnp.maximum(k_xx, 1.0)
+    delta = jnp.where(delta_res > tol,
+                      jnp.sum(r * r) / jnp.maximum(delta_res, tol), 0.0)
+    return delta, delta_res
+
+
+class TraceErrorTracker:
+    """Maintains the sufficient-subset error metric incrementally across
+    the landmark lifecycle (ROADMAP PR-4 follow-up).
+
+    The stopping rule watches ``trace_error`` after every admission, and
+    recomputing it exactly costs O(n·m²) (the ``Knm @ U`` contraction) —
+    the dominant per-offer cost of the leverage policy once n is large.
+    This tracker keeps the value current from O(n·m) increments instead:
+
+    * ``observe(state, x)`` — a newly observed row adds its own
+      projection residual δ(x) to the trace gap (O(m²); call once per
+      ``observe_rows`` point, before or after — the residual only reads
+      the landmark eigensystem).
+    * ``admitted(state_before, x)`` — subtract
+      ``admission_trace_delta(state_before, x)``; ``state_before`` is
+      the state the candidate was offered to (rows already observed).
+    * ``replaced(state_after)`` — exact resync: the removal half of a
+      swap needs the landmark-gram inverse *without* the victim, which
+      is not available in O(n·m) from the maintained eigenpairs, and
+      replaces are the rare steady-state path.
+    * every ``resync_every`` admissions the value re-anchors to the
+      exact recompute, bounding float drift on unbounded lifecycles
+      (the drift itself is regression-tested against the recompute).
+    """
+
+    def __init__(self, state: NystromState, spec: kf.KernelSpec, *,
+                 x_all: Array | None = None, resync_every: int = 64):
+        self.spec = spec
+        self.x_all = x_all
+        self.resync_every = int(resync_every)
+        self.value = float(trace_error(state, spec, x_all))
+        self._admits = 0
+        self._pending_resync = False
+
+    def resync(self, state: NystromState) -> float:
+        self.value = float(trace_error(state, self.spec, self.x_all))
+        self._admits = 0
+        self._pending_resync = False
+        return self.value
+
+    def observe(self, state: NystromState, x: Array,
+                residual: float | None = None) -> float:
+        """Pass ``residual`` when the caller already computed
+        ``admission_residual`` for this point (the serving loop offers
+        the same point next — one dispatch instead of two)."""
+        if residual is None:
+            residual = float(admission_residual(state, jnp.asarray(x),
+                                                self.spec))
+        self.value += max(float(residual), 0.0)
+        return self.value
+
+    def admitted(self, state_before: NystromState, x: Array) -> float:
+        delta, _ = admission_trace_delta(state_before, x, self.spec,
+                                         self.x_all)
+        self.value = max(self.value - float(delta), 0.0)
+        self._admits += 1
+        if self.resync_every and self._admits >= self.resync_every:
+            # Re-anchoring needs the POST-admission state; callers hand us
+            # the pre-state, so defer to the next lifecycle event instead
+            # of recomputing on a stale snapshot.
+            self._admits = 0
+            self._pending_resync = True
+        return self.value
+
+    def replaced(self, state_after: NystromState) -> float:
+        return self.resync(state_after)
+
+    def maybe_resync(self, state: NystromState) -> float:
+        """Honor a pending periodic re-anchor (call with the CURRENT
+        state after the lifecycle event that tripped it)."""
+        if self._pending_resync:
+            return self.resync(state)
+        return self.value
 
 
 class SufficientSubsetRule:
@@ -256,7 +401,9 @@ def consider_landmark(engine, state: NystromState, x: Array, *,
                       budget: int | None = None,
                       admit_tol: float = 1e-3,
                       reg: float = 1e-6,
-                      min_rows: int = 0) -> tuple[NystromState, str]:
+                      min_rows: int = 0,
+                      residual: float | None = None
+                      ) -> tuple[NystromState, str]:
     """Leverage-policy admission of one candidate landmark.
 
     Decision ladder (returns the new state and what happened):
@@ -269,14 +416,18 @@ def consider_landmark(engine, state: NystromState, x: Array, *,
 
     ``engine`` is an ``engine.Engine`` (adjusted=False) so every path
     runs at bucket capacity; drive it from a ``SufficientSubsetRule`` to
-    stop offering candidates altogether.
+    stop offering candidates altogether.  ``residual`` short-circuits
+    the O(m²) ``admission_residual`` dispatch when the caller already
+    has it (e.g. a ``TraceErrorTracker.observe`` on the same point).
     """
     import numpy as np
 
     M = state.kpca.L.shape[0]
     m = int(state.kpca.m)
     budget = budget if budget is not None else M - 1
-    delta = float(admission_residual(state, jnp.asarray(x), engine.spec))
+    delta = (float(residual) if residual is not None
+             else float(admission_residual(state, jnp.asarray(x),
+                                           engine.spec)))
     k_xx = float(kf.kernel_diag(jnp.asarray(x)[None].astype(state.kpca.L.dtype),
                                 spec=engine.spec)[0])
     gain = delta / max(k_xx, 1e-30)

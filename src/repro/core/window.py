@@ -11,7 +11,10 @@ requires (append-only streams saturate at capacity instead).
 The FIFO ordering is carried **in the state** as an arrival-index ring
 (``ages``/``clock``), not as host-side stream bookkeeping, so a windowed
 stream checkpointed mid-window restores and continues identically to an
-uninterrupted run.  The eviction permutation (``downdate.boundary_perm``)
+uninterrupted run.  Carrying it in-state is also what lets the
+steady-state scan (``engine.Engine.window_block``) advance the ring
+inside ``lax.scan`` — victim selection (argmin of ages) needs no host
+round-trip, so a full-window block folds in ONE dispatch.  The eviction permutation (``downdate.boundary_perm``)
 preserves the survivors' arrival order, so physically the oldest active
 point is always row argmin(ages) — row 0 for a pure FIFO stream — but
 the ring stays authoritative across replace-arbitrary-row calls and
@@ -42,9 +45,11 @@ class WindowState(NamedTuple):
     """A ``KPCAState`` plus the FIFO arrival ring.
 
     kpca:  the fixed-capacity eigensystem state (see ``inkpca.KPCAState``)
-    ages:  (M,) int64 arrival index of the point in each physical row;
-           ``AGE_SENTINEL`` marks inactive rows
-    clock: ()  int64 arrival index of the next ingested point
+    ages:  (M,) arrival index of the point in each physical row, in the
+           realized integer dtype (int64 under x64, int32 otherwise —
+           which is why ``rebase_ages`` exists); ``age_sentinel(dtype)``
+           marks inactive rows
+    clock: ()  arrival index of the next ingested point (same dtype)
     """
 
     kpca: object
@@ -98,12 +103,40 @@ def rebase_ages(wstate: WindowState) -> WindowState:
     return wstate._replace(ages=ages, clock=wstate.clock - base)
 
 
+def maybe_rebase(wstate: WindowState) -> WindowState:
+    """Traced rebase guard: rebase when the clock nears the sentinel,
+    selected with ``jnp.where`` so the check never forces a device sync
+    (the rebase arithmetic is O(M) elementwise — cheaper than the sync
+    the old host-side ``int(clock)`` comparison paid on every step)."""
+    sent = age_sentinel(wstate.ages.dtype)
+    reb = rebase_ages(wstate)
+    need = wstate.clock >= sent - 1
+    return wstate._replace(ages=jnp.where(need, reb.ages, wstate.ages),
+                           clock=jnp.where(need, reb.clock, wstate.clock))
+
+
+def stamp_grown_ages(wstate: WindowState, grown, count: int) -> WindowState:
+    """Stamp arrival indices for ``count`` append-only points just folded
+    into ``grown`` (a KPCAState) — the growth-phase half of
+    ``Engine.window_block``.  ``count`` and the pre-growth active count
+    are host values, so the stamp is one fused slice write."""
+    m0 = int(wstate.kpca.m)
+    stamps = wstate.clock + jnp.arange(count, dtype=wstate.ages.dtype)
+    ages = jax.lax.dynamic_update_slice(wstate.ages, stamps, (m0,))
+    return WindowState(kpca=grown, ages=ages, clock=wstate.clock + count)
+
+
 def ingest(engine: eng.Engine, wstate: WindowState, x_new: Array, *,
            window: int, min_rows: int = 0) -> WindowState:
     """One sliding-window step: evict-oldest if the window is full, then
-    fold the new point in and stamp its arrival index."""
-    if int(wstate.clock) >= age_sentinel(wstate.ages.dtype) - 1:
-        wstate = rebase_ages(wstate)
+    fold the new point in and stamp its arrival index.
+
+    The evict decision reads ``int(m)`` on the host (the same sync bucket
+    selection already pays); the rebase guard is traced.  For steady-state
+    blocks use ``Engine.window_block`` — one scanned dispatch, no host
+    syncs inside the block.
+    """
+    wstate = maybe_rebase(wstate)
     if int(wstate.kpca.m) >= window:
         wstate = evict(engine, wstate, oldest_row(wstate),
                        min_rows=min_rows)

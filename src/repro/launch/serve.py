@@ -140,16 +140,34 @@ def nystrom_main(args) -> dict:
     stopped_at = None
     t_total = time.time()
     leverage = engine.plan.landmark_policy == "leverage"
+    # Incremental trace_error: O(n·m) per admission instead of the
+    # O(n·m²) exact recompute the stopping rule used to trigger.
+    tracker = nystrom.TraceErrorTracker(state, spec) if leverage else None
     for i in range(args.points):
         x = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+        res = None
+        if leverage and not rule.sufficient:
+            # ONE residual dispatch serves both the tracker's observe
+            # increment and the admission gate below.  Once the rule has
+            # stopped admissions the tracker freezes too — the stopped
+            # regime pays zero per-point eigensystem dispatches.
+            res = float(nystrom.admission_residual(state, x, spec))
+            tracker.observe(state, x, residual=res)
         state = nystrom.observe_rows(state, x, spec)
         if leverage and rule.sufficient:
             counts["rejected"] += 1
             continue
-        state, action = engine.offer_landmark(state, x, budget=budget)
+        prev = state
+        state, action = engine.offer_landmark(state, x, budget=budget,
+                                              residual=res)
         counts[action] += 1
         if leverage and action in ("admitted", "replaced"):
-            if rule.observe(nystrom.trace_error(state, spec)):
+            if action == "admitted":
+                tracker.admitted(prev, x)
+            else:
+                tracker.replaced(state)
+            tracker.maybe_resync(state)
+            if rule.observe(tracker.value):
                 stopped_at = i
     t_total = time.time() - t_total
 
@@ -160,6 +178,10 @@ def nystrom_main(args) -> dict:
         "points": args.points, "m_final": int(state.kpca.m),
         "rows": int(state.Knm.shape[0]),
         "trace_error": err, "stopped_at": stopped_at,
+        # Drift is only meaningful while the tracker was live: after the
+        # stopping rule fires it freezes (rows keep arriving untracked).
+        "tracker_drift": (abs(tracker.value - err)
+                          if tracker and not rule.sufficient else None),
         "total_s": t_total,
         "finite": bool(jnp.isfinite(state.kpca.L).all()
                        and np.isfinite(err)),

@@ -271,3 +271,41 @@ def test_bucketed_kpca_midstream_resume_equivalence(tmp_path):
                     jax.tree.leaves(resumed.state)):
         np.testing.assert_allclose(np.asarray(a, np.float64),
                                    np.asarray(b, np.float64), atol=1e-12)
+
+
+def test_windowed_kpca_midblock_resume_equivalence(tmp_path):
+    """Save a windowed stream BETWEEN window_block calls (steady state,
+    scanned evict+ingest already past), restore, continue with more
+    blocks: equals the uninterrupted blocked run — the scanned path
+    keeps the arrival ring checkpoint-portable exactly like the
+    per-point path (ISSUE satellite)."""
+    from repro.core import inkpca, kernels_fn as kf
+
+    rng = np.random.default_rng(27)
+    X = rng.normal(size=(36, 4))
+    spec = kf.KernelSpec(name="rbf", sigma=5.0)
+
+    def make_stream():
+        return inkpca.KPCAStream(jnp.asarray(X[:4]), 16, spec,
+                                 adjusted=True, dtype=jnp.float64,
+                                 dispatch="bucketed", min_bucket=8,
+                                 window=8)
+
+    straight = make_stream()
+    straight.update_block(jnp.asarray(X[4:20]))     # growth + steady scan
+    straight.update_block(jnp.asarray(X[20:36]))
+
+    part = make_stream()
+    part.update_block(jnp.asarray(X[4:20]))
+    save_checkpoint(str(tmp_path), 20, part.state)
+
+    resumed = make_stream()                          # "crash": fresh stream
+    resumed.state = load_checkpoint(str(tmp_path), 20,
+                                    jax.eval_shape(lambda: part.state))
+    assert int(resumed.state.clock) == 20
+    resumed.update_block(jnp.asarray(X[20:36]))
+
+    for a, b in zip(jax.tree.leaves(straight.state),
+                    jax.tree.leaves(resumed.state)):
+        np.testing.assert_allclose(np.asarray(a, np.float64),
+                                   np.asarray(b, np.float64), atol=1e-12)

@@ -247,3 +247,111 @@ def test_sharded_downdate_then_update_roundtrip():
     np.testing.assert_allclose(
         np.asarray(rankone.reconstruct(Ls, Us, ms)),
         np.asarray(rankone.reconstruct(st.L, st.U, st.m)), atol=1e-10)
+
+
+@pytest.mark.parametrize("plan", [
+    eng.UpdatePlan(),
+    eng.UpdatePlan(dispatch="bucketed", min_bucket=8),
+    eng.UpdatePlan(matmul="jnp2", merge_fallback=True),
+], ids=lambda p: f"{p.dispatch}-{p.matmul}")
+def test_sharded_evict_arbitrary_row_matches_local(plan):
+    """make_sharded_evict (in-graph boundary permutation: ppermute + one
+    psum gather along the replicated axis) == Engine.downdate of the SAME
+    arbitrary row — no host round-trip decides the victim (the ROADMAP
+    sharded-boundary-permutation follow-up)."""
+    from repro.core import distributed as dkpca
+
+    engine, st = _sharded_setup()
+    mesh = jax.make_mesh((1,), ("data",))
+    ev = dkpca.make_sharded_evict(mesh, plan=plan)
+    for victim in (0, 3, int(st.m) - 1):
+        a = kf.kernel_row(st.X[victim], st.X, spec=SPEC)
+        a = jnp.where(rankone.active_mask(16, st.m), a, 0.0)
+        Ls, Us, ms = ev(st.L, st.U, a, a[victim], jnp.int32(victim), st.m)
+        ref = engine.downdate(st, victim)
+        assert int(ms) == int(ref.m)
+        np.testing.assert_allclose(np.asarray(Ls[:int(ms)]),
+                                   np.asarray(ref.L[:int(ms)]), atol=1e-10)
+        np.testing.assert_allclose(
+            np.asarray(rankone.reconstruct(Ls, Us, ms)),
+            np.asarray(rankone.reconstruct(ref.L, ref.U, ref.m)),
+            atol=1e-10)
+
+
+@pytest.mark.parametrize("dispatch", ["fixed", "bucketed"])
+def test_sharded_window_block_matches_local_windowed_stream(dispatch):
+    """make_sharded_window_block (scan of in-graph evict+ingest steps,
+    victim from the replicated arrival ring) == the local windowed
+    stream, state and ring both."""
+    from repro.core import distributed as dkpca
+
+    rng = np.random.default_rng(43)
+    X = rng.normal(size=(12, 4))
+    W = 8
+    plan = (eng.UpdatePlan(dispatch="bucketed", min_bucket=8)
+            if dispatch == "bucketed" else eng.UpdatePlan())
+    stream = inkpca.KPCAStream(jnp.asarray(X[:4]), 16, SPEC,
+                               adjusted=False, dtype=jnp.float64,
+                               plan=plan, window=W)
+    for i in range(4, 12):                       # window exactly full
+        stream.update(jnp.asarray(X[i]))
+    ws = stream.state
+    assert int(ws.kpca.m) == W
+    xs = jnp.asarray(rng.normal(size=(5, 4)))
+    mesh = jax.make_mesh((1,), ("data",))
+    wb = dkpca.make_sharded_window_block(mesh, SPEC, plan=plan)
+    L2, U2, X2, ages2, clock2 = wb(ws.kpca.L, ws.kpca.U, ws.kpca.X,
+                                   ws.ages, ws.clock, xs, ws.kpca.m)
+    for t in range(5):
+        stream.update(xs[t])
+    ref = stream.state
+    np.testing.assert_allclose(np.asarray(L2[:W]),
+                               np.asarray(ref.kpca.L[:W]), atol=1e-10)
+    np.testing.assert_allclose(
+        np.asarray(rankone.reconstruct(L2, U2, jnp.int32(W))),
+        np.asarray(rankone.reconstruct(ref.kpca.L, ref.kpca.U,
+                                       ref.kpca.m)), atol=1e-10)
+    np.testing.assert_allclose(np.asarray(X2), np.asarray(ref.kpca.X),
+                               atol=1e-12)
+    np.testing.assert_array_equal(np.asarray(ages2), np.asarray(ref.ages))
+    assert int(clock2) == int(ref.clock)
+
+
+def test_sharded_window_block_rebases_near_sentinel():
+    """A sharded window block whose clock span would reach the age
+    sentinel must rebase the ring at block entry (traced, like the
+    local hoisted check) and keep evicting in true FIFO order."""
+    from repro.core import distributed as dkpca
+    from repro.core import window as wnd
+
+    rng = np.random.default_rng(47)
+    X = rng.normal(size=(12, 4))
+    W = 8
+    stream = inkpca.KPCAStream(jnp.asarray(X[:4]), 16, SPEC,
+                               adjusted=False, dtype=jnp.float64, window=W)
+    for i in range(4, 12):
+        stream.update(jnp.asarray(X[i]))
+    ws = stream.state
+    sent = wnd.age_sentinel(ws.ages.dtype)
+    shift = (sent - 3) - int(ws.clock)         # block of 5 would collide
+    aged = ws._replace(ages=jnp.where(ws.ages == sent, sent,
+                                      ws.ages + shift),
+                       clock=ws.clock + shift)
+    xs = jnp.asarray(rng.normal(size=(5, 4)))
+    mesh = jax.make_mesh((1,), ("data",))
+    wb = dkpca.make_sharded_window_block(mesh, SPEC, plan=eng.UpdatePlan())
+    L2, U2, X2, ages2, clock2 = wb(aged.kpca.L, aged.kpca.U, aged.kpca.X,
+                                   aged.ages, aged.clock, xs, aged.kpca.m)
+    assert int(clock2) < sent // 2             # rebased at block entry
+    # eigensystem still matches the local windowed stream (rebasing never
+    # touches the kpca state), and the FIFO order survives
+    stream.state = aged
+    for t in range(5):
+        stream.update(xs[t])
+    ref = stream.state
+    np.testing.assert_allclose(
+        np.asarray(rankone.reconstruct(L2, U2, jnp.int32(W))),
+        np.asarray(rankone.reconstruct(ref.kpca.L, ref.kpca.U,
+                                       ref.kpca.m)), atol=1e-10)
+    np.testing.assert_array_equal(np.argsort(np.asarray(ages2[:W])),
+                                  np.argsort(np.asarray(ref.ages[:W])))

@@ -345,3 +345,141 @@ def test_grow_rows_argument_validation():
                                  dtype=jnp.float64)
     with pytest.raises(ValueError):
         nystrom.observe_rows(fixed, X[3], spec)
+
+
+# ------------------------------------------- incremental trace_error ----
+def test_admission_trace_delta_matches_exact_recompute():
+    """Δtrace from the Schur rank-one identity (O(n·m)) must equal the
+    before/after difference of the exact O(n·m²) trace_error."""
+    from repro.core import engine as eng
+
+    rng = np.random.default_rng(43)
+    d = 3
+    spec = kf.KernelSpec(name="rbf", sigma=4.0)
+    engine = eng.Engine(spec, eng.UpdatePlan(), adjusted=False)
+    x0 = jnp.asarray(rng.normal(size=(4, d)))
+    state = nystrom.init_nystrom(None, x0, 16, spec, grow_rows=True,
+                                 dtype=jnp.float64)
+    state = nystrom.observe_rows(state, jnp.asarray(rng.normal(size=(20, d))),
+                                 spec)
+    for _ in range(5):
+        x = jnp.asarray(rng.normal(size=(d,)))
+        state = nystrom.observe_rows(state, x, spec)
+        before = float(nystrom.trace_error(state, spec))
+        delta, res = nystrom.admission_trace_delta(state, x, spec)
+        state = engine.add_landmark(state, None, x)
+        after = float(nystrom.trace_error(state, spec))
+        assert float(res) > 0
+        np.testing.assert_allclose(before - after, float(delta), atol=1e-9)
+
+
+def test_trace_error_tracker_drift_vs_exact_every_k():
+    """Drive the full lifecycle (observe/admit/replace/reject) through a
+    TraceErrorTracker and compare against the exact recompute every K
+    admissions — the incremental value must not drift (ISSUE satellite)."""
+    from repro.core import engine as eng
+
+    rng = np.random.default_rng(47)
+    d, K_CHECK = 3, 4
+    spec = kf.KernelSpec(name="rbf", sigma=4.0)
+    engine = eng.Engine(spec, eng.UpdatePlan(dispatch="bucketed",
+                                             min_bucket=8,
+                                             landmark_policy="leverage"),
+                        adjusted=False)
+    x0 = jnp.asarray(rng.normal(size=(4, d)))
+    state = nystrom.init_nystrom(None, x0, 16, spec, grow_rows=True,
+                                 dtype=jnp.float64)
+    tracker = nystrom.TraceErrorTracker(state, spec, resync_every=1000)
+    admits, checked, actions = 0, 0, set()
+    for i in range(60):
+        x = jnp.asarray(rng.normal(size=(d,)))
+        tracker.observe(state, x)
+        state = nystrom.observe_rows(state, x, spec)
+        prev = state
+        state, action = engine.offer_landmark(state, x, budget=10)
+        actions.add(action)
+        if action == "admitted":
+            tracker.admitted(prev, x)
+            admits += 1
+        elif action == "replaced":
+            tracker.replaced(state)
+        if action == "admitted" and admits % K_CHECK == 0:
+            exact = float(nystrom.trace_error(state, spec))
+            np.testing.assert_allclose(tracker.value, exact, atol=1e-8)
+            checked += 1
+    assert checked >= 1 and "admitted" in actions
+    # the whole run stays in lockstep with the exact value, not just the
+    # checked admissions
+    np.testing.assert_allclose(tracker.value,
+                               float(nystrom.trace_error(state, spec)),
+                               atol=1e-8)
+
+
+def test_trace_error_tracker_periodic_resync_fires():
+    from repro.core import engine as eng
+
+    rng = np.random.default_rng(53)
+    d = 3
+    spec = kf.KernelSpec(name="rbf", sigma=4.0)
+    engine = eng.Engine(spec, eng.UpdatePlan(), adjusted=False)
+    x0 = jnp.asarray(rng.normal(size=(4, d)))
+    state = nystrom.init_nystrom(None, x0, 16, spec, grow_rows=True,
+                                 dtype=jnp.float64)
+    tracker = nystrom.TraceErrorTracker(state, spec, resync_every=2)
+    for _ in range(4):
+        x = jnp.asarray(rng.normal(size=(d,)))
+        tracker.observe(state, x)
+        state = nystrom.observe_rows(state, x, spec)
+        prev = state
+        state = engine.add_landmark(state, None, x)
+        tracker.admitted(prev, x)
+        tracker.maybe_resync(state)
+    assert not tracker._pending_resync
+    np.testing.assert_allclose(tracker.value,
+                               float(nystrom.trace_error(state, spec)),
+                               atol=1e-10)
+
+
+def test_trace_error_fallbacks_without_x_all():
+    """Fixed-row states without x_all must fall back to the stored
+    landmark rows (n == m) or the constant kernel diagonal instead of
+    raising; only the genuinely underdetermined case raises."""
+    from repro.core import engine as eng
+
+    rng = np.random.default_rng(59)
+    d = 3
+    poly = kf.KernelSpec(name="poly", degree=2, coef0=1.0)
+    x_all = jnp.asarray(rng.normal(size=(6, d)))
+    epoly = eng.Engine(poly, eng.UpdatePlan(), adjusted=False)
+    st = nystrom.init_nystrom(x_all, x_all[:2], 16, poly, dtype=jnp.float64)
+    for i in range(2, 6):
+        st = epoly.add_landmark(st, x_all, x_all[i])
+    # n == m: every observed row is a stored landmark — covered
+    np.testing.assert_allclose(
+        float(nystrom.trace_error(st, poly)),
+        float(nystrom.trace_error(st, poly, x_all)), atol=1e-12)
+    # constant-diagonal kernel: covered at any n
+    rbf = kf.KernelSpec(name="rbf", sigma=3.0)
+    x_all2 = jnp.asarray(rng.normal(size=(9, d)))
+    st2 = nystrom.init_nystrom(x_all2, x_all2[:3], 16, rbf,
+                               dtype=jnp.float64)
+    np.testing.assert_allclose(
+        float(nystrom.trace_error(st2, rbf)),
+        float(nystrom.trace_error(st2, rbf, x_all2)), atol=1e-12)
+    # non-constant diagonal + rows beyond the landmarks: underdetermined
+    st3 = nystrom.init_nystrom(x_all2, x_all2[:3], 16, poly,
+                               dtype=jnp.float64)
+    with pytest.raises(ValueError):
+        nystrom.trace_error(st3, poly)
+    # n == m but a landmark came from OUTSIDE the observed rows: the
+    # stored points do NOT cover the stream — the count coincidence must
+    # not silently mix the two sets (Knm consistency check catches it)
+    st4 = nystrom.init_nystrom(x_all, x_all[:2], 16, poly,
+                               dtype=jnp.float64)
+    for i in range(2, 5):
+        st4 = epoly.add_landmark(st4, x_all, x_all[i])
+    st4 = epoly.add_landmark(st4, x_all,
+                             jnp.asarray(rng.normal(size=(d,))))
+    assert int(st4.kpca.m) == x_all.shape[0]          # n == m holds...
+    with pytest.raises(ValueError):
+        nystrom.trace_error(st4, poly)                # ...but still raises

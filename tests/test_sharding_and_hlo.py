@@ -345,3 +345,79 @@ print("RESULT:" + str({
     assert errs["err_L"] < 1e-10, errs
     assert errs["err_U"] < 1e-8, errs
     assert errs["err_pair_L"] < 1e-8, errs
+
+
+def test_sharded_evict_and_window_multidevice_subprocess():
+    """P=2 end-to-end: arbitrary-row sharded eviction (in-graph boundary
+    permutation) and the scanned sharded window block on a REAL
+    two-device mesh must match the local decremental path (ISSUE
+    acceptance: sharded arbitrary-row eviction == local downdate)."""
+    import os
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    script = r"""
+import numpy as np, jax, jax.numpy as jnp
+jax.config.update("jax_enable_x64", True)
+from repro.core import distributed as dkpca, engine as eng, inkpca, \
+    kernels_fn as kf, rankone
+assert jax.device_count() == 2
+SPEC = kf.KernelSpec(name="rbf", sigma=5.0)
+rng = np.random.default_rng(37)
+X = rng.normal(size=(12, 4))
+engine = eng.Engine(SPEC, eng.UpdatePlan(), adjusted=False)
+st = inkpca.init_state(jnp.asarray(X[:4]), 16, SPEC, adjusted=False,
+                       dtype=jnp.float64)
+for i in range(4, 11):
+    st = engine.update(st, jnp.asarray(X[i]))
+mesh = jax.make_mesh((2,), ("data",))
+errs = {}
+ev = dkpca.make_sharded_evict(
+    mesh, plan=eng.UpdatePlan(dispatch="bucketed", min_bucket=8))
+victim = 3                                         # interior row
+a = kf.kernel_row(st.X[victim], st.X, spec=SPEC)
+a = jnp.where(rankone.active_mask(16, st.m), a, 0.0)
+Ls, Us, ms = ev(st.L, st.U, a, a[victim], jnp.int32(victim), st.m)
+ref = engine.downdate(st, victim)
+errs["evict_L"] = float(jnp.abs(Ls[:int(ms)] - ref.L[:int(ms)]).max())
+errs["evict_K"] = float(jnp.abs(
+    rankone.reconstruct(Ls, Us, ms)
+    - rankone.reconstruct(ref.L, ref.U, ref.m)).max())
+W = 8
+stream = inkpca.KPCAStream(jnp.asarray(X[:4]), 16, SPEC, adjusted=False,
+                           dtype=jnp.float64, window=W)
+for i in range(4, 12):
+    stream.update(jnp.asarray(X[i]))
+ws = stream.state
+xs = jnp.asarray(rng.normal(size=(5, 4)))
+wb = dkpca.make_sharded_window_block(
+    mesh, SPEC, plan=eng.UpdatePlan(dispatch="bucketed", min_bucket=8))
+L2, U2, X2, ages2, clock2 = wb(ws.kpca.L, ws.kpca.U, ws.kpca.X, ws.ages,
+                               ws.clock, xs, ws.kpca.m)
+for t in range(5):
+    stream.update(xs[t])
+r = stream.state
+errs["win_L"] = float(jnp.abs(L2[:W] - r.kpca.L[:W]).max())
+errs["win_K"] = float(jnp.abs(
+    rankone.reconstruct(L2, U2, jnp.int32(W))
+    - rankone.reconstruct(r.kpca.L, r.kpca.U, r.kpca.m)).max())
+errs["win_ages"] = int(jnp.abs(ages2 - r.ages).max())
+print("RESULT:" + str(errs))
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2")
+    env["PYTHONPATH"] = (str(Path(__file__).resolve().parent.parent / "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT:")][-1]
+    errs = eval(line[len("RESULT:"):])
+    assert errs["evict_L"] < 1e-10, errs
+    assert errs["evict_K"] < 1e-10, errs
+    assert errs["win_L"] < 1e-10, errs
+    assert errs["win_K"] < 1e-10, errs
+    assert errs["win_ages"] == 0, errs

@@ -237,3 +237,170 @@ def test_monitor_explicit_window_below_capacity():
     mon.observe(rng.normal(size=(30, 5)))
     assert mon.stats()["m"] == 12
     assert mon.stats()["seen"] == 30
+
+
+# ----------------------------------------------- steady-state scan ------
+@pytest.mark.parametrize("adjusted", [False, True])
+@pytest.mark.parametrize("dispatch", ["fixed", "bucketed"])
+def test_window_block_matches_pointwise_every_step(adjusted, dispatch):
+    """update_block on a windowed stream (ONE scanned dispatch at steady
+    state) must equal the per-point windowed loop at EVERY step — cuts
+    cover pure growth, the growth→steady transition inside a block, and
+    pure steady state (ISSUE acceptance, f64 ≤ 1e-10)."""
+    rng = np.random.default_rng(61)
+    X = rng.normal(size=(40, 4))
+    W = 8
+
+    def mk():
+        return inkpca.KPCAStream(jnp.asarray(X[:4]), 16, SPEC,
+                                 adjusted=adjusted, dtype=jnp.float64,
+                                 dispatch=dispatch, min_bucket=8, window=W)
+
+    ref, blk = mk(), mk()
+    i = 4
+    for cut in (7, 13, 25, 40):     # growth-only, transition, steady, steady
+        for t in range(i, cut):
+            ref.update(jnp.asarray(X[t]))
+        blk.partial_fit_block(jnp.asarray(X[i:cut]))
+        i = cut
+        a, b = ref.state, blk.state
+        assert int(a.kpca.m) == int(b.kpca.m)
+        np.testing.assert_allclose(np.asarray(b.kpca.L),
+                                   np.asarray(a.kpca.L), atol=1e-10)
+        np.testing.assert_allclose(
+            np.asarray(rankone.reconstruct(b.kpca.L, b.kpca.U, b.kpca.m)),
+            np.asarray(rankone.reconstruct(a.kpca.L, a.kpca.U, a.kpca.m)),
+            atol=1e-10)
+        np.testing.assert_array_equal(np.asarray(b.ages), np.asarray(a.ages))
+        assert int(b.clock) == int(a.clock)
+        np.testing.assert_allclose(np.asarray(b.kpca.X),
+                                   np.asarray(a.kpca.X), atol=1e-12)
+
+
+def test_window_block_single_dispatch_at_steady_state(monkeypatch):
+    """A steady-state block must fold through exactly ONE scanned-chunk
+    dispatch — no per-point host-side evict decision, no per-point
+    rebase read (the zero-host-syncs-in-block acceptance)."""
+    rng = np.random.default_rng(67)
+    X = rng.normal(size=(30, 3))
+    stream = inkpca.KPCAStream(jnp.asarray(X[:4]), 16, SPEC, adjusted=True,
+                               dtype=jnp.float64, dispatch="bucketed",
+                               min_bucket=8, window=8)
+    stream.update_block(jnp.asarray(X[4:12]))       # fill the window
+    assert int(stream.kpca_state.m) == 8
+    calls = {"scan": 0, "ingest": 0}
+    real_chunk = eng._window_scan_chunk
+
+    def counting_chunk(*a, **k):
+        calls["scan"] += 1
+        return real_chunk(*a, **k)
+
+    real_ingest = wnd.ingest
+
+    def counting_ingest(*a, **k):
+        calls["ingest"] += 1
+        return real_ingest(*a, **k)
+
+    monkeypatch.setattr(eng, "_window_scan_chunk", counting_chunk)
+    monkeypatch.setattr(wnd, "ingest", counting_ingest)
+    stream.update_block(jnp.asarray(X[12:30]))      # 18 steady-state steps
+    assert calls["scan"] == 1
+    assert calls["ingest"] == 0
+    assert int(stream.kpca_state.m) == 8
+
+
+def test_engine_window_step_matches_ingest():
+    """The fused single-step spelling equals window.ingest at steady
+    state (and append-only below the window)."""
+    rng = np.random.default_rng(71)
+    X = rng.normal(size=(20, 3))
+    engine = eng.Engine(SPEC, eng.UpdatePlan(dispatch="bucketed",
+                                             min_bucket=8), adjusted=True)
+    ws_a = wnd.init_window(jnp.asarray(X[:4]), 16, SPEC, adjusted=True,
+                           dtype=jnp.float64)
+    ws_b = ws_a
+    for t in range(4, 20):
+        ws_a = wnd.ingest(engine, ws_a, jnp.asarray(X[t]), window=6)
+        ws_b = engine.window_step(ws_b, jnp.asarray(X[t]), window=6)
+        np.testing.assert_allclose(np.asarray(ws_b.kpca.L),
+                                   np.asarray(ws_a.kpca.L), atol=1e-10)
+        np.testing.assert_array_equal(np.asarray(ws_b.ages),
+                                      np.asarray(ws_a.ages))
+        assert int(ws_b.clock) == int(ws_a.clock)
+    np.testing.assert_allclose(
+        np.asarray(rankone.reconstruct(ws_b.kpca.L, ws_b.kpca.U,
+                                       ws_b.kpca.m)),
+        np.asarray(rankone.reconstruct(ws_a.kpca.L, ws_a.kpca.U,
+                                       ws_a.kpca.m)), atol=1e-10)
+
+
+@pytest.mark.parametrize("cohorts", ["max", "bucket", "bucket-padded"])
+def test_streambatch_window_block_matches_per_tenant_loop(cohorts):
+    """Windowed StreamBatch.update_block (per-cohort steady-state scan)
+    == B independent per-point windowed streams, for every cohort
+    geometry (ISSUE acceptance)."""
+    rng = np.random.default_rng(73)
+    B, d, W = 3, 4, 6
+    x0 = jnp.asarray(rng.normal(size=(B, 4, d)))
+    xs = jnp.asarray(rng.normal(size=(14, B, d)))
+    plan = eng.UpdatePlan(dispatch="bucketed", min_bucket=8)
+    batch = eng.StreamBatch(x0, 16, SPEC, plan=plan, adjusted=True,
+                            dtype=jnp.float64, window=W, cohorts=cohorts)
+    batch.update_block(xs)
+    streams = [inkpca.KPCAStream(x0[i], 16, SPEC, adjusted=True,
+                                 dtype=jnp.float64, plan=plan, window=W)
+               for i in range(B)]
+    for t in range(14):
+        for i, s in enumerate(streams):
+            s.update(xs[t, i])
+    sts = batch.states
+    for i, s in enumerate(streams):
+        ref = s.kpca_state
+        m = int(ref.m)
+        assert int(sts.m[i]) == m == W
+        np.testing.assert_allclose(np.asarray(sts.L[i][:m]),
+                                   np.asarray(ref.L[:m]), atol=1e-10)
+        np.testing.assert_allclose(
+            np.asarray(rankone.reconstruct(sts.L[i], sts.U[i], sts.m[i])),
+            np.asarray(rankone.reconstruct(ref.L, ref.U, ref.m)),
+            atol=1e-10)
+
+
+def test_streambatch_window_block_then_update_consistent():
+    """Interleaving block and per-point windowed updates must keep host
+    bookkeeping (m_host/ceiling) and device state in lockstep."""
+    rng = np.random.default_rng(79)
+    B, d, W = 2, 3, 6
+    x0 = jnp.asarray(rng.normal(size=(B, 4, d)))
+    batch = eng.StreamBatch(x0, 8, SPEC, adjusted=False, dtype=jnp.float64,
+                            window=W)
+    batch.update_block(jnp.asarray(rng.normal(size=(5, B, d))))
+    batch.update(jnp.asarray(rng.normal(size=(B, d))))
+    batch.update_block(jnp.asarray(rng.normal(size=(4, B, d))))
+    sts = batch.states
+    assert [int(v) for v in np.asarray(sts.m)] == [W, W]
+    assert bool(jnp.isfinite(sts.L).all())
+
+
+def test_window_block_hoisted_rebase_preserves_order():
+    """A block whose clock span crosses the sentinel threshold rebases
+    ONCE up front and keeps matching the trailing batch window."""
+    rng = np.random.default_rng(83)
+    stream = inkpca.KPCAStream(jnp.asarray(rng.normal(size=(4, 3))), 8,
+                               SPEC, adjusted=False, dtype=jnp.float64,
+                               window=6)
+    for _ in range(8):
+        stream.update(jnp.asarray(rng.normal(size=3)))
+    st = stream.state
+    sent = wnd.age_sentinel(st.ages.dtype)
+    shift = (sent - 4) - int(st.clock)       # block of 8 crosses sent-1
+    stream.state = st._replace(ages=jnp.where(st.ages == sent, sent,
+                                              st.ages + shift),
+                               clock=st.clock + shift)
+    stream.update_block(jnp.asarray(rng.normal(size=(8, 3))))
+    st2 = stream.state
+    assert int(st2.clock) < sent // 2        # rebased once, up front
+    Keff = _batch_eff(np.asarray(st2.kpca.X[:6]), False)
+    rec = np.asarray(rankone.reconstruct(st2.kpca.L, st2.kpca.U,
+                                         st2.kpca.m))[:6, :6]
+    np.testing.assert_allclose(rec, Keff, atol=1e-9)
