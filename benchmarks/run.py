@@ -8,7 +8,8 @@
                                 vs bucketed dispatch (BENCH_update_scaling.json)
   multitenant     (supporting)  vmapped multi-tenant ingest vs a Python loop
                                 over B streams (BENCH_multitenant.json)
-  roofline        assignment    dry-run roofline table aggregation
+  roofline        (supporting)  per-kernel achieved-vs-peak bandwidth and
+                                the fused-vs-unfused gates (BENCH_roofline.json)
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
 """
@@ -41,7 +42,7 @@ def main() -> None:
             quick=args.quick),
         "multitenant": lambda: bench_multitenant.main(
             rounds=10 if args.quick else 20),
-        "roofline": lambda: roofline.main(),
+        "roofline": lambda: roofline.main(quick=args.quick),
     }
     failures = []
     for name, fn in benches.items():

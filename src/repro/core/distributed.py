@@ -100,13 +100,18 @@ def _rank_one_update_sharded(L, U_local, v_local, sigma, m, *,
 def _rank_one_update_pair_sharded(L, U_local, v1_local, sigma1, v2_local,
                                   sigma2, m, *, axis: str,
                                   plan: eng.UpdatePlan,
-                                  rows_full: int | None = None):
+                                  rows_full: int | None = None,
+                                  Z: Array | None = None):
     """Fused ±sigma pair under shard_map, with a collective-balanced
     merge fallback.
 
     ONE psum carries both z vectors; z₂ = U₁ᵀv₂ for the fused path comes
-    from the Cauchy transpose-matvec (replicated, no collective).  When
-    ``plan.merge_fallback`` is set, a dlaed2 cluster-merge firing on
+    from the Cauchy transpose-matvec (replicated, no collective).  A
+    caller that already holds the replicated (M, 2) projections — the
+    fused k-row ingest psums them out of its own kernel pass — supplies
+    ``Z`` and the psum here is skipped (a trace-time decision, identical
+    on every device, so the collective schedule stays deterministic).
+    When ``plan.merge_fallback`` is set, a dlaed2 cluster-merge firing on
     either update re-routes the pair through the sequential two-update
     pipeline — and to keep a multi-device mesh deadlock-free the second
     psum is ALWAYS issued (on the post-update-1 row block, which is the
@@ -115,8 +120,9 @@ def _rank_one_update_pair_sharded(L, U_local, v1_local, sigma1, v2_local,
     """
     r0 = jax.lax.axis_index(axis) * (rows_full or U_local.shape[0])
     kw = _solve_kwargs(plan, L.dtype)
-    Z = jax.lax.psum(U_local.T @ jnp.stack([v1_local, v2_local], axis=1),
-                     axis)
+    if Z is None:
+        Z = jax.lax.psum(
+            U_local.T @ jnp.stack([v1_local, v2_local], axis=1), axis)
     pf = rankone._pair_solve(L, Z[:, 0], sigma1, Z[:, 1], sigma2, m, **kw)
 
     def _fused(U):
@@ -489,23 +495,52 @@ def _window_step_sharded(L, U_local, X, ages, clock, x_new, m, *,
     ages1 = ages[order]
 
     # --- ingest: expansion + forward ±sigma pair (Algorithm 1) ---
-    a_new = kf.kernel_row(x_new, X1, spec=spec)
-    a_new = jnp.where(rankone.active_mask(M, m1), a_new, 0.0)
     k_new = kf.gram_block(x_new[None], x_new[None], spec=spec)[0, 0]
     kn = jnp.maximum(k_new, jnp.finfo(dtype).tiny)
-    # expand_eigensystem only writes L and permutes U columns — both
-    # device-local on a row block, so the local helper is reused as-is.
-    L2, U2, m2 = rankone.expand_eigensystem(L1, U1, kn / 4.0, m1)
-    v1 = a_new.at[m1].set(kn / 2.0)
-    v2 = a_new.at[m1].set(kn / 4.0)
     sigma = 4.0 / kn
     R = U_local.shape[0]
     r0 = jax.lax.axis_index(axis) * (rows_full or R)
-    v1_l = jax.lax.dynamic_slice(v1, (r0,), (R,))
-    v2_l = jax.lax.dynamic_slice(v2, (r0,), (R,))
-    L3, U3 = _rank_one_update_pair_sharded(L2, U2, v1_l, sigma, v2_l,
-                                           -sigma, m2, axis=axis, plan=plan,
-                                           rows_full=rows_full)
+    if plan.fuse_krow:
+        # Fused prologue, rectangular per-shard: ONE pass over this
+        # device's (R, M) row block of U produces its slice of the masked
+        # kernel row AND the partial projection Uᵀa; one psum replaces
+        # the pair's own z collective (see _rank_one_update_pair_sharded).
+        # Shards whose rows lie beyond a bucket slice contribute zero
+        # (their global rows are >= m, masked inside the kernel).
+        from repro.kernels.rbf_gram import ops as kops
+
+        X_loc = jax.lax.dynamic_slice(
+            X1, (r0, jnp.zeros((), r0.dtype)), (R, X1.shape[1]))
+        a_loc, Pp = kops.krow_project(U1, X_loc, x_new,
+                                      jnp.zeros((R, 0), dtype), m1, r0,
+                                      spec=spec)
+        p = jax.lax.psum(Pp[:, 0], axis)
+        L2, perm, m2 = rankone.expand_eigensystem_perm(L1, kn / 4.0, m1)
+        U2 = U1[:, perm]
+        # Uᵀe_{m1} = e_{m1} pre-expansion (identity column), so the
+        # expanded projections are p with slot m1 overwritten, permuted.
+        Z = jnp.stack([p.at[m1].set(kn / 2.0)[perm],
+                       p.at[m1].set(kn / 4.0)[perm]], axis=1)
+        gids = jnp.arange(R) + r0
+        v1_l = jnp.where(gids == m1, kn / 2.0, a_loc)
+        v2_l = jnp.where(gids == m1, kn / 4.0, a_loc)
+        L3, U3 = _rank_one_update_pair_sharded(
+            L2, U2, v1_l, sigma, v2_l, -sigma, m2, axis=axis, plan=plan,
+            rows_full=rows_full, Z=Z)
+    else:
+        a_new = kf.kernel_row(x_new, X1, spec=spec)
+        a_new = jnp.where(rankone.active_mask(M, m1), a_new, 0.0)
+        # expand_eigensystem only writes L and permutes U columns — both
+        # device-local on a row block, so the local helper is reused as-is.
+        L2, U2, m2 = rankone.expand_eigensystem(L1, U1, kn / 4.0, m1)
+        v1 = a_new.at[m1].set(kn / 2.0)
+        v2 = a_new.at[m1].set(kn / 4.0)
+        v1_l = jax.lax.dynamic_slice(v1, (r0,), (R,))
+        v2_l = jax.lax.dynamic_slice(v2, (r0,), (R,))
+        L3, U3 = _rank_one_update_pair_sharded(L2, U2, v1_l, sigma, v2_l,
+                                               -sigma, m2, axis=axis,
+                                               plan=plan,
+                                               rows_full=rows_full)
     X2 = jnp.where((idx == m1)[:, None], x_new[None, :].astype(X1.dtype), X1)
     ages2 = ages1.at[m1].set(clock)
     return L3, U3, X2, ages2, clock + 1

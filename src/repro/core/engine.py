@@ -96,6 +96,13 @@ class UpdatePlan(NamedTuple):
                     "leverage" (admit on projection residual, replace the
                     lowest-leverage landmark when at budget; see
                     ``nystrom.consider_landmark``)
+    fuse_krow:      produce each ingest's kernel row fused with its
+                    eigenbasis projection (``kernels/rbf_gram.krow_project``)
+                    instead of a standalone gram dispatch followed by the
+                    update's own Uᵀv pass — one read of U for the whole
+                    prologue.  Changes the traced graph (NOT normalized by
+                    ``kernel_plan``); numerics agree with the unfused
+                    reference to rotation tolerance.
     """
 
     method: str = "gu"
@@ -108,6 +115,7 @@ class UpdatePlan(NamedTuple):
     precise: bool = True
     window: int | None = None
     landmark_policy: str = "append"
+    fuse_krow: bool = False
 
     @property
     def fused(self) -> bool:
@@ -216,21 +224,27 @@ def masked_row(state, x_new: Array, spec: kf.KernelSpec
 
 
 def apply_pair(L: Array, U: Array, v1: Array, sigma1: Array, v2: Array,
-               sigma2: Array, m: Array, *, plan: UpdatePlan
+               sigma2: Array, m: Array, *, plan: UpdatePlan,
+               z1: Array | None = None, z2: Array | None = None
                ) -> tuple[Array, Array]:
     """Apply a ±sigma update pair under ``plan``: one fused double rotation
     (matmul 'jnp2'/'pallas2'; cond-guarded back to sequential when a
     cluster-merge fires and plan.merge_fallback is set) or two sequential
-    rank-one updates."""
+    rank-one updates.
+
+    ``z1``/``z2`` are optional precomputed Uᵀv₁/Uᵀv₂ in the CURRENT basis
+    (from the fused ingest kernel).  The fused pair consumes both; the
+    sequential spelling can only reuse z1 — z2 is stale after the first
+    rotation, so the second update recomputes its own projection."""
     iters = resolve_iters(plan.iters, L.dtype)
     if plan.fused:
         return rankone.rank_one_update_pair(
             L, U, v1, sigma1, v2, sigma2, m, method=plan.method,
             matmul=plan.inner_matmul, iters=iters, precise=plan.precise,
-            merge_fallback=plan.merge_fallback)
+            merge_fallback=plan.merge_fallback, z1=z1, z2=z2)
     L, U = rankone.rank_one_update(L, U, v1, sigma1, m, method=plan.method,
                                    matmul=plan.matmul, iters=iters,
-                                   precise=plan.precise)
+                                   precise=plan.precise, z=z1)
     return rankone.rank_one_update(L, U, v2, sigma2, m, method=plan.method,
                                    matmul=plan.matmul, iters=iters,
                                    precise=plan.precise)
@@ -264,12 +278,38 @@ def eigpairs(state) -> tuple[Array, Array]:
 
 
 def transform_state(state, x: Array, *, spec: kf.KernelSpec, adjusted: bool,
-                    n_components: int) -> Array:
+                    n_components: int, plan: UpdatePlan | None = None
+                    ) -> Array:
     """Project points on the leading kernel principal components (pure
-    function of the state — vmappable across tenants)."""
+    function of the state — vmappable across tenants).
+
+    With ``plan.fuse_krow`` the query gram is never materialized: the
+    fused ``nystrom_recon.transform_project`` kernel produces each K_q
+    tile in VMEM and contracts it against S = U_active / sqrt(lam) in the
+    same pass, returning (Y, rowsum).  The mean-adjusted centering is
+    then an affine post-correction of Y: with colsum = 1ᵀS (S rows >= m
+    vanish — active columns live on the active prefix) and
+    colproj = (K1/m) @ S,
+
+        Y_adj = Y − (rowsum/m)·colsumᵀ − 1·colprojᵀ + (S_sum/m²)·colsumᵀ
+
+    which equals centering the masked gram before projecting."""
     lam, vec = eigpairs(state)
     lam = lam[:n_components]
     vec = vec[:, :n_components]
+    denom = jnp.sqrt(jnp.maximum(lam, jnp.finfo(state.L.dtype).eps))
+    if plan is not None and plan.fuse_krow:
+        from repro.kernels.nystrom_recon import ops as nops
+        s_mat = (vec / denom[None, :]).astype(state.X.dtype)
+        y, rs = nops.transform_project(x, state.X, s_mat, state.m, spec=spec)
+        if adjusted:
+            mf = state.m.astype(state.L.dtype)
+            colsum = jnp.sum(s_mat, axis=0)
+            colproj = (state.K1 / mf) @ s_mat
+            grand = state.S / mf**2
+            y = (y - (rs / mf)[:, None] * colsum[None, :]
+                 - colproj[None, :] + grand * colsum[None, :])
+        return y
     krow = kf.gram_block(x.astype(state.X.dtype), state.X, spec=spec)
     mask = rankone.active_mask(state.X.shape[0], state.m)
     krow = jnp.where(mask[None, :], krow, 0.0)
@@ -280,21 +320,35 @@ def transform_state(state, x: Array, *, spec: kf.KernelSpec, adjusted: bool,
         grand = state.S / mf**2
         krow = jnp.where(mask[None, :],
                          krow - rowmean - colmean + grand, 0.0)
-    denom = jnp.sqrt(jnp.maximum(lam, jnp.finfo(state.L.dtype).eps))
     return (krow @ vec) / denom[None, :]
 
 
 # ------------------------------------------------------- jitted update fns --
+def _ingest(st, x_new: Array, spec: kf.KernelSpec, adjusted: bool,
+            plan: UpdatePlan):
+    """One Algorithm-1/2 ingest under ``plan`` — THE shared prologue of
+    every consumer (stream, scan, window, multi-tenant, Nyström).
+
+    ``plan.fuse_krow`` routes through ``inkpca.ingest_*``: the kernel row
+    is produced tile-by-tile fused with its eigenbasis projection
+    (``kernels/rbf_gram.krow_project``), so U is read once for the whole
+    prologue.  Otherwise the reference two-dispatch path runs: standalone
+    masked kernel row, then the update's own Uᵀv pass."""
+    from repro.core import inkpca
+    if plan.fuse_krow:
+        fn = inkpca.ingest_adjusted if adjusted else inkpca.ingest_unadjusted
+        return fn(st, x_new, spec=spec, plan=plan)
+    a, k_new = masked_row(st, x_new, spec)
+    fn = inkpca.update_adjusted if adjusted else inkpca.update_unadjusted
+    return fn(st, a, k_new, x_new, plan=plan)
+
+
 @partial(jax.jit, static_argnames=("spec", "adjusted", "plan"))
 def _scan_chunk(sub, xs: Array, spec: kf.KernelSpec, adjusted: bool,
                 plan: UpdatePlan):
     """Fixed-capacity scan over a chunk that fits inside one bucket."""
-    from repro.core import inkpca
-
     def step(st, x_new):
-        a, k_new = masked_row(st, x_new, spec)
-        fn = inkpca.update_adjusted if adjusted else inkpca.update_unadjusted
-        return fn(st, a, k_new, x_new, plan=plan), None
+        return _ingest(st, x_new, spec, adjusted, plan), None
 
     out, _ = jax.lax.scan(step, sub, xs)
     return out
@@ -304,12 +358,8 @@ def _scan_chunk(sub, xs: Array, spec: kf.KernelSpec, adjusted: bool,
 def _batched_update(states, xs: Array, spec: kf.KernelSpec,
                     adjusted: bool, plan: UpdatePlan):
     """One vmapped step: fold xs[i] into tenant i, all tenants active."""
-    from repro.core import inkpca
-
     def one(st, x):
-        a, k_new = masked_row(st, x, spec)
-        fn = inkpca.update_adjusted if adjusted else inkpca.update_unadjusted
-        return fn(st, a, k_new, x, plan=plan)
+        return _ingest(st, x, spec, adjusted, plan)
 
     return jax.vmap(one)(states, xs)
 
@@ -319,12 +369,8 @@ def _batched_update_masked(states, xs: Array, active: Array,
                            spec: kf.KernelSpec, adjusted: bool,
                            plan: UpdatePlan):
     """One vmapped step: fold xs[i] into tenant i where active[i]."""
-    from repro.core import inkpca
-
     def one(st, x, act):
-        a, k_new = masked_row(st, x, spec)
-        fn = inkpca.update_adjusted if adjusted else inkpca.update_unadjusted
-        new = fn(st, a, k_new, x, plan=plan)
+        new = _ingest(st, x, spec, adjusted, plan)
         return jax.tree.map(lambda n, o: jnp.where(act, n, o), new, st)
 
     return jax.vmap(one)(states, xs, active)
@@ -351,14 +397,9 @@ def _batched_scan_masked(states, xs: Array, active: Array,
                          plan: UpdatePlan):
     """Scan a (T, B, d) block with a T-constant tenant mask (used by
     padded cohorts, whose pad lanes must never advance)."""
-    from repro.core import inkpca
-
     def step(sts, x_row):
         def one(st, x, act):
-            a, k_new = masked_row(st, x, spec)
-            fn = (inkpca.update_adjusted if adjusted
-                  else inkpca.update_unadjusted)
-            new = fn(st, a, k_new, x, plan=plan)
+            new = _ingest(st, x, spec, adjusted, plan)
             return jax.tree.map(lambda n, o: jnp.where(act, n, o), new, st)
 
         return jax.vmap(one)(sts, x_row, active), None
@@ -385,7 +426,6 @@ def _window_scan_chunk(sub, ages: Array, clock: Array, xs: Array,
     the caller hoists the rebase check to once per block.
     """
     from repro.core import downdate as dd
-    from repro.core import inkpca
 
     def step(carry, x_new):
         st, ages, clock = carry
@@ -395,9 +435,7 @@ def _window_scan_chunk(sub, ages: Array, clock: Array, xs: Array,
         # No sentinel write for the evicted slot: at m ≡ W the freed
         # boundary row W−1 is exactly where the new point lands below.
         ages = ages[order]
-        a, k_new = masked_row(st, x_new, spec)
-        fn = inkpca.update_adjusted if adjusted else inkpca.update_unadjusted
-        st = fn(st, a, k_new, x_new, plan=plan)
+        st = _ingest(st, x_new, spec, adjusted, plan)
         ages = ages.at[st.m - 1].set(clock)            # new point's row
         return (st, ages, clock + 1), None
 
@@ -417,16 +455,12 @@ def _batched_window_scan_masked(states, xs: Array, active: Array,
     a fixed-shape scan — the windowed mirror of ``_batched_scan_masked``.
     """
     from repro.core import downdate as dd
-    from repro.core import inkpca
 
     def step(sts, x_row):
         def one(st, x, act):
             st_e = dd.downdate(st, jnp.zeros((), jnp.int32), spec,
                                adjusted=adjusted, plan=plan)
-            a, k_new = masked_row(st_e, x, spec)
-            fn = (inkpca.update_adjusted if adjusted
-                  else inkpca.update_unadjusted)
-            new = fn(st_e, a, k_new, x, plan=plan)
+            new = _ingest(st_e, x, spec, adjusted, plan)
             return jax.tree.map(lambda n, o: jnp.where(act, n, o), new, st)
 
         return jax.vmap(one)(sts, x_row, active), None
@@ -439,14 +473,9 @@ def _batched_window_scan_masked(states, xs: Array, active: Array,
 def _batched_scan(states, xs: Array, spec: kf.KernelSpec, adjusted: bool,
                   plan: UpdatePlan):
     """Scan a (T, B, d) block: T sequential steps, B tenants per step."""
-    from repro.core import inkpca
-
     def step(sts, x_row):
         def one(st, x):
-            a, k_new = masked_row(st, x, spec)
-            fn = (inkpca.update_adjusted if adjusted
-                  else inkpca.update_unadjusted)
-            return fn(st, a, k_new, x, plan=plan)
+            return _ingest(st, x, spec, adjusted, plan)
 
         return jax.vmap(one)(sts, x_row), None
 
@@ -475,11 +504,9 @@ class Engine:
         return bucket_for(need, capacity, self.plan.min_bucket)
 
     # ---- KPCA streaming ---------------------------------------------------
-    def _kpca_step(self, state, a, k_new, x_new):
-        from repro.core import inkpca
-        fn = (inkpca.update_adjusted if self.adjusted
-              else inkpca.update_unadjusted)
-        return fn(state, a, k_new, x_new, plan=self.plan.kernel_plan())
+    def _kpca_step(self, state, x_new):
+        return _ingest(state, x_new, self.spec, self.adjusted,
+                       self.plan.kernel_plan())
 
     def update(self, state, x_new: Array, *, min_rows: int = 0):
         """One streaming point through Algorithm 1/2 at bucket capacity.
@@ -492,8 +519,7 @@ class Engine:
         M = state.L.shape[0]
         Mb = self._bucket(M, max(int(state.m) + 1, min_rows))
         sub = slice_state(state, Mb) if Mb < M else state
-        a, k_new = masked_row(sub, x_new, self.spec)
-        sub = self._kpca_step(sub, a, k_new, x_new)
+        sub = self._kpca_step(sub, x_new)
         return scatter_state(state, sub) if Mb < M else sub
 
     def update_block(self, state, xs: Array, *, min_rows: int = 0):
@@ -1246,6 +1272,26 @@ class StreamBatch:
         self._ceiling += 1
         return self._sub
 
+    def _steady_window_scan(self, xs: Array, mask_host, plan: UpdatePlan):
+        """Fold a whole block of evict+ingest pairs for the lanes in
+        ``mask_host`` (each at m ≡ W) — one scanned dispatch per cohort
+        group; lanes outside the mask pass through untouched."""
+        if self._grouped:
+            self._regroup()
+            out = None
+            for grp in self._groups:
+                ga = self._group_mask(grp, mask_host)
+                if ga.any():
+                    grp["state"] = _batched_window_scan_masked(
+                        grp["state"], xs[:, grp["idx_pad"]],
+                        jnp.asarray(ga), self.spec, self.adjusted, plan)
+                    out = grp["state"]
+            return out if out is not None else self._groups[-1]["state"]
+        sub = self._working(max(int(self._m_host.max()), 1))
+        self._sub = _batched_window_scan_masked(
+            sub, xs, jnp.asarray(mask_host), self.spec, self.adjusted, plan)
+        return self._sub
+
     def _m_host_pending_check(self, act_host, evict=None) -> None:
         """Raise on capacity exhaustion BEFORE mutating any state.
         ``evict`` marks tenants whose ingest evicts first (window mode),
@@ -1274,33 +1320,31 @@ class StreamBatch:
         xs = jnp.asarray(xs)
         T = xs.shape[0]
         if self.window is not None:
-            out = None
-            t = 0
-            # Growth / mixed phase: some tenant below W — per-point steps
-            # (all tenants are active here, so every step closes the gap).
-            while t < T and int(self._m_host.min()) < self.window:
-                out = self.update(xs[t])
-                t += 1
-            if t == T:
-                return out
-            # Steady state: every tenant at m ≡ W, active counts frozen
-            # (evict+ingest nets zero), so no bucket crossing can occur
-            # inside the block — one scanned dispatch per group.
+            # Mixed-cohort windowed blocks: tenant lanes are disjoint, so
+            # the two phases split by LANE, not by time.  Tenants already
+            # sitting at m ≡ W fold the ENTIRE block through one scanned
+            # dispatch per group immediately (their active counts are
+            # frozen — evict+ingest nets zero, no bucket crossing can
+            # occur); only the growing lanes step point-by-point (each
+            # step may evict, a host-side dispatch decision), and once
+            # every grower reaches W their remaining steps scan too.  A
+            # mixed cohort no longer drags its steady majority through
+            # per-point dispatches.
             plan = self.plan.kernel_plan()
-            ones = np.ones(self.n_tenants, bool)
-            if self._grouped:
-                self._regroup()
-                for grp in self._groups:
-                    ga = self._group_mask(grp, ones)
-                    grp["state"] = _batched_window_scan_masked(
-                        grp["state"], xs[t:][:, grp["idx_pad"]],
-                        jnp.asarray(ga), self.spec, self.adjusted, plan)
-                return self._groups[-1]["state"]
-            sub = self._working(max(int(self._m_host.max()), 1))
-            self._sub = _batched_window_scan_masked(
-                sub, xs[t:], jnp.asarray(ones), self.spec, self.adjusted,
-                plan)
-            return self._sub
+            steady = np.asarray(self._m_host >= self.window)
+            grow = ~steady
+            out = None
+            if steady.any():
+                out = self._steady_window_scan(xs, steady, plan)
+            if grow.any():
+                act = None if not steady.any() else jnp.asarray(grow)
+                t = 0
+                while t < T and int(self._m_host[grow].min()) < self.window:
+                    out = self.update(xs[t], active=act)
+                    t += 1
+                if t < T:
+                    out = self._steady_window_scan(xs[t:], grow, plan)
+            return out
         i = 0
         if self._grouped:
             ones = np.ones(self.n_tenants, bool)
@@ -1341,7 +1385,7 @@ class StreamBatch:
         """Project per-tenant query batches q: (B, nq, d) -> (B, nq, k)."""
         q = jnp.asarray(q)
         fn = partial(transform_state, spec=self.spec, adjusted=self.adjusted,
-                     n_components=n_components)
+                     n_components=n_components, plan=self.plan)
         if self._grouped and self._groups is not None:
             out = None
             for grp in self._groups:

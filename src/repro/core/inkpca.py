@@ -158,6 +158,127 @@ def update_adjusted(state: KPCAState, a: Array, k_new: Array, x_new: Array,
     return KPCAState(L=L, U=U, m=m1, S=S2, K1=K1, X=X)
 
 
+# ------------------------------------------------------------ fused ingest --
+# ``update_unadjusted``/``update_adjusted`` consume a precomputed kernel
+# row and then let the rank-one machinery re-read U for every projection
+# Uᵀv.  The ingest_* variants below instead run the fused
+# ``kernels/rbf_gram.krow_project`` prologue: ONE pass over U produces the
+# masked row a AND the projections of every update vector that lives in the
+# pre-update basis.  The z vectors handed to ``eng.apply_pair`` are exact
+# identities, not approximations:
+#
+# * pre-expansion, Uᵀe_m = e_m (column m is an identity column and active
+#   columns vanish on row m), so the expansion pair's projections are
+#   z = (Uᵀa).at[m].set(kn/2 | kn/4) permuted by the expansion sort;
+# * Algorithm 2's mean-adjustment vectors 1±u are affine in (a, 1_m, K1),
+#   so their projections are the same affine combination of the three
+#   projected columns.
+#
+# Only Algorithm 2's second (expansion) pair stays unfused — its basis is
+# the post-rotation U₁, which does not exist until the first pair runs.
+
+
+@partial(jax.jit, static_argnames=("spec", "plan"))
+def ingest_unadjusted(state: KPCAState, x_new: Array, *, spec: kf.KernelSpec,
+                      plan: eng.UpdatePlan = eng.DEFAULT_PLAN) -> KPCAState:
+    """Algorithm 1 with the fused kernel-row prologue (plan.fuse_krow)."""
+    from repro.kernels.rbf_gram import ops as kops
+
+    M = state.L.shape[0]
+    m = state.m
+    dtype = state.L.dtype
+    x_new = x_new.astype(state.X.dtype)
+    k_new = kf.kernel_diag(x_new[None], spec=spec)[0].astype(dtype)
+    kn = jnp.maximum(k_new, jnp.finfo(dtype).tiny)  # sigma = 4/k guard
+
+    aux = jnp.zeros((M, 0), dtype)
+    a, P = kops.krow_project(state.U, state.X, x_new, aux, m, spec=spec)
+    p = P[:, 0]                                     # Uᵀa, pre-expansion
+
+    sum_a = jnp.sum(a)
+    S2 = state.S + 2.0 * sum_a + k_new
+    K1 = jnp.where(rankone.active_mask(M, m), state.K1 + a, 0.0)
+    K1 = K1.at[m].set(sum_a + k_new)
+    X = jax.lax.dynamic_update_slice(state.X,
+                                     x_new[None].astype(state.X.dtype),
+                                     (m, jnp.zeros((), m.dtype)))
+
+    L, perm, m1 = rankone.expand_eigensystem_perm(state.L, kn / 4.0, m)
+    U = state.U[:, perm]
+    v1 = a.at[m].set(kn / 2.0)
+    v2 = a.at[m].set(kn / 4.0)
+    # Uᵀe_m = e_m and (Uᵀa)[m] = a[m] = 0 pre-expansion, so the expanded
+    # basis's projections are p with slot m overwritten, permuted.
+    z1 = p.at[m].set(kn / 2.0)[perm]
+    z2 = p.at[m].set(kn / 4.0)[perm]
+    sigma = 4.0 / kn
+    L, U = eng.apply_pair(L, U, v1, sigma, v2, -sigma, m1, plan=plan,
+                          z1=z1, z2=z2)
+    return KPCAState(L=L, U=U, m=m1, S=S2, K1=K1, X=X)
+
+
+@partial(jax.jit, static_argnames=("spec", "plan"))
+def ingest_adjusted(state: KPCAState, x_new: Array, *, spec: kf.KernelSpec,
+                    plan: eng.UpdatePlan = eng.DEFAULT_PLAN) -> KPCAState:
+    """Algorithm 2 with the fused kernel-row prologue (plan.fuse_krow).
+
+    The mean-adjustment pair's projections come from the fused kernel
+    (z_± = Uᵀ1_m ± Uᵀu as affine combinations of the projected columns);
+    the expansion pair runs unfused against the rotated U₁.
+    """
+    from repro.kernels.rbf_gram import ops as kops
+
+    M = state.L.shape[0]
+    m = state.m
+    dtype = state.L.dtype
+    mf = m.astype(dtype)
+    mask_m = rankone.active_mask(M, m)
+    x_new = x_new.astype(state.X.dtype)
+    k_new = kf.kernel_diag(x_new[None], spec=spec)[0].astype(dtype)
+
+    # One fused pass: a plus Uᵀ[a | 1_m | K1] (the kernel masks rows >= m).
+    aux = jnp.stack([jnp.ones((M,), dtype), state.K1], axis=1)
+    a, P = kops.krow_project(state.U, state.X, x_new, aux, m, spec=spec)
+    pa, p1, pk1 = P[:, 0], P[:, 1], P[:, 2]
+
+    # --- Step 1: mean-adjustment of the existing m×m block (2 updates). ---
+    sum_a = jnp.sum(a)
+    S2 = state.S + 2.0 * sum_a + k_new
+    C = -state.S / mf**2 + S2 / (mf + 1.0) ** 2
+    u = (state.K1 / (mf * (mf + 1.0)) - a / (mf + 1.0) + 0.5 * C)
+    u = jnp.where(mask_m, u, 0.0)
+    ones_u_p = jnp.where(mask_m, 1.0 + u, 0.0)
+    ones_u_m = jnp.where(mask_m, 1.0 - u, 0.0)
+    zu = pk1 / (mf * (mf + 1.0)) - pa / (mf + 1.0) + 0.5 * C * p1
+    half = jnp.asarray(0.5, dtype)
+    L, U = eng.apply_pair(state.L, state.U, ones_u_p, half, ones_u_m, -half,
+                          m, plan=plan, z1=p1 + zu, z2=p1 - zu)
+
+    # --- Steps 2-4: identical to ``update_adjusted`` (expansion unfused). ---
+    K1 = jnp.where(mask_m, state.K1 + a, 0.0)
+    K1 = K1.at[m].set(sum_a + k_new)
+    m_new_f = mf + 1.0
+
+    k_vec = a.at[m].set(k_new)
+    mask_m1 = rankone.active_mask(M, m + 1)
+    v = k_vec - (jnp.sum(k_vec) + K1 - S2 / m_new_f) / m_new_f
+    v = jnp.where(mask_m1, v, 0.0)
+    v0 = v[m]
+    v0 = jnp.where(jnp.abs(v0) < jnp.finfo(L.dtype).eps,
+                   jnp.finfo(L.dtype).eps, v0)  # sigma = 4/v0 guard
+
+    L, U, m1 = rankone.expand_eigensystem(L, U, v0 / 4.0, m)
+    v1 = v.at[m].set(v0 / 2.0)
+    v2 = v.at[m].set(v0 / 4.0)
+    sigma = 4.0 / v0
+    L, U = eng.apply_pair(L, U, v1, sigma, v2, -sigma, m1, plan=plan)
+
+    X = jax.lax.dynamic_update_slice(state.X,
+                                     x_new[None].astype(state.X.dtype),
+                                     (m, jnp.zeros((), m.dtype)))
+    return KPCAState(L=L, U=U, m=m1, S=S2, K1=K1, X=X)
+
+
 class KPCAStream:
     """User-facing streaming driver — a thin shell over ``engine.Engine``.
 
@@ -302,7 +423,20 @@ class KPCAStream:
         return rankone.reconstruct(st.L, st.U, st.m)
 
     def transform(self, x: Array, n_components: int) -> Array:
-        """Project new points on the leading kernel principal components."""
-        return eng.transform_state(self.kpca_state, x, spec=self.spec,
+        """Project new points on the leading kernel principal components.
+
+        Under ``plan.fuse_krow`` the projection runs the fused
+        query-gram+projection kernel; with bucketed dispatch the state is
+        first sliced to the smallest bucket holding the active set (the
+        slice is lossless — engine invariants), so the transform costs
+        O(Q·m_b·(d+k)) instead of O(Q·M·(d+k)) at small active counts."""
+        st = self.kpca_state
+        if self.plan.fuse_krow and self.plan.dispatch == "bucketed":
+            need = max(int(st.m), self._min_rows, n_components, 1)
+            Mb = eng.bucket_for(need, st.L.shape[0], self.plan.min_bucket)
+            if Mb < st.L.shape[0]:
+                st = eng.slice_state(st, Mb)
+        return eng.transform_state(st, x, spec=self.spec,
                                    adjusted=self.adjusted,
-                                   n_components=n_components)
+                                   n_components=n_components,
+                                   plan=self.plan)

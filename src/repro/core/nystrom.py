@@ -78,21 +78,32 @@ def init_nystrom(x_all: Array | None, x0: Array, capacity: int,
 
 
 def observe_rows(state: NystromState, xb: Array,
-                 spec: kf.KernelSpec) -> NystromState:
+                 spec: kf.KernelSpec, *,
+                 plan: eng.UpdatePlan | None = None) -> NystromState:
     """Append a block of observed (non-landmark) points as new Knm rows.
 
     Only valid in ``grow_rows`` mode.  Row growth is a host-level concat
     (each distinct row count is a new shape), so feed points in batches —
-    the O(b·M) kernel block itself is one fused device call.
+    the kernel block itself is one fused device call.  Under a bucketed
+    ``plan.fuse_krow`` the gram is evaluated only against the active
+    landmark bucket (columns beyond it are zero by the masking anyway),
+    so the call costs O(b·M_b·d) instead of O(b·M·d).
     """
     if state.Xrows is None:
         raise ValueError("observe_rows needs a grow_rows=True state")
     dtype = state.Knm.dtype
     xb = jnp.atleast_2d(xb).astype(dtype)
     M = state.Knm.shape[1]
-    mask = rankone.active_mask(M, state.kpca.m)
-    rows = kf.gram_block(xb, state.kpca.X, spec=spec).astype(dtype)
-    rows = jnp.where(mask[None, :], rows, 0.0)
+    if (plan is not None and plan.fuse_krow
+            and plan.dispatch == "bucketed"):
+        Mb = eng.bucket_for(max(int(state.kpca.m), 1), M, plan.min_bucket)
+    else:
+        Mb = M
+    mask = rankone.active_mask(Mb, state.kpca.m)
+    rows_b = kf.gram_block(xb, state.kpca.X[:Mb], spec=spec).astype(dtype)
+    rows_b = jnp.where(mask[None, :], rows_b, 0.0)
+    rows = (rows_b if Mb == M
+            else jnp.zeros((xb.shape[0], M), dtype).at[:, :Mb].set(rows_b))
     return state._replace(Knm=jnp.concatenate([state.Knm, rows], axis=0),
                           Xrows=jnp.concatenate([state.Xrows, xb], axis=0))
 
@@ -106,10 +117,13 @@ def add_landmark(state: NystromState, x_all: Array | None, x_new: Array,
     In ``grow_rows`` mode the new column is evaluated against the observed
     rows carried in the state (``x_all`` must be None); add the point via
     ``observe_rows`` first if it should also appear as a row.
+
+    ``plan.fuse_krow`` routes the eigensystem growth through the fused
+    kernel-row + projection prologue (``engine._ingest``) — the same
+    single-pass-over-U ingest the KPCA stream uses.
     """
-    a, k_new = eng.masked_row(state.kpca, x_new, spec)
     m = state.kpca.m
-    kpca = inkpca.update_unadjusted(state.kpca, a, k_new, x_new, plan=plan)
+    kpca = eng._ingest(state.kpca, x_new, spec, False, plan)
     x_rows = state.Xrows if state.Xrows is not None else x_all
     col = kf.kernel_row(x_new, x_rows.astype(state.Knm.dtype), spec=spec)
     zero = jnp.zeros((), m.dtype)
@@ -290,6 +304,80 @@ def admission_trace_delta(state: NystromState, x: Array,
     return delta, delta_res
 
 
+@jax.jit
+def removal_trace_delta(state: NystromState, j: Array
+                        ) -> tuple[Array, Array]:
+    """Exact increase of ``trace_error`` from removing landmark ``j`` —
+    O(n·m) from the maintained eigenpairs.
+
+    Deleting row/column j from the landmark gram is the reverse bordering
+    of ``admission_trace_delta``: with W = K_mm⁺ = U diag(λ⁺) Uᵀ and
+    w = W e_j, the block-inverse identity gives
+
+        K̃_minus = K_nm (W − w wᵀ / W_jj) K_nm^T,
+
+    (the deflated matrix has zero j-th row/column, so the dropped Knm
+    column is inert) and the trace gap grows by exactly
+    Σ_i (K_nm w)_i² / W_jj.  Returns ``(inc, W_jj)``; W_jj ≤ 0 (victim
+    support entirely in deflated directions) means the leave-one-out
+    inverse does not exist — callers should fall back to an exact resync.
+    """
+    st = state.kpca
+    mask = rankone.active_mask(st.L.shape[0], st.m)
+    pinv = _pinv_lam(st.L, mask)
+    uj = st.U[j, :]
+    w = st.U @ (pinv * uj)
+    Wjj = jnp.sum(uj * uj * pinv)
+    t = state.Knm @ w
+    safe = jnp.maximum(Wjj, jnp.finfo(st.L.dtype).tiny)
+    return jnp.sum(t * t) / safe, Wjj
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def swap_trace_delta(state: NystromState, j: Array, x: Array,
+                     spec: kf.KernelSpec, x_all: Array | None = None
+                     ) -> tuple[Array, Array]:
+    """Exact net change of ``trace_error`` from replacing landmark ``j``
+    with ``x`` — O(n·m), no leave-one-out eigensystem ever formed.
+
+    Composes the two block-inverse identities from the PRE-swap state:
+    removal adds Σ(K_nm w)²/W_jj (``removal_trace_delta``), then the
+    admission against the DEFLATED inverse A = W − w wᵀ/W_jj subtracts
+    Σ r²/δ' with b̃ the candidate's kernel row zeroed at the victim slot,
+    δ' = k_xx − b̃ᵀAb̃ and r = K_nm A b̃ − c.  Returns ``(net, W_jj)``
+    (net = inc − dec, to be ADDED to the tracked value); W_jj ≤ 0 or a
+    non-finite net means fall back to resync.
+    """
+    st = state.kpca
+    x = jnp.asarray(x)
+    x_rows = state.Xrows if state.Xrows is not None else x_all
+    if x_rows is None:
+        raise ValueError("swap_trace_delta needs the observed rows "
+                         "(grow_rows state or x_all)")
+    dtype = st.L.dtype
+    mask = rankone.active_mask(st.L.shape[0], st.m)
+    pinv = _pinv_lam(st.L, mask)
+    tiny = jnp.finfo(dtype).tiny
+
+    uj = st.U[j, :]
+    w = st.U @ (pinv * uj)                     # W e_j
+    Wjj = jnp.maximum(jnp.sum(uj * uj * pinv), tiny)
+    t = state.Knm @ w
+    inc = jnp.sum(t * t) / Wjj
+
+    b, k_xx = eng.masked_row(st, x, spec)
+    bt = b.at[j].set(0.0)                      # row vs SURVIVING landmarks
+    Wb = st.U @ (pinv * (st.U.T @ bt))
+    Ab = Wb - w * (jnp.dot(w, bt) / Wjj)       # A b̃, A = W − w wᵀ/W_jj
+    delta_res = k_xx - jnp.dot(bt, Ab)
+    c = kf.kernel_row(x, x_rows.astype(dtype), spec=spec)
+    r = state.Knm @ Ab - c
+    tol = jnp.finfo(dtype).eps * jnp.maximum(k_xx, 1.0)
+    dec = jnp.where(delta_res > tol,
+                    jnp.sum(r * r) / jnp.maximum(delta_res, tol), 0.0)
+    return inc - dec, jnp.sum(uj * uj * pinv)
+
+
 class TraceErrorTracker:
     """Maintains the sufficient-subset error metric incrementally across
     the landmark lifecycle (ROADMAP PR-4 follow-up).
@@ -306,12 +394,17 @@ class TraceErrorTracker:
     * ``admitted(state_before, x)`` — subtract
       ``admission_trace_delta(state_before, x)``; ``state_before`` is
       the state the candidate was offered to (rows already observed).
-    * ``replaced(state_after)`` — exact resync: the removal half of a
-      swap needs the landmark-gram inverse *without* the victim, which
-      is not available in O(n·m) from the maintained eigenpairs, and
-      replaces are the rare steady-state path.
-    * every ``resync_every`` admissions the value re-anchors to the
-      exact recompute, bounding float drift on unbounded lifecycles
+    * ``replaced(state_after, state_before=..., x=...)`` — apply the
+      O(n·m) ``swap_trace_delta`` computed from the pre-swap state: the
+      leave-one-out inverse comes from the maintained eigenpairs via the
+      block-inverse identity, so a swap no longer forces the O(n·m²)
+      exact resync.  The victim index defaults to the lowest-leverage
+      landmark (the ``consider_landmark`` choice); pass ``j=`` to
+      override.  Degenerate victims (W_jj ≤ 0) or a non-finite delta
+      fall back to the exact resync, as does calling with only
+      ``state_after`` (the legacy spelling).
+    * every ``resync_every`` admissions/swaps the value re-anchors to
+      the exact recompute, bounding float drift on unbounded lifecycles
       (the drift itself is regression-tested against the recompute).
     """
 
@@ -345,17 +438,40 @@ class TraceErrorTracker:
         delta, _ = admission_trace_delta(state_before, x, self.spec,
                                          self.x_all)
         self.value = max(self.value - float(delta), 0.0)
-        self._admits += 1
-        if self.resync_every and self._admits >= self.resync_every:
-            # Re-anchoring needs the POST-admission state; callers hand us
-            # the pre-state, so defer to the next lifecycle event instead
-            # of recomputing on a stale snapshot.
-            self._admits = 0
-            self._pending_resync = True
+        self._count_increment()
         return self.value
 
-    def replaced(self, state_after: NystromState) -> float:
-        return self.resync(state_after)
+    def replaced(self, state_after: NystromState, *,
+                 state_before: NystromState | None = None,
+                 x: Array | None = None, j: int | None = None) -> float:
+        import math
+
+        import numpy as np
+
+        if state_before is None or x is None:
+            return self.resync(state_after)       # legacy exact spelling
+        if j is None:
+            m = int(state_before.kpca.m)
+            j = int(np.argmin(np.asarray(
+                leverage_scores(state_before)[:m])))
+        net, Wjj = swap_trace_delta(state_before,
+                                    jnp.asarray(j, jnp.int32),
+                                    jnp.asarray(x), self.spec, self.x_all)
+        net, Wjj = float(net), float(Wjj)
+        if not math.isfinite(net) or Wjj <= 0.0:
+            return self.resync(state_after)
+        self.value = max(self.value + net, 0.0)
+        self._count_increment()
+        return self.value
+
+    def _count_increment(self) -> None:
+        self._admits += 1
+        if self.resync_every and self._admits >= self.resync_every:
+            # Re-anchoring needs the POST-event state; callers hand us the
+            # pre-state, so defer to the next lifecycle event instead of
+            # recomputing on a stale snapshot.
+            self._admits = 0
+            self._pending_resync = True
 
     def maybe_resync(self, state: NystromState) -> float:
         """Honor a pending periodic re-anchor (call with the CURRENT
@@ -464,6 +580,35 @@ def nystrom_eigpairs(state: NystromState, n: int) -> tuple[Array, Array]:
     U_nys = jnp.sqrt(mf / n) * (state.Knm @ (st.U * _pinv_lam(st.L, mask)[None, :]))
     U_nys = jnp.where(mask[None, :], U_nys, 0.0)
     return lam_nys, U_nys
+
+
+def query_features(state: NystromState, xq: Array, n: int,
+                   spec: kf.KernelSpec, *,
+                   plan: eng.UpdatePlan | None = None) -> Array:
+    """Nyström eigenvector rows for OUT-OF-SAMPLE query points:
+    sqrt(m/n) · k(x_q, X_lm) U Λ⁺ — the ``nystrom_eigpairs`` rescaling
+    (paper eq. 7) evaluated at new points, e.g. to extend K̃ to a query
+    batch via ``U_q Λ_nys U_nysᵀ``.
+
+    Under ``plan.fuse_krow`` the query gram never materializes: the fused
+    ``nystrom_recon.transform_project`` kernel (shared with the KPCA
+    batched transform) contracts each kernel tile against
+    S = U diag(λ⁺) in VMEM.
+    """
+    st = state.kpca
+    mask = rankone.active_mask(st.L.shape[0], st.m)
+    mf = st.m.astype(st.L.dtype)
+    s_mat = (st.U * _pinv_lam(st.L, mask)[None, :]).astype(st.X.dtype)
+    if plan is not None and plan.fuse_krow:
+        from repro.kernels.nystrom_recon import ops as nops
+        y, _ = nops.transform_project(jnp.asarray(xq), st.X, s_mat, st.m,
+                                      spec=spec)
+    else:
+        kq = kf.gram_block(jnp.asarray(xq).astype(st.X.dtype), st.X,
+                           spec=spec)
+        kq = jnp.where(mask[None, :], kq, 0.0)
+        y = kq @ s_mat
+    return jnp.sqrt(mf / n) * jnp.where(mask[None, :], y, 0.0)
 
 
 def reconstruct_tilde(state: NystromState, *, use_pallas: bool = False) -> Array:

@@ -263,6 +263,7 @@ def rank_one_update(
     method: Literal["gu", "bns"] = "gu",
     matmul: Literal["jnp", "pallas"] = "jnp",
     precise: bool = True,
+    z: Array | None = None,
 ) -> tuple[Array, Array]:
     """One symmetric rank-one update of the eigendecomposition.
 
@@ -272,10 +273,14 @@ def rank_one_update(
     sigma: scalar, either sign (sign handled by the flip identity),
     m: active count (traced scalar).
 
+    ``z`` (optional) is a precomputed Uᵀv in the CURRENT basis — the fused
+    ingest kernel produces it alongside the kernel row, skipping this
+    update's own pass over U.
+
     Returns the updated (L, U), sorted ascending, same padding invariants.
     """
     return _update_body(L, U, v, sigma, m, iters=iters, method=method,
-                        matmul=matmul, precise=precise)
+                        matmul=matmul, precise=precise, z=z)
 
 
 class _Factor(NamedTuple):
@@ -559,6 +564,8 @@ def rank_one_update_pair(
     matmul: Literal["jnp", "pallas"] = "jnp",
     precise: bool = True,
     merge_fallback: bool = True,
+    z1: Array | None = None,
+    z2: Array | None = None,
 ) -> tuple[Array, Array]:
     """Two back-to-back rank-one updates with ONE fused double rotation.
 
@@ -580,14 +587,25 @@ def rank_one_update_pair(
     matmul='jnp' materializes both factors densely (reference semantics,
     still one pass over U); 'pallas' generates both factors' tiles in VMEM
     (``eigvec_rotate2``) with active-tile pruning.
+
+    ``z1``/``z2`` (optional, both or neither) are precomputed Uᵀv₁ / Uᵀv₂
+    in the CURRENT basis — the fused ingest kernel emits them with the
+    kernel row, eliminating this function's own projection pass over U.
+    The merge fallback reuses z1 for its first sequential update (same
+    basis) and recomputes z2 from the rotated U1 itself.
     """
     M = L.shape[0]
     mask = active_mask(M, m)
     v1 = jnp.where(mask, v1, 0.0)
     v2 = jnp.where(mask, v2, 0.0)
 
-    Z = U.T @ jnp.stack([v1, v2], axis=1)       # one pass over U for both z
-    pf = _pair_solve(L, Z[:, 0], sigma1, Z[:, 1], sigma2, m, iters=iters,
+    if z1 is None:
+        Z = U.T @ jnp.stack([v1, v2], axis=1)   # one pass over U for both z
+        z1, z2 = Z[:, 0], Z[:, 1]
+    else:
+        z1 = jnp.where(mask, z1, 0.0)
+        z2 = jnp.where(mask, z2, 0.0)
+    pf = _pair_solve(L, z1, sigma1, z2, sigma2, m, iters=iters,
                      method=method, precise=precise)
 
     def _fused(U):
@@ -598,12 +616,27 @@ def rank_one_update_pair(
         return _fused(U)
 
     def _sequential(U):
+        # z1 is valid for the first update (same basis); the second update
+        # needs U1ᵀv2, which _update_body recomputes from the rotated U1.
         L1, U1 = _update_body(L, U, v1, sigma1, m, iters=iters,
-                              method=method, matmul=matmul, precise=precise)
+                              method=method, matmul=matmul, precise=precise,
+                              z=z1)
         return _update_body(L1, U1, v2, sigma2, m, iters=iters,
                             method=method, matmul=matmul, precise=precise)
 
     return jax.lax.cond(pf.merge_fired, _sequential, _fused, U)
+
+
+def expand_eigensystem_perm(L: Array, lam_new: Array, m: Array
+                            ) -> tuple[Array, Array, Array]:
+    """Eigenvalue half of ``expand_eigensystem``: the sorted spectrum plus
+    the column permutation to apply to U (and to any precomputed Uᵀv — the
+    fused ingest path permutes its projections instead of U twice)."""
+    m_new = m + 1
+    L = L.at[m].set(lam_new)
+    L = sentinelize(L, m_new, jnp.zeros((), L.dtype))
+    perm = jnp.argsort(L)
+    return L[perm], perm, m_new
 
 
 @partial(jax.jit, static_argnames=())
@@ -616,12 +649,8 @@ def expand_eigensystem(L: Array, U: Array, lam_new: Array, m: Array
     (Paper Alg. 1 line 2 writes k/4 into the U corner — an erratum; the new
     unit eigenvector must be e_{m+1}.)
     """
-    M = L.shape[0]
-    m_new = m + 1
-    L = L.at[m].set(lam_new)
-    L = sentinelize(L, m_new, jnp.zeros((), L.dtype))
-    perm = jnp.argsort(L)
-    return L[perm], U[:, perm], m_new
+    L_new, perm, m_new = expand_eigensystem_perm(L, lam_new, m)
+    return L_new, U[:, perm], m_new
 
 
 def reconstruct(L: Array, U: Array, m: Array) -> Array:

@@ -6,7 +6,11 @@ import os
 import jax
 
 from repro.kernels.nystrom_recon.nystrom_recon import scaled_gram as _pallas
-from repro.kernels.nystrom_recon.ref import scaled_gram_ref
+from repro.kernels.nystrom_recon.ref import (scaled_gram_ref,
+                                             transform_project_ref)
+from repro.kernels.nystrom_recon.transform_batch import \
+    transform_project as _tb_pallas
+from repro.kernels.rbf_gram.krow_fused import PALLAS_KERNELS
 
 
 def scaled_gram(b: jax.Array, s: jax.Array, *, force: str | None = None
@@ -17,3 +21,19 @@ def scaled_gram(b: jax.Array, s: jax.Array, *, force: str | None = None
     if force == "interpret":
         return _pallas(b, s, interpret=True)
     return _pallas(b, s)
+
+
+def transform_project(xq: jax.Array, x: jax.Array, s: jax.Array,
+                      num_active: jax.Array, *, spec,
+                      force: str | None = None
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Fused masked query gram + projection (Y, rowsum) — see
+    ``transform_batch.py``."""
+    force = force or os.environ.get("REPRO_PALLAS_FORCE") or None
+    if spec.name not in PALLAS_KERNELS:
+        force = "ref"    # non-stationary kernels: reference epilogue only
+    if force == "ref" or (force is None and jax.default_backend() != "tpu"):
+        return transform_project_ref(xq, x, s, num_active, spec=spec)
+    if force == "interpret":
+        return _tb_pallas(xq, x, s, num_active, spec=spec, interpret=True)
+    return _tb_pallas(xq, x, s, num_active, spec=spec)

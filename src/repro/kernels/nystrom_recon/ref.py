@@ -1,6 +1,20 @@
-"""Pure-jnp oracle for the fused Nyström reconstruction kernel."""
+"""Pure-jnp oracles for the Nyström reconstruction / fused transform kernels."""
 import jax
+import jax.numpy as jnp
+
+from repro.core import kernels_fn as kf
 
 
 def scaled_gram_ref(b: jax.Array, s: jax.Array) -> jax.Array:
     return (b * s[None, :]) @ b.T
+
+
+def transform_project_ref(xq: jax.Array, x: jax.Array, s: jax.Array,
+                          num_active: jax.Array, *, spec: kf.KernelSpec
+                          ) -> tuple[jax.Array, jax.Array]:
+    """(Y, rowsum) oracle — materializes the masked query gram."""
+    dtype = s.dtype
+    kq = kf.gram_block(xq.astype(dtype), x.astype(dtype), spec=spec)
+    mask = jnp.arange(x.shape[0]) < num_active
+    kq = jnp.where(mask[None, :], kq, 0.0).astype(dtype)
+    return kq @ s, jnp.sum(kq, axis=1)

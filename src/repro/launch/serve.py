@@ -66,7 +66,8 @@ def _make_plan(args):
 
     return eng.UpdatePlan(matmul=args.matmul, dispatch=args.dispatch,
                           window=args.window,
-                          landmark_policy=args.landmark_policy)
+                          landmark_policy=args.landmark_policy,
+                          fuse_krow=args.fuse_krow)
 
 
 def kpca_main(args) -> dict:
@@ -153,7 +154,7 @@ def nystrom_main(args) -> dict:
             # regime pays zero per-point eigensystem dispatches.
             res = float(nystrom.admission_residual(state, x, spec))
             tracker.observe(state, x, residual=res)
-        state = nystrom.observe_rows(state, x, spec)
+        state = nystrom.observe_rows(state, x, spec, plan=engine.plan)
         if leverage and rule.sufficient:
             counts["rejected"] += 1
             continue
@@ -165,7 +166,9 @@ def nystrom_main(args) -> dict:
             if action == "admitted":
                 tracker.admitted(prev, x)
             else:
-                tracker.replaced(state)
+                # Incremental leave-one-out swap delta: no exact resync
+                # unless the delta itself is numerically untrustworthy.
+                tracker.replaced(state, state_before=prev, x=x)
             tracker.maybe_resync(state)
             if rule.observe(tracker.value):
                 stopped_at = i
@@ -269,6 +272,11 @@ def main(argv=None) -> dict:
     ap.add_argument("--matmul", default="jnp",
                     choices=("jnp", "pallas", "jnp2", "pallas2"))
     ap.add_argument("--transform-every", type=int, default=16)
+    ap.add_argument("--fuse-krow", action="store_true",
+                    help="route ingest + batched transform through the "
+                         "fused kernel-row producers (single dispatch "
+                         "builds the kernel row and projects it; see "
+                         "kernels/rbf_gram/krow_fused.py)")
     ap.add_argument("--tenants", type=int, default=1,
                     help="number of independent KPCA streams folded per "
                          "vmapped device step (kpca mode)")
