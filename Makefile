@@ -21,6 +21,7 @@ bench-smoke:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.bench_multitenant --smoke
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.bench_sharded --smoke
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.bench_window --smoke
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.bench_serving --smoke
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.roofline --smoke
 
 test:

@@ -18,6 +18,7 @@ Pallas on TPU; same math either way):
 * ``eigvec_rotate2``   fused ±sigma double rotation C = U @ W1n @ W2n
 * ``rbf_gram``         dense gram block             K = k(X, Y)
 * ``krow_fused``       fused ingest prologue        (a, UᵀT[a|aux])
+* ``eigvec_project``   rect-pruned pair projection  Z = Uᵀ[v1|v2]
 * ``transform_batch``  fused batched transform      (K_q,masked @ S, 1ᵀ)
 * ``nystrom_recon``    scaled gram reconstruction   (B·s) @ Bᵀ
 
@@ -125,6 +126,8 @@ def kernel_rows(M: int, d: int, Q: int, C: int, reps: int,
     tbat = jax.jit(lambda xq, x, s, m:
                    nops.transform_project(xq, x, s, m, spec=spec))
     sgram = jax.jit(lambda b, s: nops.scaled_gram(b, s))
+    vpair = jnp.asarray(rng.normal(size=(M, 2)), f32)
+    proj = jax.jit(lambda u, v, m: uops.project_vectors(u, v, m))
 
     rows = [
         _row("eigvec_rotate",
@@ -140,6 +143,9 @@ def kernel_rows(M: int, d: int, Q: int, C: int, reps: int,
              _time(lambda: krow(u, x, x_new, aux, m_full), reps),
              (M * M + M * d + 2 * M + M + 3 * M) * F32,
              2 * M * d + 3 * M + 6 * M * M, peak_gbps),
+        _row("eigvec_project",
+             _time(lambda: proj(u, vpair, m_full), reps),
+             (M * M + 2 * M + 2 * M) * F32, 4 * M * M, peak_gbps),
         _row("transform_batch",
              _time(lambda: tbat(xq, x, s_cols, m_full), reps),
              (Q * d + M * d + M * C + Q * C + Q) * F32,

@@ -660,3 +660,196 @@ def sharded_gram_row(mesh, spec: kf.KernelSpec, *, axis: str = "data"):
 
     return jax.jit(_shard_map(body, mesh=mesh, in_specs=(P(axis, None), P()),
                               out_specs=P(axis), check_vma=False))
+
+
+# ------------------------------------------------ tenant x row 2-D mesh --
+# Multi-tenant serving shards the TENANT axis of stacked (B, ...) states
+# over a second mesh dimension: a (P_t, P_r) mesh places B/P_t tenants on
+# each tenant slice, and within a slice each tenant's U is row-sharded
+# over the P_r 'data' devices exactly as in the 1-D builders above.  The
+# update body is the SAME collective-balanced `_rank_one_update_pair_-
+# sharded`, vmapped over the local tenants: its psums name only the row
+# axis, so vmap batches them into one fused all-reduce per tenant slice
+# and the tenant axis needs zero collectives — tenants are independent
+# eigensystems.  Queries against published snapshots are likewise
+# embarrassingly parallel over tenants.
+
+
+def make_tenant_mesh(p_tenant: int, p_rows: int, *, devices=None):
+    """A (tenant, data) 2-D mesh of P_t x P_r devices.
+
+    Row 0 varies the 'data' axis fastest, so the P_r-device row meshes of
+    a tenant slice are contiguous device groups — the layout the 1-D
+    builders assume when a tenant slice degenerates to P_t = 1.
+    """
+    import numpy as np
+
+    devs = np.asarray(jax.devices() if devices is None
+                      else devices).reshape(-1)
+    need = p_tenant * p_rows
+    if devs.size < need:
+        raise ValueError(f"mesh needs {need} devices, have {devs.size}")
+    return jax.sharding.Mesh(devs[:need].reshape(p_tenant, p_rows),
+                             ("tenant", "data"))
+
+
+def make_tenant_update_pair(mesh, *, tenant_axis: str = "tenant",
+                            axis: str = "data",
+                            plan: eng.UpdatePlan = eng.DEFAULT_PLAN):
+    """Fused ±sigma pair over tenant-stacked states on a 2-D mesh:
+    f(L, U, v1, sigma1, v2, sigma2, m), every argument stacked on a
+    leading tenant axis (L (B, M), U (B, M, M), v* (B, M), sigma* (B,),
+    m (B,)).
+
+    The tenant axis shards dim 0 and the row axis dim 1 of U, so each
+    device holds a (B/P_t, M/P_r, M) brick; the body vmaps the 1-D
+    collective-balanced pair over its local tenants, batching the row
+    psums (still zero tenant-axis collectives, preserving the
+    deadlock-free discipline).  Bucketed dispatch reads the COHORT
+    ceiling max(m) on the host — one bucket rung serves the whole stack,
+    mirroring ``StreamBatch``'s "max" cohort policy — and slices every
+    local operand to it.
+    """
+
+    def _vpair(rows_full=None):
+        def f(L, U_loc, v1, s1, v2, s2, m):
+            return _rank_one_update_pair_sharded(
+                L, U_loc, v1, s1, v2, s2, m, axis=axis, plan=plan,
+                rows_full=rows_full)
+
+        return jax.vmap(f)
+
+    def fixed_body(L, U_loc, v1, s1, v2, s2, m):
+        return _vpair()(L, U_loc, v1, s1, v2, s2, m)
+
+    def sliced_body(Mb: int):
+        def body(L, U_loc, v1, s1, v2, s2, m):
+            R = U_loc.shape[1]
+            Rb = min(R, Mb)
+            Lb, Ub = _vpair(rows_full=R)(
+                L[:, :Mb], U_loc[:, :Rb, :Mb], v1[:, :Rb], s1,
+                v2[:, :Rb], s2, m)
+            L_new = jax.vmap(lambda Lf, Lr, mm: rankone.sentinelize(
+                Lf.at[:Mb].set(Lr), mm, jnp.zeros((), L.dtype)))(L, Lb, m)
+            return L_new, U_loc.at[:, :Rb, :Mb].set(Ub)
+
+        return body
+
+    def build(Mb: int | None):
+        body = fixed_body if Mb is None else sliced_body(Mb)
+        return jax.jit(_shard_map(
+            body, mesh=mesh,
+            in_specs=(P(tenant_axis), P(tenant_axis, axis),
+                      P(tenant_axis, axis), P(tenant_axis),
+                      P(tenant_axis, axis), P(tenant_axis), P(tenant_axis)),
+            out_specs=(P(tenant_axis), P(tenant_axis, axis)),
+            check_vma=False,
+        ))
+
+    if plan.dispatch != "bucketed":
+        return build(None)
+
+    cache: dict[int, object] = {}
+
+    def dispatch(*args):
+        L, m = args[0], args[-1]
+        M = L.shape[1]
+        Mb = eng.bucket_for(max(int(jnp.max(m)), 1), M, plan.min_bucket)
+        key = Mb if Mb < M else -1
+        if key not in cache:
+            cache[key] = build(None if Mb >= M else Mb)
+        return cache[key](*args)
+
+    return dispatch
+
+
+def make_tenant_query(mesh, spec: kf.KernelSpec, *,
+                      tenant_axis: str = "tenant", plan=None):
+    """Tenant-sharded snapshot queries: f(snaps, xq) -> (B, nq, C) with
+    ``snaps`` a tenant-stacked ``serving.ServingSnapshot`` (every leaf
+    carrying a leading B axis, e.g. from ``StreamBatch.publish``) and
+    xq (B, nq, d).
+
+    Snapshots are immutable and per-tenant independent, so the read path
+    is embarrassingly parallel: the tenant axis shards every leaf's
+    leading dim, the body vmaps ``serving.query`` over local tenants, and
+    there are ZERO collectives — query latency never rides the update
+    path's all-reduces, which is the point of decoupled serving.
+    """
+    from repro.core import serving
+
+    def body(snaps, xq):
+        return jax.vmap(
+            lambda s, x: serving.query(s, x, spec=spec, plan=plan))(snaps,
+                                                                    xq)
+
+    return jax.jit(_shard_map(
+        body, mesh=mesh,
+        in_specs=(P(tenant_axis), P(tenant_axis)),
+        out_specs=P(tenant_axis), check_vma=False))
+
+
+# ------------------------------------------------ row-rebalancing reshard --
+def make_rebalanced_update(mesh, *, axis: str = "data",
+                           plan: eng.UpdatePlan = eng.DEFAULT_PLAN):
+    """Bucketed sharded update that RESHARDS small buckets to a sub-mesh:
+    f(L, U, v, sigma, m), same contract as ``make_sharded_update``.
+
+    With m ≪ M/P the bucketed full-mesh update degenerates: only the
+    devices owning global rows < M_b hold active data, yet all P devices
+    still join every O(M) psum (fan-in P) and rotate dead identity rows.
+    Below the crossover P_eff = ceil(M_b / (M/P)) < P this builder
+    re-lays the (M_b, M_b) active system out over the FIRST P_eff devices
+    (each getting M_b/P_eff ACTIVE rows), runs the 1-D sharded update on
+    that sub-mesh — psum fan-in P_eff, zero dead rotation flops — and
+    scatters the result back into the full-capacity sharded state.  At or
+    above the crossover (and for fixed dispatch) it falls back to
+    ``make_sharded_update`` unchanged.
+
+    The reshard itself moves the O(M_b²) bucket through host collectives,
+    so per-call it trades bandwidth for fan-in; steady-state callers keep
+    a bucket RESIDENT (reshard once per rung change, as ``engine``'s
+    bucketed residency does) by reusing the returned sub-mesh state
+    across calls — the dispatch only re-lays-out when the rung changes.
+    """
+    import numpy as np
+
+    nP = mesh.shape[axis]
+    devs = np.asarray(mesh.devices).reshape(-1)
+    full_fn = make_sharded_update(mesh, axis=axis, plan=plan)
+    if plan.dispatch != "bucketed" or nP == 1:
+        return full_fn
+
+    sub_cache: dict[int, tuple] = {}
+
+    def _sub(P_eff: int):
+        if P_eff not in sub_cache:
+            sub_mesh = jax.sharding.Mesh(devs[:P_eff], (axis,))
+            sub_fn = make_sharded_update(
+                sub_mesh, axis=axis, plan=plan._replace(dispatch="fixed"))
+            sub_cache[P_eff] = (sub_mesh, sub_fn)
+        return sub_cache[P_eff]
+
+    def dispatch(L, U, v, sigma, m):
+        M = L.shape[0]
+        R = M // nP
+        Mb = eng.bucket_for(max(int(m), 1), M, plan.min_bucket)
+        P_eff = max(1, -(-Mb // R))              # ceil(Mb / R)
+        if P_eff >= nP:
+            return full_fn(L, U, v, sigma, m)
+        sub_mesh, sub_fn = _sub(P_eff)
+        rowsh = jax.sharding.NamedSharding(sub_mesh, P(axis, None))
+        vecsh = jax.sharding.NamedSharding(sub_mesh, P(axis))
+        repl = jax.sharding.NamedSharding(sub_mesh, P())
+        Lb = jax.device_put(L[:Mb], repl)
+        Ub = jax.device_put(U[:Mb, :Mb], rowsh)
+        vb = jax.device_put(v[:Mb], vecsh)
+        Lb, Ub = sub_fn(Lb, Ub, vb, jax.device_put(sigma, repl),
+                        jax.device_put(m, repl))
+        back = jax.sharding.NamedSharding(mesh, P())
+        Lh, Uh = jax.device_put(Lb, back), jax.device_put(Ub, back)
+        L_new = rankone.sentinelize(L.at[:Mb].set(Lh), m,
+                                    jnp.zeros((), L.dtype))
+        return L_new, U.at[:Mb, :Mb].set(Uh)
+
+    return dispatch

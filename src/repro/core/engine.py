@@ -103,6 +103,12 @@ class UpdatePlan(NamedTuple):
                     prologue.  Changes the traced graph (NOT normalized by
                     ``kernel_plan``); numerics agree with the unfused
                     reference to rotation tolerance.
+    serve_every:    decoupled-serving policy: publish a fresh
+                    ``core/serving.ServingSnapshot`` every N ingest blocks
+                    (``launch/serve.IngestServeLoop``); queries batch
+                    against the last published snapshot in between
+    serve_components: projection width C frozen into published snapshots
+                    (the S matrix is (M, C)); queries return C components
     """
 
     method: str = "gu"
@@ -116,6 +122,8 @@ class UpdatePlan(NamedTuple):
     window: int | None = None
     landmark_policy: str = "append"
     fuse_krow: bool = False
+    serve_every: int = 1
+    serve_components: int = 8
 
     @property
     def fused(self) -> bool:
@@ -135,7 +143,9 @@ class UpdatePlan(NamedTuple):
                              min_bucket=DEFAULT_MIN_BUCKET,
                              compact_shrink=False,
                              window=None,
-                             landmark_policy="append")
+                             landmark_policy="append",
+                             serve_every=1,
+                             serve_components=8)
 
 
 DEFAULT_PLAN = UpdatePlan()
@@ -293,34 +303,19 @@ def transform_state(state, x: Array, *, spec: kf.KernelSpec, adjusted: bool,
 
         Y_adj = Y − (rowsum/m)·colsumᵀ − 1·colprojᵀ + (S_sum/m²)·colsumᵀ
 
-    which equals centering the masked gram before projecting."""
-    lam, vec = eigpairs(state)
-    lam = lam[:n_components]
-    vec = vec[:, :n_components]
-    denom = jnp.sqrt(jnp.maximum(lam, jnp.finfo(state.L.dtype).eps))
-    if plan is not None and plan.fuse_krow:
-        from repro.kernels.nystrom_recon import ops as nops
-        s_mat = (vec / denom[None, :]).astype(state.X.dtype)
-        y, rs = nops.transform_project(x, state.X, s_mat, state.m, spec=spec)
-        if adjusted:
-            mf = state.m.astype(state.L.dtype)
-            colsum = jnp.sum(s_mat, axis=0)
-            colproj = (state.K1 / mf) @ s_mat
-            grand = state.S / mf**2
-            y = (y - (rs / mf)[:, None] * colsum[None, :]
-                 - colproj[None, :] + grand * colsum[None, :])
-        return y
-    krow = kf.gram_block(x.astype(state.X.dtype), state.X, spec=spec)
-    mask = rankone.active_mask(state.X.shape[0], state.m)
-    krow = jnp.where(mask[None, :], krow, 0.0)
-    if adjusted:
-        mf = state.m.astype(state.L.dtype)
-        rowmean = jnp.sum(krow, axis=1, keepdims=True) / mf
-        colmean = (state.K1 / mf)[None, :]
-        grand = state.S / mf**2
-        krow = jnp.where(mask[None, :],
-                         krow - rowmean - colmean + grand, 0.0)
-    return (krow @ vec) / denom[None, :]
+    which equals centering the masked gram before projecting.
+
+    Implemented as publish-then-query over ``core/serving``: an ephemeral
+    ``ServingSnapshot`` is built (the eigpair sort / top-C gather /
+    rescale prologue) and the shared query head projects against it — so
+    a transform of a frozen state is bit-identical to serving queries
+    against a snapshot published from that state, by construction.  The
+    decoupled-serving path hoists the publish out of the per-query cost
+    entirely (``serving.DoubleBuffer`` keeps it off the query path)."""
+    from repro.core import serving
+    snap = serving.publish_transform(state, n_components=n_components,
+                                     adjusted=adjusted)
+    return serving.query(snap, x, spec=spec, plan=plan)
 
 
 # ------------------------------------------------------- jitted update fns --
@@ -1407,6 +1402,29 @@ class StreamBatch:
         if self._grouped and self._groups is not None:
             return [g["state"] for g in self._groups]
         return [self._sub if self._sub is not None else self._full]
+
+    def publish(self, n_components: int | None = None):
+        """Publish per-tenant ``serving.ServingSnapshot``s (stacked on the
+        tenant axis) from the current working state — the decoupled-serve
+        read path: queries batch against the returned snapshots
+        (``serving.query_batch``) while subsequent updates keep folding
+        into the working state A.  Default width is
+        ``plan.serve_components``.  "max" cohorts publish from the
+        bucket-resident state (snapshot capacity = the cohort bucket);
+        grouped cohorts flush first so one stacked snapshot covers every
+        tenant."""
+        from repro.core import serving
+
+        nc = int(self.plan.serve_components if n_components is None
+                 else n_components)
+        self._serve_gen = getattr(self, "_serve_gen", -1) + 1
+        gen = jnp.asarray(self._serve_gen, jnp.int32)
+        if self._grouped:
+            st = self.states
+        else:
+            st = self._sub if self._sub is not None else self._full
+        return jax.vmap(lambda s: serving.publish_transform(
+            s, n_components=nc, adjusted=self.adjusted, generation=gen))(st)
 
     def state_of(self, i: int):
         """Unstack tenant i's capacity-M state (checkpoint convenience)."""

@@ -174,8 +174,11 @@ def update_adjusted(state: KPCAState, a: Array, k_new: Array, x_new: Array,
 #   so their projections are the same affine combination of the three
 #   projected columns.
 #
-# Only Algorithm 2's second (expansion) pair stays unfused — its basis is
-# the post-rotation U₁, which does not exist until the first pair runs.
+# Algorithm 2's second (expansion) pair cannot ride the krow prologue —
+# its basis is the post-rotation U₁, which does not exist until the first
+# pair runs — but its projection is still one rect-pruned
+# ``eigvec_update.project_vectors`` pass (Uᵀ[v₁|v₂]) rather than a dense
+# einsum, so no per-step dense pass over the (M, M) eigenvectors remains.
 
 
 @partial(jax.jit, static_argnames=("spec", "plan"))
@@ -224,7 +227,8 @@ def ingest_adjusted(state: KPCAState, x_new: Array, *, spec: kf.KernelSpec,
 
     The mean-adjustment pair's projections come from the fused kernel
     (z_± = Uᵀ1_m ± Uᵀu as affine combinations of the projected columns);
-    the expansion pair runs unfused against the rotated U₁.
+    the expansion pair projects against the rotated U₁ through the
+    rect-pruned ``project_vectors`` kernel.
     """
     from repro.kernels.rbf_gram import ops as kops
 
@@ -271,7 +275,17 @@ def ingest_adjusted(state: KPCAState, x_new: Array, *, spec: kf.KernelSpec,
     v1 = v.at[m].set(v0 / 2.0)
     v2 = v.at[m].set(v0 / 4.0)
     sigma = 4.0 / v0
-    L, U = eng.apply_pair(L, U, v1, sigma, v2, -sigma, m1, plan=plan)
+    # The expansion pair's basis is the rotated U₁ (it does not exist
+    # before the first pair runs), so its projections cannot ride the
+    # krow prologue — but they are still one rect-pruned kernel pass
+    # (Uᵀ[v₁|v₂]) instead of the dense einsum rank_one_update_pair would
+    # otherwise run.  Post-expansion both v's vanish on rows >= m1 and
+    # inactive columns are identity columns on that masked region, so the
+    # pruned projection is exact.
+    from repro.kernels.eigvec_update import ops as eops
+    Z = eops.project_vectors(U, jnp.stack([v1, v2], axis=1), m1)
+    L, U = eng.apply_pair(L, U, v1, sigma, v2, -sigma, m1, plan=plan,
+                          z1=Z[:, 0], z2=Z[:, 1])
 
     X = jax.lax.dynamic_update_slice(state.X,
                                      x_new[None].astype(state.X.dtype),

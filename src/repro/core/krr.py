@@ -71,6 +71,30 @@ def predict(state: KRRState, x: Array, lam: float,
     return (jnp.where(mask[None, :], K_x, 0.0) @ alpha)
 
 
+def publish_predict(state: KRRState, lam: float, *,
+                    generation: int | Array = 0):
+    """Freeze the KRR predict head into a ``serving.ServingSnapshot``:
+    S = α[:, None] (the maintained-eigenpair solve runs once, at
+    publication), so serving predictions are plain snapshot queries —
+    f(x) = k(x, X_masked) @ α — with no per-call O(M²) coefficient
+    solve, and immutable under concurrent ingest into the working state."""
+    from repro.core import serving
+
+    st = state.kpca
+    alpha = coefficients(state, lam)
+    return serving.ServingSnapshot(
+        S=alpha[:, None].astype(st.X.dtype), X=st.X, m=st.m, affine=None,
+        generation=jnp.asarray(generation, jnp.int32))
+
+
+def snapshot_predict(snap, x: Array, spec: kf.KernelSpec, *,
+                     plan: eng.UpdatePlan | None = None) -> Array:
+    """f(x) for a published KRR snapshot: (n, d) -> (n,)."""
+    from repro.core import serving
+
+    return serving.query(snap, x, spec=spec, plan=plan)[:, 0]
+
+
 def loocv_residuals(state: KRRState, lam: float) -> Array:
     """Leave-one-out residuals in closed form — e_i = (y−Kα)_i/(1−H_ii)
     with the hat diagonal H_ii = Σ_j U_ij² λ_j/(λ_j+λ) from the maintained

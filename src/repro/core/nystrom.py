@@ -611,6 +611,34 @@ def query_features(state: NystromState, xq: Array, n: int,
     return jnp.sqrt(mf / n) * jnp.where(mask[None, :], y, 0.0)
 
 
+def publish_features(state: NystromState, n: int, *,
+                     generation: int | Array = 0):
+    """Freeze the out-of-sample feature head (``query_features``) into a
+    ``serving.ServingSnapshot``: S = sqrt(m/n)·U·lam⁺ precomputed at
+    publication, so serving-time Nyström features are plain snapshot
+    queries against the frozen landmark set — immutable under concurrent
+    landmark lifecycle updates to the working state."""
+    from repro.core import serving
+
+    st = state.kpca
+    mask = rankone.active_mask(st.L.shape[0], st.m)
+    mf = st.m.astype(st.L.dtype)
+    s_mat = (jnp.sqrt(mf / n)
+             * (st.U * _pinv_lam(st.L, mask)[None, :])).astype(st.X.dtype)
+    return serving.ServingSnapshot(
+        S=s_mat, X=st.X, m=st.m, affine=None,
+        generation=jnp.asarray(generation, jnp.int32))
+
+
+def snapshot_features(snap, xq: Array, spec: kf.KernelSpec, *,
+                      plan: eng.UpdatePlan | None = None) -> Array:
+    """Nyström eigenvector rows at query points for a published snapshot
+    ((nq, d) -> (nq, M); columns >= m are zero)."""
+    from repro.core import serving
+
+    return serving.query(snap, xq, spec=spec, plan=plan)
+
+
 def reconstruct_tilde(state: NystromState, *, use_pallas: bool = False) -> Array:
     """K̃ = K_{n,m} K_{m,m}^{-1} K_{m,n} via the maintained eigenpairs."""
     st = state.kpca

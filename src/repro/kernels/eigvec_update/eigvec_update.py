@@ -59,6 +59,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BLOCK = 128
+NPROJ = 8    # projected column count of ``eigvec_project`` (v padded to 8)
 
 
 def _tile_counts(num_active, row_offset, R: int, M: int, block: int,
@@ -182,6 +183,99 @@ def eigvec_rotate(u: jax.Array, zhat: jax.Array, d: jax.Array,
         interpret=interpret,
     )(g, u, zcol, dcol, lamrow, invrow)
     return out[:R, :M]
+
+
+def _proj_kernel(g_ref, u_ref, v_ref, out_ref, acc_ref, *, r_steps: int,
+                 block: int):
+    """P-tile accumulate for ``eigvec_project``: out[j] = Σ_i Uᵀ[j,i] V[i]."""
+    j, i = pl.program_id(0), pl.program_id(1)
+    gr, gc = g_ref[0], g_ref[1]
+    m, r0 = g_ref[2], g_ref[3]
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((i < gr) & (j < gc))
+    def _acc():
+        rows = (r0 + i * block
+                + jax.lax.broadcasted_iota(jnp.int32, (block, 1), 0))
+        v = jnp.where(rows < m, v_ref[...].astype(acc_ref.dtype), 0.0)
+        acc_ref[...] += jax.lax.dot_general(
+            u_ref[...].astype(acc_ref.dtype), v, (((0,), (0,)), ((), ())),
+            preferred_element_type=acc_ref.dtype)
+
+    @pl.when(i == r_steps - 1)
+    def _done():
+        # Pruned (j >= gc) output tiles were never accumulated: zero is
+        # their true value — inactive U columns are identity columns whose
+        # single 1 sits on a masked row (>= m) of V.
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def eigvec_project(u: jax.Array, v: jax.Array,
+                   num_active: jax.Array | None = None,
+                   row_offset: jax.Array | None = None, *,
+                   block: int = DEFAULT_BLOCK,
+                   interpret: bool = False) -> jax.Array:
+    """P = Uᵀ V with the row mask and active-tile pruning of the rotation
+    kernels: the post-rotation projection pass of Algorithm 2's second
+    ±sigma pair (and any other Uᵀv the caller owes in the CURRENT basis).
+
+    u: (R, M) eigenvector row block (first global row ``row_offset``);
+    v: (R, C) columns to project, C <= NPROJ; rows >= ``num_active``
+    (global index) are masked to zero in-kernel, so the caller may pass
+    unmasked vectors.  Returns (M, C).  Reduction (row) tiles stop at
+    ceil(clamp(m - row_offset, 0, R)/block) and output (column-of-U) tiles
+    at ceil(m/block); pruned output rows are exact zeros — the true value,
+    because inactive U columns are identity columns supported on masked
+    rows.  Row-sharded callers psum the (M, C) partials over shards.
+    """
+    R, M = u.shape
+    C = v.shape[1]
+    if C > NPROJ:
+        raise ValueError(f"eigvec_project supports <= {NPROJ} columns, "
+                         f"got {C}")
+    Rp = -(-R // block) * block
+    Mp = -(-M // block) * block
+    pad_r, pad_c = Rp - R, Mp - M
+    dtype = u.dtype
+    if pad_r or pad_c:
+        u = jnp.pad(u, ((0, pad_r), (0, pad_c)))
+    if pad_r or C < NPROJ:
+        v = jnp.pad(v, ((0, pad_r), (0, NPROJ - C)))
+    v = v.astype(dtype)
+
+    steps_r = Rp // block
+    steps_c = Mp // block
+    g2 = _tile_counts(num_active, row_offset, R, M, block, steps_r, steps_c)
+    m_eff = (jnp.asarray(M, jnp.int32) if num_active is None
+             else jnp.asarray(num_active, jnp.int32))
+    r0 = (jnp.zeros((), jnp.int32) if row_offset is None
+          else jnp.asarray(row_offset, jnp.int32))
+    g = jnp.concatenate([g2, m_eff[None], r0[None]]).astype(jnp.int32)
+    acc_dtype = jnp.promote_types(dtype, jnp.float32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(steps_c, steps_r),
+        in_specs=[
+            pl.BlockSpec((block, block),
+                         lambda j, i, g: (_clamp(i, g[0]), _clamp(j, g[1]))),
+            pl.BlockSpec((block, NPROJ),
+                         lambda j, i, g: (_clamp(i, g[0]), 0)),
+        ],
+        out_specs=pl.BlockSpec((block, NPROJ), lambda j, i, g: (j, 0)),
+        scratch_shapes=[pltpu.VMEM((block, NPROJ), acc_dtype)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_proj_kernel, r_steps=steps_r, block=block),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Mp, NPROJ), dtype),
+        interpret=interpret,
+    )(g, u, v)
+    return out[:M, :C]
 
 
 def _w_tile(z_ref, d_ref, lam_ref, inv_ref, defl_ref, cid_ref, k, l, *,

@@ -11,9 +11,11 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.eigvec_update.eigvec_update import (eigvec_rotate,
+from repro.kernels.eigvec_update.eigvec_update import (eigvec_project,
+                                                       eigvec_rotate,
                                                        eigvec_rotate2)
-from repro.kernels.eigvec_update.ref import (eigvec_rotate2_ref,
+from repro.kernels.eigvec_update.ref import (eigvec_project_ref,
+                                             eigvec_rotate2_ref,
                                              eigvec_rotate_ref)
 
 
@@ -78,6 +80,28 @@ def rotate_vectors2(u: jax.Array,
             return eigvec_rotate2(*args, num_active, row_offset,
                                   interpret=True)
     return eigvec_rotate2(*args, num_active, row_offset)
+
+
+def project_vectors(u: jax.Array, v: jax.Array,
+                    num_active: jax.Array | None = None,
+                    row_offset: jax.Array | None = None, *,
+                    force: str | None = None) -> jax.Array:
+    """P = Uᵀ V (row-masked at ``num_active``) — the post-rotation
+    projection of Algorithm 2's second ±sigma pair as one rect-pruned
+    kernel pass instead of a dense einsum over the (M, M) eigenvectors.
+
+    Same dispatch and rectangular-operand contract as ``rotate_vectors``;
+    pruned output rows (>= the active tile range) come back as exact
+    zeros, their true value.  Row-sharded callers psum the partials.
+    """
+    force = _force(force)
+    if force == "ref" or (force is None and not _on_tpu()):
+        return eigvec_project_ref(u, v, num_active, row_offset)
+    if force == "interpret":
+        with jax.disable_jit(False):
+            return eigvec_project(u, v, num_active, row_offset,
+                                  interpret=True)
+    return eigvec_project(u, v, num_active, row_offset)
 
 
 def rotate(u: jax.Array, wn: jax.Array) -> jax.Array:

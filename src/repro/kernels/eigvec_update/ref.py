@@ -14,6 +14,19 @@ def eigvec_rotate_ref(u: jax.Array, zhat: jax.Array, d: jax.Array,
     return (u @ W) * inv[None, :]
 
 
+def eigvec_project_ref(u: jax.Array, v: jax.Array,
+                       num_active: jax.Array | None = None,
+                       row_offset: jax.Array | None = None) -> jax.Array:
+    """P = Uᵀ V with rows >= num_active (global index) masked to zero —
+    the unfused oracle for ``eigvec_project``.  ``u``/``v`` may be a
+    rectangular (R, ·) row block whose first global row is ``row_offset``."""
+    if num_active is not None:
+        r0 = 0 if row_offset is None else row_offset
+        rows = r0 + jnp.arange(u.shape[0])
+        v = jnp.where((rows < num_active)[:, None], v, 0.0)
+    return u.T @ v
+
+
 def pruned_region_mask(R: int, M: int, m, row_offset=None, *,
                        block: int) -> tuple[jax.Array, jax.Array]:
     """(row_mask (R,), col_mask (M,)) of the tiles the pruned kernels WRITE.
