@@ -4,7 +4,7 @@
 
 PYTHONPATH := src
 
-.PHONY: check test test-all bench bench-quick bench-smoke
+.PHONY: check test test-all bench bench-quick bench-smoke faults
 
 check:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -q -m "not slow" -x
@@ -23,6 +23,12 @@ bench-smoke:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.bench_window --smoke
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.bench_serving --smoke
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.roofline --smoke
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.bench_health --smoke
+
+# Fault-injection sweep: kill-mid-save crash matrix, corruptor units,
+# quarantine/heal behaviour, P=2 sharded NaN rejection.
+faults:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -q tests/test_faults.py tests/test_health.py
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -q -m "not slow"

@@ -1,0 +1,202 @@
+"""Self-healing layer benchmarks: probe overhead, quarantine gate cost,
+heal vs from-scratch re-fit.
+
+Three claims of the health subsystem (``core/health``) are measured:
+
+* **Probes ride the hot path almost for free** — the guarded
+  steady-state window scan (gate + per-leaf select + ONE rotating
+  O(M·B) orthogonality probe per chunk) must stay within a few percent
+  of the unguarded ``Engine.window_block``.  The acceptance bar is
+  ≤ 5% median overhead on the healthy path at m = W = 64, M = 512.
+
+* **Healing in place beats re-fitting from scratch** — the resync rung
+  re-diagonalizes the stored m points with one m×m gram + eigh inside
+  the existing capacity arrays, while the operational alternative is to
+  re-stream those m points through the incremental pipeline from a
+  fresh seed (m rank-one updates, each O(M_b³)).  The acceptance bar is
+  heal ≥ 3× cheaper than the re-fit replay at m = 128, M = 512.  The
+  batch ``refit_state`` oracle (one ``init_state`` call) is reported
+  alongside for reference, and the polish rung (one QR) shows the cheap
+  end of the ladder.
+
+* **The non-finite gate actually gates** — a NaN arrival must leave the
+  guarded state bitwise-identical and finite; checked in every mode and
+  the reason ``--smoke`` can fail the ``make bench-smoke`` run.
+
+Emits ``BENCH_health.json`` at the repo root.  ``--smoke`` runs a toy
+configuration, skips the JSON and the perf gates (CI containers are too
+noisy for a 5% bar) but still fails on non-finite output or a leaking
+quarantine gate.
+
+    PYTHONPATH=src python -m benchmarks.bench_health [--smoke]
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import batch as batch_mod
+from repro.core import engine as eng
+from repro.core import health as hl
+from repro.core import inkpca
+from repro.core import kernels_fn as kf
+from repro.core import window as win
+from repro.testing import faults
+
+OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_health.json"
+
+
+def _median_time(fn, rounds: int) -> float:
+    ts = []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _steady_window(capacity: int, W: int, d: int, rng, plan, spec):
+    """A windowed stream advanced to m ≡ W (f32, the serving dtype)."""
+    engine = eng.Engine(spec, plan, adjusted=True)
+    ws = win.init_window(jnp.asarray(rng.normal(size=(4, d)), jnp.float32),
+                         capacity, spec, adjusted=True, dtype=jnp.float32)
+    xs = jnp.asarray(rng.normal(size=(W + 8, d)), jnp.float32)
+    return engine, engine.window_block(ws, xs, window=W)
+
+
+def bench_probe_overhead(capacity: int, W: int, d: int, T: int,
+                         rounds: int, rng) -> dict:
+    """Guarded vs unguarded steady-state window block, same chunk."""
+    spec = kf.KernelSpec(name="rbf", sigma=float(d))
+    plan_off = eng.UpdatePlan(dispatch="bucketed")
+    plan_on = plan_off._replace(health=hl.DEFAULT_POLICY)
+    engine_off, ws = _steady_window(capacity, W, d, rng, plan_off, spec)
+    engine_on = eng.Engine(spec, plan_on, adjusted=True)
+    xs = jnp.asarray(rng.normal(size=(T, d)), jnp.float32)
+    h0 = hl.init_health(jnp.float32)
+
+    t_off = _median_time(
+        lambda: engine_off.window_block(ws, xs, window=W).kpca.L, rounds)
+    t_on = _median_time(
+        lambda: engine_on.window_block_guarded(ws, h0, xs,
+                                               window=W)[0].kpca.L, rounds)
+
+    out_on, h_on = engine_on.window_block_guarded(ws, h0, xs, window=W)
+    if not bool(jnp.isfinite(out_on.kpca.L).all()):
+        raise SystemExit("[health] non-finite state out of guarded block")
+    overhead = t_on / max(t_off, 1e-12) - 1.0
+    row = {"capacity": capacity, "window": W, "T": T,
+           "unguarded_ms": t_off * 1e3, "guarded_ms": t_on * 1e3,
+           "overhead_frac": overhead,
+           "probes": int(h_on.probes)}
+    print(f"[health] probe overhead @ W={W}, M={capacity}, T={T}: "
+          f"unguarded {t_off * 1e3:.2f} ms, guarded {t_on * 1e3:.2f} ms "
+          f"({overhead * 100:+.1f}%)")
+    return row
+
+
+def bench_heal_vs_refit(capacity: int, m: int, d: int, rounds: int,
+                        rng) -> dict:
+    """Heal rungs vs the from-scratch re-fit replay at (m, M)."""
+    spec = kf.KernelSpec(name="rbf", sigma=float(d))
+    plan = eng.UpdatePlan(dispatch="bucketed", health=hl.DEFAULT_POLICY)
+    engine = eng.Engine(spec, plan, adjusted=True)
+    X = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    st = inkpca.init_state(X[:4], capacity, spec, adjusted=True,
+                           dtype=jnp.float32)
+    st = engine.update_block(st, X[4:])
+    bad = faults.corrupt_eigvecs(st, magnitude=0.3, seed=0)
+
+    t_polish = _median_time(lambda: hl.polish(bad).U, rounds)
+    t_resync = _median_time(lambda: hl.resync(bad, spec, True).L, rounds)
+    t_refit_oracle = _median_time(
+        lambda: batch_mod.refit_state(bad, spec, adjusted=True).L, rounds)
+
+    def replay():
+        s = inkpca.init_state(st.X[:4], capacity, spec, adjusted=True,
+                              dtype=jnp.float32)
+        return engine.update_block(s, st.X[4:m]).L
+
+    t_replay = _median_time(replay, max(1, rounds // 2))
+
+    healed = hl.resync(bad, spec, True)
+    if not bool(jnp.isfinite(healed.L).all()):
+        raise SystemExit("[health] non-finite eigenvalues out of resync")
+    speedup = t_replay / max(t_resync, 1e-12)
+    row = {"capacity": capacity, "m": m,
+           "polish_ms": t_polish * 1e3, "resync_ms": t_resync * 1e3,
+           "refit_init_ms": t_refit_oracle * 1e3,
+           "refit_replay_ms": t_replay * 1e3,
+           "heal_speedup_vs_replay": speedup}
+    print(f"[health] heal @ m={m}, M={capacity}: polish "
+          f"{t_polish * 1e3:.2f} ms, resync {t_resync * 1e3:.2f} ms, "
+          f"re-fit replay {t_replay * 1e3:.2f} ms "
+          f"({speedup:.1f}x), init_state oracle "
+          f"{t_refit_oracle * 1e3:.2f} ms")
+    return row
+
+
+def check_nonfinite_gate(capacity: int, d: int, rng) -> dict:
+    """The quarantine gate must reject a NaN bitwise — every run, every
+    mode: this is the correctness half of the smoke gate."""
+    spec = kf.KernelSpec(name="rbf", sigma=float(d))
+    plan = eng.UpdatePlan(health=hl.DEFAULT_POLICY)
+    engine = eng.Engine(spec, plan, adjusted=True)
+    st = inkpca.init_state(jnp.asarray(rng.normal(size=(6, d)),
+                                       jnp.float32), capacity, spec,
+                           adjusted=True, dtype=jnp.float32)
+    h = hl.init_health(jnp.float32)
+    st2, h2 = engine.update_guarded(st, h, faults.nan_point(d))
+    bitwise = all(bool(jnp.array_equal(a, b, equal_nan=True))
+                  for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(st2)))
+    ok = bitwise and int(h2.quarantined) == 1 and bool(
+        jnp.isfinite(st2.L).all())
+    if not ok:
+        raise SystemExit("[health] non-finite gate leaked a NaN arrival")
+    print(f"[health] non-finite gate: NaN arrival rejected bitwise "
+          f"(quarantined={int(h2.quarantined)})")
+    return {"bitwise_reject": bitwise, "quarantined": int(h2.quarantined)}
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args(argv)
+
+    rng = np.random.default_rng(0)
+    if args.smoke:
+        probe = bench_probe_overhead(64, 16, 8, 32, 3, rng)
+        heal = bench_heal_vs_refit(64, 32, 8, 3, rng)
+        gate = check_nonfinite_gate(32, 8, rng)
+        print(f"[health] smoke OK (overhead "
+              f"{probe['overhead_frac'] * 100:+.1f}%, heal speedup "
+              f"{heal['heal_speedup_vs_replay']:.1f}x)")
+        return
+
+    probe = bench_probe_overhead(512, 64, 16, 128, 7, rng)
+    heal = bench_heal_vs_refit(512, 128, 16, 7, rng)
+    gate = check_nonfinite_gate(64, 16, rng)
+    if probe["overhead_frac"] > 0.05:
+        raise SystemExit(f"[health] probe overhead gate failed: "
+                         f"{probe['overhead_frac'] * 100:.1f}% > 5%")
+    if heal["heal_speedup_vs_replay"] < 3.0:
+        raise SystemExit(f"[health] heal gate failed: "
+                         f"{heal['heal_speedup_vs_replay']:.1f}x < 3x")
+    out = {"probe_overhead": probe, "heal_vs_refit": heal,
+           "nonfinite_gate": gate,
+           "gates": {"probe_overhead_max": 0.05,
+                     "heal_speedup_min": 3.0}}
+    OUT_PATH.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"[health] wrote {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    main()

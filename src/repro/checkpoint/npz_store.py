@@ -30,9 +30,27 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.testing import faults
+
 PyTree = Any
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY | getattr(os, "O_DIRECTORY", 0))
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _flatten_with_names(tree: PyTree) -> tuple[list[tuple[str, Any]], Any]:
@@ -43,10 +61,27 @@ def _flatten_with_names(tree: PyTree) -> tuple[list[tuple[str, Any]], Any]:
 
 
 def save_checkpoint(directory: str, step: int, tree: PyTree) -> str:
-    """Atomic synchronous save. Returns the final checkpoint path."""
+    """Atomic synchronous save. Returns the final checkpoint path.
+
+    Crash discipline (each ``faults.trip`` marks a window a real process
+    can die in; the fault suite kills the save there and asserts the
+    latest *complete* checkpoint still loads):
+
+    1. all payload is written under ``step_N.tmp-<nonce>/`` and fsynced
+       (file contents first, then the tmp dir entry) — a crash here
+       leaves only a tmp dir, which ``latest_step`` never matches;
+    2. an existing ``step_N/`` is moved ASIDE (rename, not rmtree!) —
+       the old code deleted it before publishing the replacement, so a
+       crash in between lost BOTH copies of step N;
+    3. one atomic ``os.rename(tmp, final)`` publishes, then the parent
+       directory entry is fsynced so the publish survives power loss;
+    4. only after publishing are the old copy and stale tmp dirs
+       removed.
+    """
     named, _ = _flatten_with_names(tree)
     os.makedirs(directory, exist_ok=True)
-    tmp = os.path.join(directory, f"step_{step}.tmp-{uuid.uuid4().hex[:8]}")
+    nonce = uuid.uuid4().hex[:8]
+    tmp = os.path.join(directory, f"step_{step}.tmp-{nonce}")
     os.makedirs(tmp)
     arrays = {}
     manifest = {"step": step, "leaves": []}
@@ -60,14 +95,29 @@ def save_checkpoint(directory: str, step: int, tree: PyTree) -> str:
                                    "shape": list(arr.shape),
                                    "dtype": str(arr.dtype),
                                    "raw": raw})
-    np.savez(os.path.join(tmp, "shard_0.npz"), **arrays)
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+    shard = os.path.join(tmp, "shard_0.npz")
+    np.savez(shard, **arrays)
+    faults.trip("checkpoint.mid_write")
+    mani = os.path.join(tmp, "manifest.json")
+    with open(mani, "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_file(shard)
+    _fsync_dir(tmp)
+    faults.trip("checkpoint.after_write")
     final = os.path.join(directory, f"step_{step}")
+    aside = None
     if os.path.exists(final):
-        shutil.rmtree(final)
+        aside = os.path.join(directory, f"step_{step}.tmp-old-{nonce}")
+        os.rename(final, aside)
+        faults.trip("checkpoint.between_renames")
     os.rename(tmp, final)
-    # Drop stale tmp dirs from crashed saves.
+    _fsync_dir(directory)
+    faults.trip("checkpoint.after_publish")
+    if aside is not None:
+        shutil.rmtree(aside, ignore_errors=True)
+    # Drop stale tmp dirs from crashed saves (ours are gone already).
     for d in os.listdir(directory):
         if ".tmp-" in d:
             shutil.rmtree(os.path.join(directory, d), ignore_errors=True)

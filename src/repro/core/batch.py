@@ -33,6 +33,21 @@ def batch_kpca(K: Array, *, adjusted: bool) -> tuple[Array, Array]:
     return jnp.linalg.eigh(Keff)
 
 
+def refit_state(state, spec: kf.KernelSpec, *, adjusted: bool):
+    """From-scratch re-fit oracle: rebuild a padded ``KPCAState`` by batch
+    KPCA of the stored active points X[:m] — the baseline the heal
+    ladder's in-place ``health.resync`` is benchmarked against (resync
+    skips the stream replay and the gram's host round-trip, but both end
+    at the same eigensystem).  Returns a state with identical capacity,
+    padding sentinels and running sums to a fresh ``inkpca.init_state``
+    of the same points."""
+    from repro.core import inkpca
+
+    m = int(state.m)
+    return inkpca.init_state(state.X[:m], state.L.shape[0], spec,
+                             adjusted=adjusted, dtype=state.L.dtype)
+
+
 @partial(jax.jit)
 def rotated_eigh_step(L: Array, U: Array, Kprev: Array, Knew: Array
                       ) -> tuple[Array, Array]:

@@ -473,9 +473,31 @@ def _window_step_sharded(L, U_local, X, ages, clock, x_new, m, *,
     forward expansion + ±sigma pair reuse the sharded bodies above, so
     the per-step collective schedule is fixed (ppermute + 6 O(M) psums,
     all unconditional) and the step composes under ``lax.scan``.
+
+    With ``plan.health`` quarantine on, a non-finite (or kernel-row
+    outlier) arrival is rejected with ZERO state mutation: the step body
+    still executes unconditionally on a sanitized stand-in (the stored
+    row 0) — ``x_new`` is replicated, so the verdict is identical on
+    every shard and the collective schedule above stays fixed (the same
+    deadlock-free discipline as the merge fallback) — and a final
+    replicated elementwise select discards the result.  The clock then
+    does not advance, so the caller recovers the quarantine count as
+    ``T − (clock_after − clock_before)``.
     """
     M = L.shape[0]
     dtype = L.dtype
+    policy = getattr(plan, "health", None)
+    guard = policy is not None and policy.quarantine
+    if guard:
+        ok = jnp.all(jnp.isfinite(x_new))
+        if policy.outlier_tol > 0.0:
+            x_tmp = jnp.where(ok, x_new, X[0].astype(x_new.dtype))
+            a_g = kf.kernel_row(x_tmp, X, spec=spec)
+            a_g = jnp.where(rankone.active_mask(M, m), a_g, 0.0)
+            k_g = kf.gram_block(x_tmp[None], x_tmp[None], spec=spec)[0, 0]
+            ok = ok & (jnp.max(jnp.abs(a_g)) >= policy.outlier_tol * k_g)
+        x_new = jnp.where(ok, x_new, X[0].astype(x_new.dtype))
+        L0, U0, X0, ages0, clock0 = L, U_local, X, ages, clock
     victim = jnp.argmin(ages).astype(jnp.int32)
     order = dd.boundary_perm(victim, m, M)
 
@@ -543,6 +565,10 @@ def _window_step_sharded(L, U_local, X, ages, clock, x_new, m, *,
                                                rows_full=rows_full)
     X2 = jnp.where((idx == m1)[:, None], x_new[None, :].astype(X1.dtype), X1)
     ages2 = ages1.at[m1].set(clock)
+    if guard:
+        return (jnp.where(ok, L3, L0), jnp.where(ok, U3, U0),
+                jnp.where(ok, X2, X0), jnp.where(ok, ages2, ages0),
+                jnp.where(ok, clock + 1, clock0))
     return L3, U3, X2, ages2, clock + 1
 
 

@@ -109,6 +109,16 @@ class UpdatePlan(NamedTuple):
                     against the last published snapshot in between
     serve_components: projection width C frozen into published snapshots
                     (the S matrix is (M, C)); queries return C components
+    health:         a ``core/health.HealthPolicy`` (hashable NamedTuple,
+                    jit-static like the rest of the plan) enabling the
+                    self-healing layer: in-graph probes + input
+                    quarantine on the ``*_guarded`` dispatches, heal
+                    thresholds for ``Engine.heal``/``KPCAStream``, and
+                    the drift threshold for staleness-aware publication
+                    (``launch/serve.IngestServeLoop``).  None (default)
+                    keeps every pre-existing path bit-identical;
+                    normalized away by ``kernel_plan`` so the inner
+                    update kernels never re-specialize per policy.
     """
 
     method: str = "gu"
@@ -124,6 +134,7 @@ class UpdatePlan(NamedTuple):
     fuse_krow: bool = False
     serve_every: int = 1
     serve_components: int = 8
+    health: object | None = None
 
     @property
     def fused(self) -> bool:
@@ -145,7 +156,8 @@ class UpdatePlan(NamedTuple):
                              window=None,
                              landmark_policy="append",
                              serve_every=1,
-                             serve_components=8)
+                             serve_components=8,
+                             health=None)
 
 
 DEFAULT_PLAN = UpdatePlan()
@@ -649,6 +661,158 @@ class Engine:
             kpca, ages = sub, ages_sub
         return wnd.WindowState(kpca=kpca, ages=ages, clock=clock)
 
+    # ---- self-healing layer (core/health.py) -------------------------------
+    def _health_policy(self):
+        policy = self.plan.health
+        if policy is None:
+            raise ValueError(
+                "guarded dispatch needs a health policy — build the engine "
+                "with UpdatePlan(health=health.HealthPolicy(...))")
+        return policy
+
+    def update_guarded(self, state, hstate, x_new: Array, *,
+                       min_rows: int = 0):
+        """``update`` with the self-healing layer: the offered point is
+        gated (non-finite / outlier quarantine) before the rank-one pair
+        fires, and an in-graph probe refreshes ``hstate`` — all under the
+        same single dispatch, zero extra host syncs.  A rejected point
+        returns the input state bitwise.  Returns ``(state, hstate)``."""
+        self._health_policy()
+        from repro.core import health as hl
+
+        M = state.L.shape[0]
+        Mb = self._bucket(M, max(int(state.m) + 1, min_rows))
+        return hl._guarded_update_impl(state, hstate, jnp.asarray(x_new),
+                                       self.spec, self.adjusted, self.plan,
+                                       Mb)
+
+    def update_block_guarded(self, state, hstate, xs: Array, *,
+                             min_rows: int = 0):
+        """Guarded ``update_block``: per-point gate + select inside the
+        scan, one probe per chunk.  Chunk cuts re-read the ACTUAL active
+        count, so rejected points never push a chunk past its bucket."""
+        self._health_policy()
+        from repro.core import health as hl
+
+        xs = jnp.asarray(xs)
+        M = state.L.shape[0]
+        n = xs.shape[0]
+        i = 0
+        while i < n:
+            m = int(state.m)
+            Mb = self._bucket(M, max(m + 1, min_rows))
+            take = (min(Mb - m, n - i) if self.plan.dispatch == "bucketed"
+                    else n - i)
+            state, hstate = hl._guarded_scan_chunk_impl(
+                state, hstate, xs[i:i + take], self.spec, self.adjusted,
+                self.plan, Mb)
+            i += take
+        return state, hstate
+
+    def window_ingest_guarded(self, wstate, hstate, x_new: Array, *,
+                              window: int, min_rows: int = 0):
+        """Guarded ``window.ingest``: one sliding-window point through
+        the quarantine gate.  Rejection leaves the eigensystem, the
+        arrival ring, the ages AND the clock untouched (bitwise), so the
+        evict order of a stream that saw a bad point is identical to one
+        that never did.  Returns ``(wstate, hstate)``."""
+        self._health_policy()
+        from repro.core import health as hl
+        from repro.core import window as wnd
+
+        x_new = jnp.asarray(x_new)
+        M = wstate.kpca.L.shape[0]
+        m = int(wstate.kpca.m)
+        if int(wstate.clock) + 1 >= wnd.age_sentinel(wstate.ages.dtype) - 1:
+            wstate = wnd.rebase_ages(wstate)
+        if m >= window:
+            Mb = self._window_bucket(M, window, min_rows)
+            kpca, ages, clock, hstate = hl._guarded_window_chunk_impl(
+                wstate.kpca, wstate.ages, wstate.clock, hstate,
+                x_new[None], self.spec, self.adjusted, self.plan, Mb)
+        else:
+            Mb = self._bucket(M, max(m + 1, min_rows))
+            kpca, ages, clock, hstate = hl._guarded_grow_step_impl(
+                wstate.kpca, wstate.ages, wstate.clock, hstate, x_new,
+                self.spec, self.adjusted, self.plan, Mb)
+        return wnd.WindowState(kpca=kpca, ages=ages, clock=clock), hstate
+
+    def window_block_guarded(self, wstate, hstate, xs: Array, *,
+                             window: int, min_rows: int = 0):
+        """Guarded ``window_block``: growth-phase points step through the
+        per-point gate (the arrival stamp is conditional, so the ring
+        semantics match ``window_ingest_guarded``), steady-state points
+        fold through ONE guarded scan — fixed shapes, fixed collective
+        schedule, clock advances only by the accepted count."""
+        self._health_policy()
+        from repro.core import health as hl
+        from repro.core import window as wnd
+
+        xs = jnp.asarray(xs)
+        T = xs.shape[0]
+        if T == 0:
+            return wstate, hstate
+        M = wstate.kpca.L.shape[0]
+        if int(wstate.clock) + T >= wnd.age_sentinel(wstate.ages.dtype) - 1:
+            wstate = wnd.rebase_ages(wstate)
+        i = 0
+        # Growth phase: per-point host loop — acceptance changes m, and
+        # the bucket / phase decision reads it (same sync window.ingest
+        # already pays per point).
+        while i < T and int(wstate.kpca.m) < window:
+            Mb = self._bucket(M, max(int(wstate.kpca.m) + 1, min_rows))
+            kpca, ages, clock, hstate = hl._guarded_grow_step_impl(
+                wstate.kpca, wstate.ages, wstate.clock, hstate, xs[i],
+                self.spec, self.adjusted, self.plan, Mb)
+            wstate = wnd.WindowState(kpca=kpca, ages=ages, clock=clock)
+            i += 1
+        if i == T:
+            return wstate, hstate
+        Mb = self._window_bucket(M, window, min_rows)
+        kpca, ages, clock, hstate = hl._guarded_window_chunk_impl(
+            wstate.kpca, wstate.ages, wstate.clock, hstate, xs[i:],
+            self.spec, self.adjusted, self.plan, Mb)
+        return wnd.WindowState(kpca=kpca, ages=ages, clock=clock), hstate
+
+    def probe(self, state, hstate=None, *, ref_lam: Array | None = None):
+        """Standalone in-graph health probe of any state this engine
+        serves (KPCAState, WindowState or NystromState — wrapper states
+        probe their ``.kpca`` block).  ``ref_lam`` folds the spectral
+        staleness check into the same dispatch.  Returns a fresh/updated
+        ``HealthState`` (device-resident)."""
+        from repro.core import health as hl
+
+        policy = self.plan.health or hl.DEFAULT_POLICY
+        kpca = getattr(state, "kpca", state)
+        if hstate is None:
+            hstate = hl.init_health(kpca.L.dtype)
+        if ref_lam is None:
+            return hl._probe_jit(kpca, hstate, policy)
+        return hl._probe_ref_jit(kpca, hstate, policy, jnp.asarray(ref_lam))
+
+    def heal(self, state, *, level: str = "auto"):
+        """Walk the heal ladder (polish → resync; see ``core/health``)
+        on any state this engine serves.  WindowState keeps its ring and
+        clock; NystromState heals the landmark eigensystem (always
+        unadjusted — the K_mm block) and keeps ``Knm``/``Xrows``, after
+        which the caller should re-anchor any ``TraceErrorTracker`` via
+        ``tracker.resync(state)``.  Raises ``health.HealthError`` when
+        the stored points are corrupt — the restore-from-checkpoint
+        rung, executed by whoever owns the checkpoint directory."""
+        from repro.core import health as hl
+
+        policy = self.plan.health or hl.DEFAULT_POLICY
+        if hasattr(state, "Knm"):                      # NystromState
+            kpca = hl.heal_kpca(state.kpca, self.spec, False, policy,
+                                level=level)
+            return state._replace(kpca=kpca)
+        if hasattr(state, "kpca"):                     # WindowState
+            kpca = hl.heal_kpca(state.kpca, self.spec, self.adjusted,
+                                policy, level=level)
+            return state._replace(kpca=kpca)
+        return hl.heal_kpca(state, self.spec, self.adjusted, policy,
+                            level=level)
+
     # ---- low-level rank-one -----------------------------------------------
     def rank_one(self, L: Array, U: Array, v: Array, sigma: Array, m: Array
                  ) -> tuple[Array, Array]:
@@ -1046,6 +1210,9 @@ class StreamBatch:
         self._m_host = np.full((self.n_tenants,), int(x0.shape[1]),
                                dtype=np.int64)
         self._groups: list[dict] | None = None
+        # Per-tenant tally of points rejected by the non-finite gate
+        # (``plan.health.quarantine``) before any device dispatch.
+        self.quarantined = np.zeros((self.n_tenants,), dtype=np.int64)
 
     # ---- bucket residency ---------------------------------------------------
     def _flush(self):
@@ -1211,6 +1378,20 @@ class StreamBatch:
         plan = self.plan.kernel_plan()
         act_host = (np.ones(self.n_tenants, bool) if active is None
                     else np.asarray(active, bool))
+        policy = getattr(self.plan, "health", None)
+        if policy is not None and policy.quarantine:
+            # Host-side non-finite gate: a poisoned lane drops out of the
+            # active mask BEFORE the evict mask is computed, so a windowed
+            # tenant never evicts for an ingest that does not happen, its
+            # ring/clock bookkeeping (_m_host) stays untouched, and the
+            # rejected point is zeroed so it cannot NaN-poison the shared
+            # batched dispatch other lanes ride.
+            ok = np.isfinite(np.asarray(xs)).all(axis=1)
+            if not ok.all():
+                self.quarantined[act_host & ~ok] += 1
+                act_host = act_host & ok
+                active = jnp.asarray(act_host)
+                xs = jnp.where(jnp.asarray(ok)[:, None], xs, 0.0)
         evict = self._evict_mask(act_host)
         if self._grouped:
             self._m_host_pending_check(act_host, evict)
@@ -1309,10 +1490,40 @@ class StreamBatch:
         steps are fixed-shape evict+ingest pairs and fold through ONE
         scanned dispatch per cohort group
         (``_batched_window_scan_masked``) — the multi-tenant mirror of
-        ``Engine.window_block``'s steady state."""
+        ``Engine.window_block``'s steady state.
+
+        With ``plan.health.quarantine`` the block is cut at the steps
+        that carry a non-finite point: maximal clean runs keep the
+        scanned block path, poisoned steps route through the per-point
+        ``update`` gate (which drops only the offending lanes and tallies
+        them in ``quarantined``)."""
         import numpy as np
 
         xs = jnp.asarray(xs)
+        T = xs.shape[0]
+        policy = getattr(self.plan, "health", None)
+        if policy is not None and policy.quarantine:
+            finite = np.isfinite(np.asarray(xs)).all(axis=(1, 2))
+            if not bool(finite.all()):
+                out = None
+                i = 0
+                while i < T:
+                    if finite[i]:
+                        j = i + 1
+                        while j < T and finite[j]:
+                            j += 1
+                        out = self._update_block_clean(xs[i:j])
+                        i = j
+                    else:
+                        out = self.update(xs[i])
+                        i += 1
+                return out
+        return self._update_block_clean(xs)
+
+    def _update_block_clean(self, xs: Array):
+        """``update_block`` body for an all-finite block (see above)."""
+        import numpy as np
+
         T = xs.shape[0]
         if self.window is not None:
             # Mixed-cohort windowed blocks: tenant lanes are disjoint, so
@@ -1402,6 +1613,82 @@ class StreamBatch:
         if self._grouped and self._groups is not None:
             return [g["state"] for g in self._groups]
         return [self._sub if self._sub is not None else self._full]
+
+    def health_summary(self) -> dict:
+        """Host-side quarantine tally (``plan.health.quarantine``): total
+        and per-tenant counts of points rejected by the non-finite gate
+        before any device dispatch."""
+        return {"quarantined": int(self.quarantined.sum()),
+                "quarantined_per_tenant": self.quarantined.copy()}
+
+    def probe_all(self, ref_lam=None):
+        """Vmapped in-graph health probe over every tenant's working
+        state — no flush, one probe dispatch per occupied bucket group.
+        Returns host arrays ``(healthy, drift)`` of shape (B,); ``drift``
+        is None unless ``ref_lam`` (a (B, C) frozen top spectrum, e.g.
+        the one recorded at the last publication) is given, in which case
+        it carries each tenant's relative spectral drift — the staleness
+        signal for drift-triggered publication."""
+        import numpy as np
+
+        from repro.core import health as hl
+
+        policy = getattr(self.plan, "health", None) or hl.DEFAULT_POLICY
+        healthy = np.zeros(self.n_tenants, bool)
+        drift = None if ref_lam is None else np.zeros(self.n_tenants, float)
+        ref = None if ref_lam is None else jnp.asarray(ref_lam)
+
+        def one(st, lanes, idx):
+            # lanes: tenant id per stacked lane (repeats pad the group);
+            # the first len(idx) lanes are the real tenants.
+            h0 = hl.init_health(st.L.dtype)
+            hb = jax.vmap(lambda s: hl.probe(s, h0, policy))(st)
+            ok = np.asarray(jax.vmap(lambda h: hl.verdict(h, policy))(hb))
+            healthy[idx] = ok[:len(idx)]
+            if ref is not None:
+                dr = np.asarray(jax.vmap(hl.spectral_drift)(
+                    st, ref[np.asarray(lanes)]))
+                drift[idx] = dr[:len(idx)]
+
+        if self._grouped and self._groups is not None:
+            for grp in self._groups:
+                one(grp["state"], np.asarray(grp["idx_pad"]),
+                    np.asarray(grp["idx"]))
+        else:
+            st = self._sub if self._sub is not None else self._full
+            idx = np.arange(self.n_tenants)
+            one(st, idx, idx)
+        return healthy, drift
+
+    def heal(self, *, level: str = "auto") -> int:
+        """Walk the heal ladder (``health.heal_kpca``) over the cohort:
+        probe every tenant, flush, and heal the unhealthy ones in place
+        ("auto"; a forced ``level`` heals all).  Returns the number of
+        tenants healed.  ``health.HealthError`` propagates — the
+        restore-from-checkpoint rung belongs to the caller, who owns the
+        checkpoint directory."""
+        import numpy as np
+
+        from repro.core import health as hl
+
+        policy = getattr(self.plan, "health", None) or hl.DEFAULT_POLICY
+        if level == "auto":
+            healthy, _ = self.probe_all()
+            todo = np.nonzero(~healthy)[0]
+        else:
+            todo = np.arange(self.n_tenants)
+        if len(todo) == 0:
+            return 0
+        self._flush()
+        full = self._full
+        for i in todo:
+            st = jax.tree.map(lambda leaf: leaf[int(i)], full)
+            st = hl.heal_kpca(st, self.spec, self.adjusted, policy,
+                              level=level)
+            full = jax.tree.map(lambda fl, sl: fl.at[int(i)].set(sl),
+                                full, st)
+        self._full = full
+        return len(todo)
 
     def publish(self, n_components: int | None = None):
         """Publish per-tenant ``serving.ServingSnapshot``s (stacked on the

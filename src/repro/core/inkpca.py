@@ -354,6 +354,13 @@ class KPCAStream:
         # Row-support floor for bucket selection: a truncated, uncompacted
         # state keeps eigenvector mass on rows beyond m (see Engine.truncate).
         self._min_rows = 0
+        # Self-healing layer (core/health.py): with plan.health set, every
+        # update routes through the guarded dispatches — input quarantine
+        # plus in-graph probes riding along in self.health.
+        self.health = None
+        if plan.health is not None:
+            from repro.core import health as hl
+            self.health = hl.init_health(self.kpca_state.L.dtype)
 
     @property
     def kpca_state(self) -> KPCAState:
@@ -361,6 +368,16 @@ class KPCAStream:
         return self.state.kpca if self.window is not None else self.state
 
     def update(self, x_new: Array):
+        if self.health is not None:
+            if self.window is not None:
+                self.state, self.health = self.engine.window_ingest_guarded(
+                    self.state, self.health, x_new, window=self.window,
+                    min_rows=self._min_rows)
+            else:
+                self.state, self.health = self.engine.update_guarded(
+                    self.state, self.health, x_new,
+                    min_rows=self._min_rows)
+            return self.state
         if self.window is not None:
             from repro.core import window as wnd
             self.state = wnd.ingest(self.engine, self.state, x_new,
@@ -391,6 +408,15 @@ class KPCAStream:
         append-only, and once the window fills the evict+ingest pairs run
         as ONE scanned dispatch per block (fixed shape at m ≡ W) instead
         of the old per-point host-decided stepping."""
+        if self.health is not None:
+            if self.window is not None:
+                self.state, self.health = self.engine.window_block_guarded(
+                    self.state, self.health, xs, window=self.window,
+                    min_rows=self._min_rows)
+            else:
+                self.state, self.health = self.engine.update_block_guarded(
+                    self.state, self.health, xs, min_rows=self._min_rows)
+            return self.state
         if self.window is not None:
             self.state = self.engine.window_block(self.state, xs,
                                                   window=self.window,
@@ -402,6 +428,37 @@ class KPCAStream:
 
     # sklearn-style spelling for streaming consumers: identical semantics.
     partial_fit_block = update_block
+
+    # ---- self-healing (core/health.py) ------------------------------------
+    def heal(self, *, level: str = "auto"):
+        """Walk the heal ladder on the stream's state (polish → resync;
+        ``health.HealthError`` escalates to restore-from-checkpoint).
+        Clears the sticky probe flags so post-heal probes start clean."""
+        self.state = self.engine.heal(self.state, level=level)
+        if self.health is not None:
+            from repro.core import health as hl
+            self.health = self.health._replace(
+                nonfinite=jnp.zeros((), jnp.int32),
+                orth_err=jnp.zeros((), self.health.orth_err.dtype))
+        return self.state
+
+    def health_report(self) -> dict:
+        """Host-side snapshot of the riding HealthState (one sync)."""
+        if self.health is None:
+            return {}
+        h = self.health
+        return {"orth_err": float(h.orth_err), "neg_frac": float(h.neg_frac),
+                "nonfinite": int(h.nonfinite),
+                "quarantined": int(h.quarantined),
+                "rejected_last": int(h.rejected_last),
+                "probes": int(h.probes), "spec_drift": float(h.spec_drift)}
+
+    def is_healthy(self) -> bool:
+        """Verdict of the last in-graph probe against the plan policy."""
+        if self.health is None:
+            return True
+        from repro.core import health as hl
+        return hl.is_healthy(self.health, self.plan.health)
 
     def truncate(self, k: int, *, compact: bool | None = None) -> KPCAState:
         """Keep only the k dominant eigenpairs (paper conclusion: 'adapt the

@@ -88,11 +88,26 @@ def observe_rows(state: NystromState, xb: Array,
     ``plan.fuse_krow`` the gram is evaluated only against the active
     landmark bucket (columns beyond it are zero by the masking anyway),
     so the call costs O(b·M_b·d) instead of O(b·M·d).
+
+    With ``plan.health`` quarantine enabled, non-finite observed points
+    are dropped before any Knm row is built (row growth is host-level
+    already, so the filter costs nothing extra): a NaN row would
+    otherwise poison every later trace-error contraction.  The caller
+    sees the rejection in the returned row count (``Xrows.shape[0]``);
+    the serving loop surfaces it as a quarantine counter.
     """
     if state.Xrows is None:
         raise ValueError("observe_rows needs a grow_rows=True state")
     dtype = state.Knm.dtype
     xb = jnp.atleast_2d(xb).astype(dtype)
+    policy = getattr(plan, "health", None) if plan is not None else None
+    if policy is not None and policy.quarantine:
+        import numpy as np
+        keep = np.isfinite(np.asarray(xb)).all(axis=1)
+        if not keep.all():
+            xb = xb[jnp.asarray(keep)]
+            if xb.shape[0] == 0:
+                return state
     M = state.Knm.shape[1]
     if (plan is not None and plan.fuse_krow
             and plan.dispatch == "bucketed"):

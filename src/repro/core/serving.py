@@ -188,6 +188,16 @@ class DoubleBuffer:
     buffers become the new snapshot's storage), so steady-state
     publication allocates nothing and the swap is a reference flip —
     O(1) regardless of capacity M.
+
+    **Graceful degradation** (``core/health``): ``publish`` takes a
+    ``healthy`` verdict from the caller's probe pass.  An unhealthy
+    working state is NEVER frozen into a generation — the buffer keeps
+    serving the last healthy front (queries are bit-stable against it by
+    immutability) and counts the refusal in ``skipped``, so a drifting
+    or NaN-poisoned ingest path degrades to stale-but-correct answers
+    instead of serving garbage.  ``ref_lam`` freezes the published
+    top-C spectrum alongside each front, giving the staleness-aware
+    publication policy its drift reference for free.
     """
 
     def __init__(self, state=None, *, n_components: int | None = None,
@@ -197,20 +207,32 @@ class DoubleBuffer:
         self.front: ServingSnapshot | None = None
         self._retired: ServingSnapshot | None = None
         self._generation = 0
+        self.skipped = 0
+        self.ref_lam: Array | None = None
         if state is not None:
             self.publish(state)
 
     def publish(self, state, *, n_components: int | None = None,
-                adjusted: bool | None = None) -> ServingSnapshot:
+                adjusted: bool | None = None,
+                healthy: bool = True) -> ServingSnapshot:
         nc = self.n_components if n_components is None else n_components
         adj = self.adjusted if adjusted is None else adjusted
         if nc is None:
             raise ValueError("n_components must be set on the buffer or "
                              "passed to publish()")
+        if not healthy:
+            if self.front is None:
+                raise ValueError("refusing to publish an unhealthy state "
+                                 "with no prior healthy snapshot to serve")
+            self.skipped += 1
+            return self.front
+        from repro.core import health as hl
+
         retire, self._retired = self._retired, self.front
         self.front = publish_transform(state, n_components=nc, adjusted=adj,
                                        generation=self._generation,
                                        retire=retire)
+        self.ref_lam = hl.top_spectrum(state, nc)
         self._generation += 1
         return self.front
 

@@ -127,7 +127,7 @@ def stamp_grown_ages(wstate: WindowState, grown, count: int) -> WindowState:
 
 
 def ingest(engine: eng.Engine, wstate: WindowState, x_new: Array, *,
-           window: int, min_rows: int = 0) -> WindowState:
+           window: int, min_rows: int = 0, hstate=None):
     """One sliding-window step: evict-oldest if the window is full, then
     fold the new point in and stamp its arrival index.
 
@@ -135,7 +135,27 @@ def ingest(engine: eng.Engine, wstate: WindowState, x_new: Array, *,
     selection already pays); the rebase guard is traced.  For steady-state
     blocks use ``Engine.window_block`` — one scanned dispatch, no host
     syncs inside the block.
+
+    With a health policy on the plan (``plan.health``) the point goes
+    through the quarantine gate first — a rejected (non-finite/outlier)
+    point leaves the eigensystem, the arrival ring, the ages AND the
+    clock untouched, so evict order stays consistent with a stream that
+    never saw it.  (The old behaviour evicted and stamped regardless,
+    which skewed the ring even though the update should not happen.)
+    Pass ``hstate`` (a ``health.HealthState``) to also receive the
+    updated probe/quarantine counters: returns ``(wstate, hstate)``;
+    without it, returns ``wstate`` alone.
     """
+    policy = getattr(engine.plan, "health", None)
+    if policy is not None:
+        from repro.core import health as hl
+
+        h = hstate if hstate is not None else hl.init_health(
+            wstate.kpca.L.dtype)
+        out, h = engine.window_ingest_guarded(wstate, h, x_new,
+                                              window=window,
+                                              min_rows=min_rows)
+        return (out, h) if hstate is not None else out
     wstate = maybe_rebase(wstate)
     if int(wstate.kpca.m) >= window:
         wstate = evict(engine, wstate, oldest_row(wstate),

@@ -76,12 +76,18 @@ from repro.models import lm
 def _make_plan(args):
     from repro.core import engine as eng
 
+    health = None
+    if getattr(args, "health", False):
+        from repro.core import health as hl
+
+        health = hl.DEFAULT_POLICY
     return eng.UpdatePlan(matmul=args.matmul, dispatch=args.dispatch,
                           window=args.window,
                           landmark_policy=args.landmark_policy,
                           fuse_krow=args.fuse_krow,
                           serve_every=args.serve_every,
-                          serve_components=args.serve_components)
+                          serve_components=args.serve_components,
+                          health=health)
 
 
 def _parse_mesh(text):
@@ -158,19 +164,53 @@ class IngestServeLoop:
     query executor — e.g. ``distributed.make_tenant_query`` on a
     (tenant, data) 2-D mesh shards the same stacked snapshot over the
     tenant axis with zero collectives.
+
+    **Graceful degradation** (``plan.health``): every publication is
+    gated on a vmapped probe pass over the working states — an unhealthy
+    tenant first gets one heal-ladder attempt (``StreamBatch.heal``); if
+    the cohort still fails the verdict the publication is REFUSED
+    (``skipped`` counts it) and queries keep reading the last healthy
+    snapshot, so a NaN-poisoned or drifting ingest path serves
+    stale-but-correct answers instead of garbage generations.
+
+    **Staleness-aware publication** (``publish_on_drift``): instead of a
+    fixed ``serve_every`` cadence, republish when any tenant's working
+    top-C spectrum has drifted (relative L2) past the threshold from the
+    reference frozen at the last publication — the same probe pass
+    produces the verdict AND the drift, so the check costs one fused
+    dispatch.  ``serve_every`` then acts as the max-staleness fallback.
     """
 
     def __init__(self, batch, spec, *, plan=None, n_components=None,
-                 query_fn=None):
+                 query_fn=None, publish_on_drift=None):
         self.batch = batch
         self.spec = spec
         self.plan = plan if plan is not None else batch.plan
         self.serve_every = max(1, int(getattr(self.plan, "serve_every", 1)))
         self.n_components = n_components
         self._query_fn = query_fn
+        self.policy = getattr(self.plan, "health", None)
+        self.publish_on_drift = publish_on_drift
+        self.skipped = 0           # publications refused on health
+        self.heals = 0             # tenants sent down the heal ladder
+        self.drift_publishes = 0   # publications triggered by drift
+        self.ref_lam = None        # (B, C) top spectrum at last publish
         self.snaps = batch.publish(n_components)
         self.generation = 0          # host mirror of snaps.generation
         self._since = 0
+        self._record_ref()
+
+    def _record_ref(self):
+        """Freeze the published top-C spectrum as the drift reference."""
+        if self.policy is None and self.publish_on_drift is None:
+            return
+        from repro.core import health as hl
+
+        st = self.batch.working_states()[0]
+        nc = int(self.n_components
+                 if self.n_components is not None
+                 else getattr(self.plan, "serve_components", 8))
+        self.ref_lam = jax.vmap(lambda s: hl.top_spectrum(s, nc))(st)
 
     def query(self, q):
         """(B, nq, d) queries against the published snapshot; safe to call
@@ -184,21 +224,56 @@ class IngestServeLoop:
 
     def publish(self):
         """Republish the working state: new snapshot, host-flip the
-        buffer.  Returns the fresh (tenant-stacked) snapshot."""
+        buffer.  With a health policy the publication is gated on the
+        probe verdict (heal once, then refuse — the previous snapshot
+        keeps serving and ``skipped`` counts the refusal).  Returns the
+        current (tenant-stacked) snapshot either way."""
+        if self.policy is not None:
+            from repro.core import health as hl
+
+            healthy, _ = self.batch.probe_all()
+            if not healthy.all():
+                try:
+                    self.heals += self.batch.heal()
+                except hl.HealthError:
+                    # Stored points corrupt: in-place healing impossible.
+                    # Restore-from-checkpoint belongs to whoever owns the
+                    # checkpoint directory — degrade to stale serving.
+                    pass
+                healthy, _ = self.batch.probe_all()
+            if not healthy.all():
+                self.skipped += 1
+                return self.snaps
         self.snaps = self.batch.publish(self.n_components)
         self.generation += 1
         self._since = 0
+        self._record_ref()
         return self.snaps
+
+    def _drift_due(self) -> bool:
+        """True when any tenant's spectrum has left the published one."""
+        import numpy as np
+
+        if self.publish_on_drift is None or self.ref_lam is None:
+            return False
+        _, drift = self.batch.probe_all(ref_lam=self.ref_lam)
+        return bool(np.max(drift) > self.publish_on_drift)
 
     def ingest(self, xs) -> bool:
         """Fold one (B, d) block into the working state; republish when
-        the serve_every cadence says so.  True iff a publish happened."""
+        the serve_every cadence — or, with ``publish_on_drift``, the
+        spectral-drift trigger — says so.  True iff a publish happened."""
         self.batch.update(xs)
         self._since += 1
-        if self._since < self.serve_every:
+        cadence = self._since >= self.serve_every
+        drifted = (not cadence) and self._drift_due()
+        if drifted:
+            self.drift_publishes += 1
+        if not (cadence or drifted):
             return False
+        gen0 = self.generation
         self.publish()
-        return True
+        return self.generation != gen0
 
     def step(self, xs, queries=None):
         """One service step: queries first (against B), then ingest
@@ -225,6 +300,7 @@ def kpca_main(args) -> dict:
     # polluted the percentiles.  Keyed first calls go to *_compile_ms.
     upd, qry = _PhaseTimer(), _PhaseTimer()
     n_served = 0
+    n_heals = 0
     t_total = time.time()
     for i in range(args.points):
         x = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
@@ -235,6 +311,12 @@ def kpca_main(args) -> dict:
         jax.block_until_ready(st.L)
         upd.add((time.perf_counter() - t0) * 1e3, key=rung)
         if (i + 1) % args.transform_every == 0:
+            # Self-healing cadence rides the transform interval: one host
+            # read of the in-graph probe verdict, heal ladder on failure.
+            if args.health and not stream.is_healthy():
+                stream.heal()
+                n_heals += 1
+                st = stream.kpca_state
             q = jnp.asarray(rng.normal(size=(args.batch, d)), jnp.float32)
             n_comp = min(8, int(st.m))
             t0 = time.perf_counter()
@@ -255,6 +337,9 @@ def kpca_main(args) -> dict:
         "total_s": t_total,
         "finite": bool(jnp.isfinite(st.L).all()),
     }
+    if args.health:
+        result["heals"] = n_heals
+        result["health"] = stream.health_report()
     print(f"[serve/kpca] {args.dispatch}: {args.points} updates to "
           f"m={result['m_final']} (capacity {args.capacity}, "
           f"window {args.window}), "
@@ -280,6 +365,9 @@ def nystrom_main(args) -> dict:
                                         patience=args.stop_patience)
     budget = args.landmark_budget or args.capacity - 1
     counts = {"admitted": 0, "rejected": 0, "replaced": 0}
+    n_quarantined = 0
+    quarantine = (getattr(engine.plan, "health", None) is not None
+                  and engine.plan.health.quarantine)
     stopped_at = None
     t_total = time.time()
     leverage = engine.plan.landmark_policy == "leverage"
@@ -288,6 +376,11 @@ def nystrom_main(args) -> dict:
     tracker = nystrom.TraceErrorTracker(state, spec) if leverage else None
     for i in range(args.points):
         x = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+        if quarantine and not bool(jnp.isfinite(x).all()):
+            # The observe_rows gate would drop the row anyway; counting
+            # and skipping here keeps it out of the landmark offer too.
+            n_quarantined += 1
+            continue
         res = None
         if leverage and not rule.sufficient:
             # ONE residual dispatch serves both the tracker's observe
@@ -332,6 +425,8 @@ def nystrom_main(args) -> dict:
                        and np.isfinite(err)),
         **counts,
     }
+    if quarantine:
+        result["quarantined"] = n_quarantined
     print(f"[serve/nystrom] {args.landmark_policy}: {args.points} points, "
           f"{counts['admitted']} admitted / {counts['replaced']} replaced / "
           f"{counts['rejected']} rejected -> m={result['m_final']}, "
@@ -395,6 +490,8 @@ def kpca_multitenant_main(args) -> dict:
         "total_s": t_total,
         "finite": bool(jnp.isfinite(batch.states.L).all()),
     }
+    if args.health:
+        result["quarantined"] = batch.health_summary()["quarantined"]
     print(f"[serve/kpca] {B} tenants x {args.points} updates to "
           f"m={m_final[0]} (capacity {args.capacity}), "
           f"step p50 {result['step_ms_p50']:.1f} ms = "
@@ -443,7 +540,8 @@ def kpca_decoupled_main(args) -> dict:
                   f"{pt * pr} devices (have {len(jax.devices())}) and "
                   f"P_t | tenants; falling back to local queries")
 
-    loop = IngestServeLoop(batch, spec, plan=plan, query_fn=query_fn)
+    loop = IngestServeLoop(batch, spec, plan=plan, query_fn=query_fn,
+                           publish_on_drift=args.publish_on_drift)
     ing, qry, pub = _PhaseTimer(), _PhaseTimer(), _PhaseTimer()
     n_served = 0
     t_total = time.time()
@@ -466,7 +564,11 @@ def kpca_decoupled_main(args) -> dict:
         jax.block_until_ready([st.L for st in batch.working_states()])
         ing.add((time.perf_counter() - t0) * 1e3, key=rungs)
         loop._since += 1
-        if loop._since >= loop.serve_every:
+        cadence = loop._since >= loop.serve_every
+        drifted = (not cadence) and loop._drift_due()
+        if drifted:
+            loop.drift_publishes += 1
+        if cadence or drifted:
             t0 = time.perf_counter()
             jax.block_until_ready(loop.publish().S)
             pub.add((time.perf_counter() - t0) * 1e3, key=rungs)
@@ -480,8 +582,13 @@ def kpca_decoupled_main(args) -> dict:
         "mesh": args.mesh, "tenant_sharded_queries": query_fn is not None,
         "serve_every": args.serve_every,
         "query_rate": args.query_rate,
+        "publish_on_drift": args.publish_on_drift,
         "points": args.points, "m_final": m_final,
         "generations": loop.generation,
+        "drift_publishes": loop.drift_publishes,
+        "skipped_publishes": loop.skipped,
+        "heals": loop.heals,
+        "quarantined": int(batch.quarantined.sum()),
         **ing.summary("ingest_ms"),
         **qry.summary("query_ms"),
         **pub.summary("publish_ms"),
@@ -550,6 +657,19 @@ def main(argv=None) -> dict:
                          "every N ingested blocks")
     ap.add_argument("--serve-components", type=int, default=8,
                     help="components C frozen into published snapshots")
+    ap.add_argument("--health", action="store_true",
+                    help="attach the default health policy to the plan: "
+                         "in-graph probes ride the update, non-finite "
+                         "points are quarantined before the rank-one "
+                         "pair fires, and unhealthy states go down the "
+                         "heal ladder instead of being served")
+    ap.add_argument("--publish-on-drift", type=float, default=None,
+                    metavar="THRESH",
+                    help="decoupled mode: staleness-aware publication — "
+                         "republish when any tenant's working top-C "
+                         "spectrum drifts (relative L2) past THRESH from "
+                         "the last published reference; --serve-every "
+                         "then acts as the max-staleness fallback")
     ap.add_argument("--mesh", default=None, metavar="PtxPr",
                     help="decoupled mode: 2-D (tenant, data) mesh shape, "
                          "e.g. '2x1' — tenant-shards the query path over "

@@ -1,0 +1,1 @@
+"""Testing utilities: the fault-injection harness (``repro.testing.faults``)."""
