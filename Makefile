@@ -4,7 +4,7 @@
 
 PYTHONPATH := src
 
-.PHONY: check test test-all bench bench-quick bench-smoke faults
+.PHONY: check test test-all bench bench-quick bench-smoke faults metrics
 
 check:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -q -m "not slow" -x
@@ -24,11 +24,17 @@ bench-smoke:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.bench_serving --smoke
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.roofline --smoke
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.bench_health --smoke
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.bench_observability --smoke
 
 # Fault-injection sweep: kill-mid-save crash matrix, corruptor units,
 # quarantine/heal behaviour, P=2 sharded NaN rejection.
 faults:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -q tests/test_faults.py tests/test_health.py
+
+# Short decoupled serving run with the telemetry layer on, printing the
+# resulting Prometheus scrape (counters, gauges, phase-latency summaries).
+metrics:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.bench_observability --scrape
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -q -m "not slow"

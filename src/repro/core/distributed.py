@@ -659,6 +659,39 @@ def make_sharded_window_block(mesh, spec: kf.KernelSpec, *,
     return _bucketed_dispatch(build, plan)
 
 
+def make_sharded_window_block_metered(mesh, spec: kf.KernelSpec, *,
+                                      axis: str = "data",
+                                      plan: eng.UpdatePlan = eng.DEFAULT_PLAN):
+    """Metered sharded window engine:
+    f(L, U, X, ages, clock, xs, m, mstate) -> (L, U, X, ages, clock, mstate).
+
+    Wraps the UNMODIFIED ``make_sharded_window_block`` executable — same
+    shard_map body, same jit cache entry, bitwise-identical eigensystem —
+    and accounts the block into a riding ``telemetry.MetricsState`` from
+    replicated outputs only: the accepted count is the clock delta (the
+    guarded step advances the clock only on acceptance), m is invariant
+    at the full window so every accepted fold evicted one point.  The
+    note consumes replicated scalars, so the MetricsState stays
+    shard-consistent without adding a single collective — the fixed
+    ppermute/psum schedule inside the block is untouched.
+    """
+    from repro.core import telemetry as tm
+
+    inner = make_sharded_window_block(mesh, spec, axis=axis, plan=plan)
+
+    def fn(L, U_local, X, ages, clock, xs, m, mstate):
+        out = inner(L, U_local, X, ages, clock, xs, m)
+        clock_after = out[4]
+        mstate = tm.note_block(mstate, m, m, xs.shape[0],
+                               clock_after - clock)
+        # m ≡ W on this path by contract: the window is always full.
+        mstate = mstate._replace(
+            window_fill=jnp.ones((), mstate.window_fill.dtype))
+        return out + (mstate,)
+
+    return fn
+
+
 def make_sharded_expand(mesh, *, axis: str = "data"):
     """Sharded version of expand_eigensystem: permutation applies to columns
     (replicated dimension), so each row block permutes locally."""

@@ -119,6 +119,14 @@ class UpdatePlan(NamedTuple):
                     keeps every pre-existing path bit-identical;
                     normalized away by ``kernel_plan`` so the inner
                     update kernels never re-specialize per policy.
+    metrics:        enable the in-graph telemetry lane
+                    (``core/telemetry.MetricsState`` riding the stream in
+                    ``KPCAStream``/``StreamBatch``).  Metric notes NEVER
+                    enter the update dispatches — the eigensystem goes
+                    through the identical jitted callables either way, so
+                    metrics-on state is bitwise metrics-off state (see
+                    ``core/telemetry.py``); normalized away by
+                    ``kernel_plan`` accordingly.
     """
 
     method: str = "gu"
@@ -135,6 +143,7 @@ class UpdatePlan(NamedTuple):
     serve_every: int = 1
     serve_components: int = 8
     health: object | None = None
+    metrics: bool = False
 
     @property
     def fused(self) -> bool:
@@ -157,7 +166,8 @@ class UpdatePlan(NamedTuple):
                              landmark_policy="append",
                              serve_every=1,
                              serve_components=8,
-                             health=None)
+                             health=None,
+                             metrics=False)
 
 
 DEFAULT_PLAN = UpdatePlan()
@@ -774,6 +784,101 @@ class Engine:
             self.spec, self.adjusted, self.plan, Mb)
         return wnd.WindowState(kpca=kpca, ages=ages, clock=clock), hstate
 
+    # ---- metered dispatches (core/telemetry.py) ----------------------------
+    # Every *_metered wrapper runs the UNMODIFIED dispatch above (same jit
+    # cache entry, bitwise-identical eigensystem) and then accounts the
+    # step into the riding MetricsState as one tiny separate dispatch.
+    def update_metered(self, state, mstate, x_new: Array, *,
+                       min_rows: int = 0):
+        """``update`` + metric note.  Returns ``(state, mstate)``."""
+        from repro.core import telemetry as tm
+
+        m0 = state.m
+        state = self.update(state, x_new, min_rows=min_rows)
+        return state, tm.note_block(mstate, m0, state.m, 1, 1)
+
+    def update_block_metered(self, state, mstate, xs: Array, *,
+                             min_rows: int = 0):
+        from repro.core import telemetry as tm
+
+        m0 = state.m
+        state = self.update_block(state, xs, min_rows=min_rows)
+        return state, tm.note_block(mstate, m0, state.m, xs.shape[0],
+                                    xs.shape[0])
+
+    def window_block_metered(self, wstate, mstate, xs: Array, *,
+                             window: int, min_rows: int = 0):
+        """``window_block`` + metric note: accepted count is the clock
+        delta (every unguarded ingest advances it), so evictions fall out
+        exactly even across the growth→steady transition."""
+        from repro.core import telemetry as tm
+
+        m0, c0 = wstate.kpca.m, wstate.clock
+        wstate = self.window_block(wstate, xs, window=window,
+                                   min_rows=min_rows)
+        mstate = tm.note_block(mstate, m0, wstate.kpca.m, xs.shape[0],
+                               wstate.clock - c0, window=window)
+        return wstate, mstate
+
+    def update_guarded_metered(self, state, hstate, mstate, x_new: Array, *,
+                               min_rows: int = 0):
+        """Guarded update + note: accepted = 1 − Δquarantined."""
+        from repro.core import telemetry as tm
+
+        m0, q0 = state.m, hstate.quarantined
+        state, hstate = self.update_guarded(state, hstate, x_new,
+                                            min_rows=min_rows)
+        acc = 1 - (hstate.quarantined - q0)
+        return state, hstate, tm.note_block(mstate, m0, state.m, 1, acc,
+                                            hstate)
+
+    def update_block_guarded_metered(self, state, hstate, mstate, xs: Array,
+                                     *, min_rows: int = 0):
+        from repro.core import telemetry as tm
+
+        m0, q0 = state.m, hstate.quarantined
+        state, hstate = self.update_block_guarded(state, hstate, xs,
+                                                  min_rows=min_rows)
+        acc = xs.shape[0] - (hstate.quarantined - q0)
+        return state, hstate, tm.note_block(mstate, m0, state.m,
+                                            xs.shape[0], acc, hstate)
+
+    def window_block_guarded_metered(self, wstate, hstate, mstate,
+                                     xs: Array, *, window: int,
+                                     min_rows: int = 0):
+        """Guarded window block + note: the guarded scan advances the
+        clock only for ACCEPTED points, so the clock delta is the exact
+        fold count even with quarantined arrivals in the block."""
+        from repro.core import telemetry as tm
+
+        m0, c0 = wstate.kpca.m, wstate.clock
+        wstate, hstate = self.window_block_guarded(wstate, hstate, xs,
+                                                   window=window,
+                                                   min_rows=min_rows)
+        mstate = tm.note_block(mstate, m0, wstate.kpca.m, xs.shape[0],
+                               wstate.clock - c0, hstate, window=window)
+        return wstate, hstate, mstate
+
+    def window_ingest_guarded_metered(self, wstate, hstate, mstate,
+                                      x_new: Array, *, window: int,
+                                      min_rows: int = 0):
+        from repro.core import telemetry as tm
+
+        m0, c0 = wstate.kpca.m, wstate.clock
+        wstate, hstate = self.window_ingest_guarded(wstate, hstate, x_new,
+                                                    window=window,
+                                                    min_rows=min_rows)
+        mstate = tm.note_block(mstate, m0, wstate.kpca.m, 1,
+                               wstate.clock - c0, hstate, window=window)
+        return wstate, hstate, mstate
+
+    def downdate_metered(self, state, mstate, i: int, *, min_rows: int = 0):
+        from repro.core import telemetry as tm
+
+        state = self.downdate(state, i, min_rows=min_rows)
+        m_after = (state.kpca.m if hasattr(state, "kpca") else state.m)
+        return state, tm.note_downdate(mstate, m_after)
+
     def probe(self, state, hstate=None, *, ref_lam: Array | None = None):
         """Standalone in-graph health probe of any state this engine
         serves (KPCAState, WindowState or NystromState — wrapper states
@@ -790,7 +895,7 @@ class Engine:
             return hl._probe_jit(kpca, hstate, policy)
         return hl._probe_ref_jit(kpca, hstate, policy, jnp.asarray(ref_lam))
 
-    def heal(self, state, *, level: str = "auto"):
+    def heal(self, state, *, level: str = "auto", rung_out: list | None = None):
         """Walk the heal ladder (polish → resync; see ``core/health``)
         on any state this engine serves.  WindowState keeps its ring and
         clock; NystromState heals the landmark eigensystem (always
@@ -804,14 +909,14 @@ class Engine:
         policy = self.plan.health or hl.DEFAULT_POLICY
         if hasattr(state, "Knm"):                      # NystromState
             kpca = hl.heal_kpca(state.kpca, self.spec, False, policy,
-                                level=level)
+                                level=level, rung_out=rung_out)
             return state._replace(kpca=kpca)
         if hasattr(state, "kpca"):                     # WindowState
             kpca = hl.heal_kpca(state.kpca, self.spec, self.adjusted,
-                                policy, level=level)
+                                policy, level=level, rung_out=rung_out)
             return state._replace(kpca=kpca)
         return hl.heal_kpca(state, self.spec, self.adjusted, policy,
-                            level=level)
+                            level=level, rung_out=rung_out)
 
     # ---- low-level rank-one -----------------------------------------------
     def rank_one(self, L: Array, U: Array, v: Array, sigma: Array, m: Array
@@ -1213,6 +1318,19 @@ class StreamBatch:
         # Per-tenant tally of points rejected by the non-finite gate
         # (``plan.health.quarantine``) before any device dispatch.
         self.quarantined = np.zeros((self.n_tenants,), dtype=np.int64)
+        # Host-exact fold/evict tallies: every accepted point and every
+        # window eviction increments its tenant's entry at the same spot
+        # ``_m_host`` moves, so the metric lanes below are exact without
+        # reading anything back from the device.
+        self._ingest_host = np.zeros((self.n_tenants,), dtype=np.int64)
+        self._evict_host = np.zeros((self.n_tenants,), dtype=np.int64)
+        # Per-tenant metric lanes (core/telemetry.py): a (B,)-leaf
+        # MetricsState updated once per public update/update_block call.
+        self.metrics = None
+        if plan.metrics:
+            from repro.core import telemetry as tm
+
+            self.metrics = tm.init_metrics_stacked(self.n_tenants, dtype)
 
     # ---- bucket residency ---------------------------------------------------
     def _flush(self):
@@ -1360,7 +1478,55 @@ class StreamBatch:
                     grp["state"], rows, jnp.asarray(ge), self.spec,
                     self.adjusted, plan)
         self._m_host[evict] -= 1
+        self._evict_host[evict] += 1
         self._ceiling = int(self._m_host.max())
+
+    # ---- per-tenant metric lanes (core/telemetry.py) ------------------------
+    def _metrics_begin(self):
+        """Snapshot the host tallies at a public entry point; the commit
+        applies the deltas to the metric lanes in ONE fused dispatch —
+        the eigensystem dispatches above are untouched (bitwise identity
+        with ``plan.metrics`` off)."""
+        if self.metrics is None:
+            return None
+        return (self._ingest_host.copy(), self._evict_host.copy(),
+                self.quarantined.copy())
+
+    def _metrics_commit(self, snap) -> None:
+        import numpy as np
+
+        from repro.core import telemetry as tm
+
+        if snap is None:
+            return
+        i0, e0, q0 = snap
+        fill = (self._m_host / float(self.window) if self.window is not None
+                else np.full(self.n_tenants, tm.GAUGE_UNSET))
+        self.metrics = tm.note_lanes(
+            self.metrics, self._ingest_host - i0, self.quarantined - q0,
+            self._evict_host - e0, self._m_host, fill)
+
+    def metrics_report(self) -> dict:
+        """Host snapshot of the per-tenant metric lanes (one sync)."""
+        from repro.core import telemetry as tm
+
+        return {} if self.metrics is None else tm.metrics_report(self.metrics)
+
+    def note_skipped_publish(self) -> None:
+        """Telemetry hook for the serving loop: a publication was refused
+        on health grounds (counted on every lane — the verdict is
+        cohort-wide)."""
+        if self.metrics is not None:
+            from repro.core import telemetry as tm
+
+            self.metrics = tm.note_skipped_publish(self.metrics)
+
+    def note_drift(self, drift) -> None:
+        """Record the last probed per-tenant spectral drift as a gauge."""
+        if self.metrics is not None:
+            from repro.core import telemetry as tm
+
+            self.metrics = tm.note_drift(self.metrics, drift)
 
     def update(self, xs: Array, active: Array | None = None):
         """Fold xs[i] (shape (B, d)) into tenant i, one device step per
@@ -1372,6 +1538,12 @@ class StreamBatch:
         at the cohort bucket; grouped cohorts: the LARGEST group's state —
         use ``states``/``state_of`` for full-cohort reads).
         """
+        snap = self._metrics_begin()
+        out = self._update_impl(xs, active)
+        self._metrics_commit(snap)
+        return out
+
+    def _update_impl(self, xs: Array, active: Array | None = None):
         import numpy as np
 
         xs = jnp.asarray(xs)
@@ -1416,6 +1588,7 @@ class StreamBatch:
                         grp["state"], xs[idxp], act_dev[idxp], self.spec,
                         self.adjusted, plan)
             self._m_host[act_host] += 1
+            self._ingest_host[act_host] += 1
             self._ceiling = int(self._m_host.max())
             return self._groups[-1]["state"]
         if evict.any():
@@ -1432,6 +1605,7 @@ class StreamBatch:
                 sub, rows, jnp.asarray(evict), self.spec, self.adjusted,
                 plan)
             self._m_host[evict] -= 1
+            self._evict_host[evict] += 1
             self._ceiling = int(self._m_host.max())
             sub = self._sub
         else:
@@ -1440,11 +1614,14 @@ class StreamBatch:
             self._sub = _batched_update(sub, xs, self.spec, self.adjusted,
                                         plan)
             self._m_host += 1
+            self._ingest_host += 1
         else:
             self._sub = _batched_update_masked(sub, xs, jnp.asarray(active),
                                                self.spec, self.adjusted,
                                                plan)
-            self._m_host[np.asarray(active, bool)] += 1
+            act = np.asarray(active, bool)
+            self._m_host[act] += 1
+            self._ingest_host[act] += 1
         self._ceiling += 1
         return self._sub
 
@@ -1452,6 +1629,13 @@ class StreamBatch:
         """Fold a whole block of evict+ingest pairs for the lanes in
         ``mask_host`` (each at m ≡ W) — one scanned dispatch per cohort
         group; lanes outside the mask pass through untouched."""
+        import numpy as np
+
+        # Every masked lane folds (and therefore evicts) one point per
+        # scanned step; m is invariant at W so only the tallies move.
+        mk = np.asarray(mask_host, bool)
+        self._ingest_host[mk] += int(xs.shape[0])
+        self._evict_host[mk] += int(xs.shape[0])
         if self._grouped:
             self._regroup()
             out = None
@@ -1497,6 +1681,12 @@ class StreamBatch:
         scanned block path, poisoned steps route through the per-point
         ``update`` gate (which drops only the offending lanes and tallies
         them in ``quarantined``)."""
+        snap = self._metrics_begin()
+        out = self._update_block_impl(xs)
+        self._metrics_commit(snap)
+        return out
+
+    def _update_block_impl(self, xs: Array):
         import numpy as np
 
         xs = jnp.asarray(xs)
@@ -1515,7 +1705,7 @@ class StreamBatch:
                         out = self._update_block_clean(xs[i:j])
                         i = j
                     else:
-                        out = self.update(xs[i])
+                        out = self._update_impl(xs[i])
                         i += 1
                 return out
         return self._update_block_clean(xs)
@@ -1546,7 +1736,7 @@ class StreamBatch:
                 act = None if not steady.any() else jnp.asarray(grow)
                 t = 0
                 while t < T and int(self._m_host[grow].min()) < self.window:
-                    out = self.update(xs[t], active=act)
+                    out = self._update_impl(xs[t], active=act)
                     t += 1
                 if t < T:
                     out = self._steady_window_scan(xs[t:], grow, plan)
@@ -1572,6 +1762,7 @@ class StreamBatch:
                             grp["state"], blk, self.spec, self.adjusted,
                             plan)
                 self._m_host += take
+                self._ingest_host += take
                 i += take
             self._ceiling = int(self._m_host.max())
             return self._groups[-1]["state"]
@@ -1584,6 +1775,7 @@ class StreamBatch:
                                       self.adjusted, self.plan.kernel_plan())
             self._ceiling += take
             self._m_host += take
+            self._ingest_host += take
             i += take
         return self._sub
 
@@ -1681,13 +1873,25 @@ class StreamBatch:
             return 0
         self._flush()
         full = self._full
+        rungs = np.zeros((2, self.n_tenants), np.int64)  # polish / resync
         for i in todo:
             st = jax.tree.map(lambda leaf: leaf[int(i)], full)
+            rung_out: list = []
             st = hl.heal_kpca(st, self.spec, self.adjusted, policy,
-                              level=level)
+                              level=level, rung_out=rung_out)
+            if rung_out and rung_out[-1] in ("polish", "resync"):
+                rungs[0 if rung_out[-1] == "polish" else 1, int(i)] += 1
             full = jax.tree.map(lambda fl, sl: fl.at[int(i)].set(sl),
                                 full, st)
         self._full = full
+        if self.metrics is not None and rungs.any():
+            from repro.core import telemetry as tm
+
+            self.metrics = self.metrics._replace(
+                heals_polish=self.metrics.heals_polish
+                + jnp.asarray(rungs[0], jnp.int32),
+                heals_resync=self.metrics.heals_resync
+                + jnp.asarray(rungs[1], jnp.int32))
         return len(todo)
 
     def publish(self, n_components: int | None = None):
@@ -1706,6 +1910,10 @@ class StreamBatch:
                  else n_components)
         self._serve_gen = getattr(self, "_serve_gen", -1) + 1
         gen = jnp.asarray(self._serve_gen, jnp.int32)
+        if self.metrics is not None:
+            from repro.core import telemetry as tm
+
+            self.metrics = tm.note_publish(self.metrics, self._serve_gen)
         if self._grouped:
             st = self.states
         else:

@@ -428,7 +428,7 @@ def resync(state, spec: kf.KernelSpec, adjusted: bool):
 
 def heal_kpca(state, spec: kf.KernelSpec, adjusted: bool,
               policy: HealthPolicy = DEFAULT_POLICY, *,
-              level: str = "auto"):
+              level: str = "auto", rung_out: list | None = None):
     """Walk the escalation ladder on one KPCAState.
 
     ``level``: "polish" | "resync" force a rung; "auto" measures the
@@ -439,15 +439,26 @@ def heal_kpca(state, spec: kf.KernelSpec, adjusted: bool,
     ``HealthError`` from every rung: that is the restore-from-checkpoint
     escalation, which only the caller (who owns the checkpoint
     directory) can execute.
+
+    ``rung_out``: optional list; the rung actually taken ("noop" |
+    "polish" | "resync") is appended — the telemetry layer's
+    heals-by-rung counters read it without a second residual pass.
     """
+
+    def took(rung: str):
+        if rung_out is not None:
+            rung_out.append(rung)
+
     m = int(state.m)
     if not bool(jnp.all(jnp.isfinite(state.X[:m]))):
         raise HealthError(
             "stored points are non-finite — restore from the last "
             "checkpoint")
     if level == "polish":
+        took("polish")
         return polish(state)
     if level == "resync":
+        took("resync")
         return resync(state, spec, adjusted)
     if level != "auto":
         raise ValueError(f"unknown heal level {level!r}")
@@ -458,9 +469,12 @@ def heal_kpca(state, spec: kf.KernelSpec, adjusted: bool,
               and float(-jnp.min(Lact)) <= policy.neg_tol * max(lmax, 1e-30))
     r = exact_orth_residual(state)
     if eig_ok and r <= policy.orth_tol:
+        took("noop")
         return state
     if eig_ok and r <= policy.polish_max:
         polished = polish(state)
         if exact_orth_residual(polished) <= policy.orth_tol:
+            took("polish")
             return polished
+    took("resync")
     return resync(state, spec, adjusted)

@@ -361,13 +361,54 @@ class KPCAStream:
         if plan.health is not None:
             from repro.core import health as hl
             self.health = hl.init_health(self.kpca_state.L.dtype)
+        # Telemetry lane (core/telemetry.py): with plan.metrics set, a
+        # MetricsState rides the stream.  The eigensystem still goes
+        # through the IDENTICAL dispatches — each update is followed by
+        # one tiny separate note dispatch, so metrics-on state is bitwise
+        # metrics-off state.
+        self.metrics = None
+        if plan.metrics:
+            from repro.core import telemetry as tm
+            self.metrics = tm.init_metrics(self.kpca_state.L.dtype)
 
     @property
     def kpca_state(self) -> KPCAState:
         """The eigensystem state, regardless of windowing."""
         return self.state.kpca if self.window is not None else self.state
 
+    def _note_metrics(self, m_before, offered: int, h_before=None,
+                      clock_before=None) -> None:
+        """Account the step just taken into the riding MetricsState.
+
+        Accepted-count identities (all traced, no host sync):
+        windowed paths use the clock delta (guarded scans advance the
+        clock only for accepted points); guarded plain paths use the
+        quarantine-counter delta; unguarded plain paths accept all.
+        """
+        from repro.core import telemetry as tm
+
+        if clock_before is not None:
+            accepted = self.state.clock - clock_before
+        elif h_before is not None:
+            accepted = offered - (self.health.quarantined
+                                  - h_before.quarantined)
+        else:
+            accepted = offered
+        self.metrics = tm.note_block(self.metrics, m_before,
+                                     self.kpca_state.m, offered, accepted,
+                                     self.health, window=self.window)
+
     def update(self, x_new: Array):
+        if self.metrics is not None:
+            m0 = self.kpca_state.m
+            h0 = self.health
+            c0 = self.state.clock if self.window is not None else None
+            out = self._update_impl(x_new)
+            self._note_metrics(m0, 1, h0, c0)
+            return out
+        return self._update_impl(x_new)
+
+    def _update_impl(self, x_new: Array):
         if self.health is not None:
             if self.window is not None:
                 self.state, self.health = self.engine.window_ingest_guarded(
@@ -394,9 +435,13 @@ class KPCAStream:
             from repro.core import window as wnd
             self.state = wnd.evict(self.engine, self.state, i,
                                    min_rows=self._min_rows)
-            return self.state
-        self.state = self.engine.downdate(self.state, i,
-                                          min_rows=self._min_rows)
+        else:
+            self.state = self.engine.downdate(self.state, i,
+                                              min_rows=self._min_rows)
+        if self.metrics is not None:
+            from repro.core import telemetry as tm
+            self.metrics = tm.note_downdate(self.metrics,
+                                            self.kpca_state.m)
         return self.state
 
     def update_block(self, xs: Array):
@@ -408,6 +453,16 @@ class KPCAStream:
         append-only, and once the window fills the evict+ingest pairs run
         as ONE scanned dispatch per block (fixed shape at m ≡ W) instead
         of the old per-point host-decided stepping."""
+        if self.metrics is not None:
+            m0 = self.kpca_state.m
+            h0 = self.health
+            c0 = self.state.clock if self.window is not None else None
+            out = self._update_block_impl(xs)
+            self._note_metrics(m0, int(jnp.asarray(xs).shape[0]), h0, c0)
+            return out
+        return self._update_block_impl(xs)
+
+    def _update_block_impl(self, xs: Array):
         if self.health is not None:
             if self.window is not None:
                 self.state, self.health = self.engine.window_block_guarded(
@@ -434,12 +489,16 @@ class KPCAStream:
         """Walk the heal ladder on the stream's state (polish → resync;
         ``health.HealthError`` escalates to restore-from-checkpoint).
         Clears the sticky probe flags so post-heal probes start clean."""
-        self.state = self.engine.heal(self.state, level=level)
+        rung_out: list = []
+        self.state = self.engine.heal(self.state, level=level,
+                                      rung_out=rung_out)
         if self.health is not None:
-            from repro.core import health as hl
             self.health = self.health._replace(
                 nonfinite=jnp.zeros((), jnp.int32),
                 orth_err=jnp.zeros((), self.health.orth_err.dtype))
+        if self.metrics is not None and rung_out:
+            from repro.core import telemetry as tm
+            self.metrics = tm.note_heal(self.metrics, rung_out[-1])
         return self.state
 
     def health_report(self) -> dict:
@@ -459,6 +518,14 @@ class KPCAStream:
             return True
         from repro.core import health as hl
         return hl.is_healthy(self.health, self.plan.health)
+
+    def metrics_report(self) -> dict:
+        """Host snapshot of the riding MetricsState (one sync); empty
+        without ``plan.metrics``."""
+        if self.metrics is None:
+            return {}
+        from repro.core import telemetry as tm
+        return tm.metrics_report(self.metrics)
 
     def truncate(self, k: int, *, compact: bool | None = None) -> KPCAState:
         """Keep only the k dominant eigenpairs (paper conclusion: 'adapt the

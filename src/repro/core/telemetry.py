@@ -1,0 +1,206 @@
+"""In-graph stream metrics — the device half of the observability layer.
+
+A ``MetricsState`` pytree rides the stream next to ``HealthState`` (the
+discipline PR 8 proved out): device-resident counters and gauges that
+are updated with pure functional ``note_*`` helpers and only ever read
+on the host when someone scrapes them.  Two invariants make the layer
+free to turn on:
+
+* **Bitwise identity.**  The eigensystem NEVER flows through a
+  metrics-aware dispatch.  Every metered path runs the *identical*
+  jitted update callables (same jit cache keys, same executables) as
+  the metrics-off path, and the note fires as a separate tiny fused
+  dispatch afterwards, consuming only values the update already
+  produced (``state.m``, the window clock, ``HealthState`` counters)
+  plus host-known block sizes.  ``UpdatePlan.metrics`` is therefore
+  normalized away by ``kernel_plan()`` like every other policy field —
+  metrics-on and metrics-off states are bitwise equal by construction,
+  and ``tests/test_telemetry.py`` locks that in across the update,
+  window, and P=2 sharded paths.
+
+* **Exact counters, no host syncs.**  Accepted/rejected/evicted counts
+  are identities over traced scalars the guarded paths already
+  maintain — ``accepted = clock_after − clock_before`` on window paths
+  (the guarded scan only advances the clock for accepted points),
+  ``accepted = offered − Δ(hstate.quarantined)`` on guarded plain
+  paths, and ``evictions = accepted − (m_after − m_before)`` always.
+  Nothing is read back until ``metrics_report``/``TelemetryHub.scrape``
+  — the caller's one explicit sync, exactly like reading HealthState.
+
+On the sharded window path the note consumes only replicated outputs
+(``m``, ``clock``), so the MetricsState stays consistent across shards
+without adding a single collective — the fixed psum/ppermute schedule
+of ``core/distributed.py`` is untouched.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# Gauge value meaning "not applicable / never observed".
+GAUGE_UNSET = -1.0
+
+
+class MetricsState(NamedTuple):
+    """Counters (int32, monotone) and gauges (state dtype) for one stream.
+
+    Stacked on a leading tenant axis by ``init_metrics_stacked`` for
+    ``StreamBatch`` — every note helper is shape-polymorphic over that
+    axis, so per-tenant metric lanes ride the same code path.
+    """
+
+    # -- counters ----------------------------------------------------------
+    ingests: Array            # points folded into the eigensystem
+    rejections: Array         # points quarantined (gate or host pre-gate)
+    evictions: Array          # window evictions (implicit downdates)
+    downdates: Array          # explicit downdates / landmark removals
+    publishes: Array          # serving snapshots published
+    skipped_publishes: Array  # publications refused on health
+    heals_polish: Array       # heal-ladder rungs taken, by rung
+    heals_resync: Array
+    # -- gauges ------------------------------------------------------------
+    m: Array                  # active count after the last noted step
+    window_fill: Array        # m / window (GAUGE_UNSET when unwindowed)
+    generation: Array         # last published snapshot generation
+    spec_drift: Array         # mirror of HealthState.spec_drift
+    orth_err: Array           # mirror of HealthState.orth_err
+    neg_frac: Array           # mirror of HealthState.neg_frac
+    trace_err: Array          # Nyström trace-error estimate (GAUGE_UNSET
+    #                           until a tracker reports one)
+
+
+def init_metrics(dtype=jnp.float32) -> MetricsState:
+    z = jnp.zeros((), jnp.int32)
+    g = jnp.zeros((), dtype)
+    unset = jnp.asarray(GAUGE_UNSET, dtype)
+    return MetricsState(ingests=z, rejections=z, evictions=z, downdates=z,
+                        publishes=z, skipped_publishes=z, heals_polish=z,
+                        heals_resync=z, m=g, window_fill=unset,
+                        generation=jnp.asarray(-1, jnp.int32),
+                        spec_drift=unset, orth_err=g, neg_frac=g,
+                        trace_err=unset)
+
+
+def init_metrics_stacked(n: int, dtype=jnp.float32) -> MetricsState:
+    """(n,)-leaf MetricsState: one metric lane per tenant."""
+    one = init_metrics(dtype)
+    return jax.tree.map(
+        lambda leaf: jnp.broadcast_to(leaf, (n,) + leaf.shape) + 0, one)
+
+
+def _i32(x) -> Array:
+    return jnp.asarray(x).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("window",))
+def note_block(ms: MetricsState, m_before, m_after, offered, accepted,
+               hstate=None, *, window: int | None = None) -> MetricsState:
+    """Account one update/update_block/window_block step.
+
+    ``accepted`` is the exact folded count (see module docstring for the
+    per-path identities); evictions fall out as
+    ``accepted − (m_after − m_before)`` — zero on append-only paths,
+    the evict+ingest pair count at a full window.  With ``hstate`` the
+    probe gauges are mirrored; ``window`` (static) sets the fill gauge.
+    """
+    acc = _i32(accepted)
+    off = _i32(offered)
+    grown = _i32(m_after) - _i32(m_before)
+    mf = jnp.asarray(m_after).astype(ms.m.dtype)
+    fill = (mf / window if window is not None
+            else jnp.asarray(GAUGE_UNSET, ms.window_fill.dtype))
+    ms = ms._replace(ingests=ms.ingests + acc,
+                     rejections=ms.rejections + (off - acc),
+                     evictions=ms.evictions + (acc - grown),
+                     m=mf, window_fill=fill)
+    if hstate is not None:
+        ms = ms._replace(
+            spec_drift=hstate.spec_drift.astype(ms.spec_drift.dtype),
+            orth_err=hstate.orth_err.astype(ms.orth_err.dtype),
+            neg_frac=hstate.neg_frac.astype(ms.neg_frac.dtype))
+    return ms
+
+
+@jax.jit
+def note_lanes(ms: MetricsState, ingests, rejections, evictions, m,
+               window_fill) -> MetricsState:
+    """Stacked-lane account: per-tenant host-exact deltas (``StreamBatch``
+    tracks every fold/evict/quarantine on the host already) applied in
+    one fused dispatch."""
+    return ms._replace(ingests=ms.ingests + _i32(ingests),
+                       rejections=ms.rejections + _i32(rejections),
+                       evictions=ms.evictions + _i32(evictions),
+                       m=jnp.asarray(m).astype(ms.m.dtype),
+                       window_fill=jnp.asarray(window_fill).astype(
+                           ms.window_fill.dtype))
+
+
+# -------------------------------------------------- host-triggered notes --
+# These fire on host-decided events (publish, heal, explicit downdate) —
+# eager element-wise ops on scalar leaves, nowhere near a hot loop.
+def note_downdate(ms: MetricsState, m_after=None, n: int = 1) -> MetricsState:
+    ms = ms._replace(downdates=ms.downdates + jnp.asarray(n, jnp.int32))
+    if m_after is not None:
+        ms = ms._replace(m=jnp.asarray(m_after).astype(ms.m.dtype))
+    return ms
+
+
+def note_publish(ms: MetricsState, generation) -> MetricsState:
+    gen = jnp.broadcast_to(jnp.asarray(generation, jnp.int32),
+                           ms.generation.shape)
+    return ms._replace(publishes=ms.publishes + 1, generation=gen)
+
+
+def note_skipped_publish(ms: MetricsState) -> MetricsState:
+    return ms._replace(skipped_publishes=ms.skipped_publishes + 1)
+
+
+def note_heal(ms: MetricsState, rung: str, n=1) -> MetricsState:
+    """``rung``: "polish" | "resync" ("noop" is not counted)."""
+    n = jnp.asarray(n, jnp.int32)
+    if rung == "polish":
+        return ms._replace(heals_polish=ms.heals_polish + n)
+    if rung == "resync":
+        return ms._replace(heals_resync=ms.heals_resync + n)
+    return ms
+
+
+def note_drift(ms: MetricsState, drift) -> MetricsState:
+    d = jnp.broadcast_to(jnp.asarray(drift).astype(ms.spec_drift.dtype),
+                         ms.spec_drift.shape)
+    return ms._replace(spec_drift=d)
+
+
+def note_trace_error(ms: MetricsState, value) -> MetricsState:
+    v = jnp.broadcast_to(jnp.asarray(value).astype(ms.trace_err.dtype),
+                         ms.trace_err.shape)
+    return ms._replace(trace_err=v)
+
+
+# ------------------------------------------------------------- read-out --
+def metrics_report(ms: MetricsState) -> dict:
+    """Host-side snapshot (THE one sync): counters as python ints, gauges
+    as floats; stacked lanes come back as numpy arrays per field plus a
+    summed ``*_total`` for every counter."""
+    import numpy as np
+
+    host = jax.device_get(ms)
+    out: dict = {}
+    counters = ("ingests", "rejections", "evictions", "downdates",
+                "publishes", "skipped_publishes", "heals_polish",
+                "heals_resync")
+    for k, v in host._asdict().items():
+        arr = np.asarray(v)
+        if arr.ndim == 0:
+            out[k] = (int(arr) if k in counters or k == "generation"
+                      else float(arr))
+        else:
+            out[k] = arr
+            if k in counters:
+                out[f"{k}_total"] = int(arr.sum())
+    return out

@@ -17,6 +17,7 @@ from repro.kernels.eigvec_update.eigvec_update import (eigvec_project,
 from repro.kernels.eigvec_update.ref import (eigvec_project_ref,
                                              eigvec_rotate2_ref,
                                              eigvec_rotate_ref)
+from repro.obs.hub import note_kernel_dispatch
 
 
 def _on_tpu() -> bool:
@@ -25,6 +26,14 @@ def _on_tpu() -> bool:
 
 def _force(force: str | None) -> str | None:
     return force or os.environ.get("REPRO_PALLAS_FORCE") or None
+
+
+def _route(force: str | None) -> str:
+    if force == "ref" or (force is None and not _on_tpu()):
+        return "ref"
+    if force == "interpret":
+        return "interpret"
+    return "pallas"
 
 
 def rotate_vectors(u: jax.Array, zhat: jax.Array, d: jax.Array,
@@ -44,10 +53,11 @@ def rotate_vectors(u: jax.Array, zhat: jax.Array, d: jax.Array,
     REPRO_PALLAS_FORCE env var does the same (tests set it to 'interpret'
     so the real kernel body executes on CPU).
     """
-    force = _force(force)
-    if force == "ref" or (force is None and not _on_tpu()):
+    route = _route(_force(force))
+    note_kernel_dispatch("eigvec_rotate", route)
+    if route == "ref":
         return eigvec_rotate_ref(u, zhat, d, lam, inv)
-    if force == "interpret":
+    if route == "interpret":
         # Re-enable jit locally: pallas_call's interpret impl recurses
         # forever under an ambient jax.disable_jit() on this JAX version.
         with jax.disable_jit(False):
@@ -70,12 +80,13 @@ def rotate_vectors2(u: jax.Array,
     Deflated columns are generated as identity columns e_{cid[j]} inside
     the kernel, so the intermediate U @ W1n never exists in HBM.
     """
-    force = _force(force)
+    route = _route(_force(force))
+    note_kernel_dispatch("eigvec_rotate2", route)
     args = (u, z1, d1, lam1, inv1, defl1, cid1,
             z2, d2, lam2, inv2, defl2, cid2)
-    if force == "ref" or (force is None and not _on_tpu()):
+    if route == "ref":
         return eigvec_rotate2_ref(*args)
-    if force == "interpret":
+    if route == "interpret":
         with jax.disable_jit(False):
             return eigvec_rotate2(*args, num_active, row_offset,
                                   interpret=True)
@@ -94,10 +105,11 @@ def project_vectors(u: jax.Array, v: jax.Array,
     pruned output rows (>= the active tile range) come back as exact
     zeros, their true value.  Row-sharded callers psum the partials.
     """
-    force = _force(force)
-    if force == "ref" or (force is None and not _on_tpu()):
+    route = _route(_force(force))
+    note_kernel_dispatch("eigvec_project", route)
+    if route == "ref":
         return eigvec_project_ref(u, v, num_active, row_offset)
-    if force == "interpret":
+    if route == "interpret":
         with jax.disable_jit(False):
             return eigvec_project(u, v, num_active, row_offset,
                                   interpret=True)

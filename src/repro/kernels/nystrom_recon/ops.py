@@ -11,14 +11,25 @@ from repro.kernels.nystrom_recon.ref import (scaled_gram_ref,
 from repro.kernels.nystrom_recon.transform_batch import \
     transform_project as _tb_pallas
 from repro.kernels.rbf_gram.krow_fused import PALLAS_KERNELS
+from repro.obs.hub import note_kernel_dispatch
+
+
+def _route(force: str | None) -> str:
+    force = force or os.environ.get("REPRO_PALLAS_FORCE") or None
+    if force == "ref" or (force is None and jax.default_backend() != "tpu"):
+        return "ref"
+    if force == "interpret":
+        return "interpret"
+    return "pallas"
 
 
 def scaled_gram(b: jax.Array, s: jax.Array, *, force: str | None = None
                 ) -> jax.Array:
-    force = force or os.environ.get("REPRO_PALLAS_FORCE") or None
-    if force == "ref" or (force is None and jax.default_backend() != "tpu"):
+    route = _route(force)
+    note_kernel_dispatch("scaled_gram", route)
+    if route == "ref":
         return scaled_gram_ref(b, s)
-    if force == "interpret":
+    if route == "interpret":
         return _pallas(b, s, interpret=True)
     return _pallas(b, s)
 
@@ -29,11 +40,12 @@ def transform_project(xq: jax.Array, x: jax.Array, s: jax.Array,
                       ) -> tuple[jax.Array, jax.Array]:
     """Fused masked query gram + projection (Y, rowsum) — see
     ``transform_batch.py``."""
-    force = force or os.environ.get("REPRO_PALLAS_FORCE") or None
     if spec.name not in PALLAS_KERNELS:
         force = "ref"    # non-stationary kernels: reference epilogue only
-    if force == "ref" or (force is None and jax.default_backend() != "tpu"):
+    route = _route(force)
+    note_kernel_dispatch("transform_project", route)
+    if route == "ref":
         return transform_project_ref(xq, x, s, num_active, spec=spec)
-    if force == "interpret":
+    if route == "interpret":
         return _tb_pallas(xq, x, s, num_active, spec=spec, interpret=True)
     return _tb_pallas(xq, x, s, num_active, spec=spec)

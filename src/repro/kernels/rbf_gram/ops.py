@@ -9,14 +9,25 @@ from repro.kernels.rbf_gram.krow_fused import PALLAS_KERNELS
 from repro.kernels.rbf_gram.krow_fused import krow_project as _krow_pallas
 from repro.kernels.rbf_gram.rbf_gram import rbf_gram
 from repro.kernels.rbf_gram.ref import krow_project_ref, rbf_gram_ref
+from repro.obs.hub import note_kernel_dispatch
+
+
+def _route(force: str | None) -> str:
+    force = force or os.environ.get("REPRO_PALLAS_FORCE") or None
+    if force == "ref" or (force is None and jax.default_backend() != "tpu"):
+        return "ref"
+    if force == "interpret":
+        return "interpret"
+    return "pallas"
 
 
 def gram(x: jax.Array, y: jax.Array, sigma, *, force: str | None = None
          ) -> jax.Array:
-    force = force or os.environ.get("REPRO_PALLAS_FORCE") or None
-    if force == "ref" or (force is None and jax.default_backend() != "tpu"):
+    route = _route(force)
+    note_kernel_dispatch("rbf_gram", route)
+    if route == "ref":
         return rbf_gram_ref(x, y, sigma)
-    if force == "interpret":
+    if route == "interpret":
         return rbf_gram(x, y, sigma, interpret=True)
     return rbf_gram(x, y, sigma)
 
@@ -26,13 +37,14 @@ def krow_project(u: jax.Array, x: jax.Array, x_new: jax.Array,
                  row_offset: jax.Array | None = None, *, spec,
                  force: str | None = None) -> tuple[jax.Array, jax.Array]:
     """Fused masked kernel row + projection P = U^T [a | aux]."""
-    force = force or os.environ.get("REPRO_PALLAS_FORCE") or None
     if spec.name not in PALLAS_KERNELS:
         force = "ref"    # non-stationary kernels: reference epilogue only
-    if force == "ref" or (force is None and jax.default_backend() != "tpu"):
+    route = _route(force)
+    note_kernel_dispatch("krow_project", route)
+    if route == "ref":
         return krow_project_ref(u, x, x_new, aux, num_active, row_offset,
                                 spec=spec)
-    if force == "interpret":
+    if route == "interpret":
         return _krow_pallas(u, x, x_new, aux, num_active, row_offset,
                             spec=spec, interpret=True)
     return _krow_pallas(u, x, x_new, aux, num_active, row_offset, spec=spec)

@@ -65,7 +65,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import configs
+from repro import configs, obs
 from repro.data.synthetic import TokenStream
 from repro.distributed import sharding as shd
 from repro.launch import steps as steps_lib
@@ -81,13 +81,18 @@ def _make_plan(args):
         from repro.core import health as hl
 
         health = hl.DEFAULT_POLICY
+    # Any export surface implies the in-graph metric lane; --metrics turns
+    # it on without one (counters still land in the printed report).
+    metrics = bool(getattr(args, "metrics", False)
+                   or getattr(args, "metrics_jsonl", None)
+                   or getattr(args, "metrics_port", None) is not None)
     return eng.UpdatePlan(matmul=args.matmul, dispatch=args.dispatch,
                           window=args.window,
                           landmark_policy=args.landmark_policy,
                           fuse_krow=args.fuse_krow,
                           serve_every=args.serve_every,
                           serve_components=args.serve_components,
-                          health=health)
+                          health=health, metrics=metrics)
 
 
 def _parse_mesh(text):
@@ -98,43 +103,14 @@ def _parse_mesh(text):
     return int(pt), int(pr or 1)
 
 
-def _lat_summary(name: str, samples) -> dict:
-    import numpy as np
-
-    arr = np.asarray(samples, float) if len(samples) else np.zeros((1,))
-    return {f"{name}_p50": float(np.percentile(arr, 50)),
-            f"{name}_p90": float(np.percentile(arr, 90)),
-            f"{name}_p99": float(np.percentile(arr, 99)),
-            f"{name}_max": float(arr.max())}
-
-
-class _PhaseTimer:
-    """Steady-state vs warm-up latency split (one per service phase).
-
-    The first sample of each compilation KEY (bucket rung for updates,
-    component count for transforms, ...) pays jit tracing + compile;
-    folding it into the same list as steady-state steps is what used to
-    pollute the reported p50/p99.  Keyed first calls land in
-    ``compile_ms``; everything else in ``ms``.
-    """
-
-    def __init__(self):
-        self.ms: list[float] = []
-        self.compile_ms: list[float] = []
-        self._seen: set = set()
-
-    def add(self, sample_ms: float, key=None) -> None:
-        if key not in self._seen:
-            self._seen.add(key)
-            self.compile_ms.append(sample_ms)
-        else:
-            self.ms.append(sample_ms)
-
-    def summary(self, name: str) -> dict:
-        out = _lat_summary(name, self.ms)
-        out[f"{name}_compiles"] = len(self.compile_ms)
-        out[f"{name}_compile_ms"] = float(sum(self.compile_ms))
-        return out
+def _export_metrics(args, hub) -> None:
+    """Flush the hub out whatever export surface the flags asked for
+    (the --metrics-port HTTP server is started in main() so it scrapes
+    live during the run, not just after it)."""
+    if getattr(args, "metrics_jsonl", None):
+        hub.close_jsonl()   # stop live streaming before the final rewrite
+        obs.write_jsonl(args.metrics_jsonl, hub)
+        print(f"[obs] metrics -> {args.metrics_jsonl}")
 
 
 def _update_rung(args, m: int):
@@ -178,11 +154,19 @@ class IngestServeLoop:
     top-C spectrum has drifted (relative L2) past the threshold from the
     reference frozen at the last publication — the same probe pass
     produces the verdict AND the drift, so the check costs one fused
-    dispatch.  ``serve_every`` then acts as the max-staleness fallback.
+    dispatch.  ``serve_every`` then acts as the max-staleness fallback,
+    and ``drift_probe_every`` rate-limits the probe itself: the drift
+    dispatch fires every k-th non-publish ingest instead of every one
+    (``drift_probes`` counts the dispatches that actually ran).
+
+    Publish/heal/drift decisions are mirrored into a ``TelemetryHub``
+    (``hub=``, default the process hub) and — when the plan carries the
+    metric lane — into the batch's in-graph ``MetricsState``.
     """
 
     def __init__(self, batch, spec, *, plan=None, n_components=None,
-                 query_fn=None, publish_on_drift=None):
+                 query_fn=None, publish_on_drift=None,
+                 drift_probe_every=1, hub=None):
         self.batch = batch
         self.spec = spec
         self.plan = plan if plan is not None else batch.plan
@@ -191,10 +175,15 @@ class IngestServeLoop:
         self._query_fn = query_fn
         self.policy = getattr(self.plan, "health", None)
         self.publish_on_drift = publish_on_drift
+        self.drift_probe_every = max(1, int(drift_probe_every))
+        self.hub = hub if hub is not None else obs.get_hub()
         self.skipped = 0           # publications refused on health
         self.heals = 0             # tenants sent down the heal ladder
         self.drift_publishes = 0   # publications triggered by drift
+        self.drift_probes = 0      # drift probe dispatches actually run
         self.ref_lam = None        # (B, C) top spectrum at last publish
+        self._last_drift = 0.0     # most recent probed max drift
+        self._since_probe = 0
         self.snaps = batch.publish(n_components)
         self.generation = 0          # host mirror of snaps.generation
         self._since = 0
@@ -211,6 +200,8 @@ class IngestServeLoop:
                  if self.n_components is not None
                  else getattr(self.plan, "serve_components", 8))
         self.ref_lam = jax.vmap(lambda s: hl.top_spectrum(s, nc))(st)
+        self._last_drift = 0.0
+        self._since_probe = 0
 
     def query(self, q):
         """(B, nq, d) queries against the published snapshot; safe to call
@@ -234,7 +225,9 @@ class IngestServeLoop:
             healthy, _ = self.batch.probe_all()
             if not healthy.all():
                 try:
-                    self.heals += self.batch.heal()
+                    n = self.batch.heal()
+                    self.heals += n
+                    self.hub.inc("heals_total", n)
                 except hl.HealthError:
                     # Stored points corrupt: in-place healing impossible.
                     # Restore-from-checkpoint belongs to whoever owns the
@@ -243,21 +236,54 @@ class IngestServeLoop:
                 healthy, _ = self.batch.probe_all()
             if not healthy.all():
                 self.skipped += 1
+                self.hub.inc("skipped_publishes_total")
+                self.hub.emit({"event": "skipped_publish",
+                               "generation": self.generation})
+                self.batch.note_skipped_publish()
                 return self.snaps
         self.snaps = self.batch.publish(self.n_components)
         self.generation += 1
+        self.hub.inc("publishes_total")
+        self.hub.set_gauge("generation", self.generation)
+        self.hub.emit({"event": "publish", "generation": self.generation,
+                       "drift": self._last_drift})
         self._since = 0
         self._record_ref()
         return self.snaps
 
     def _drift_due(self) -> bool:
-        """True when any tenant's spectrum has left the published one."""
+        """True when any tenant's spectrum has left the published one.
+
+        The probe dispatch is rate-limited to every ``drift_probe_every``
+        call; between probes the decision rides the cached drift (which a
+        publish resets), so the steady non-publish path pays the fused
+        probe once per k ingests instead of every step."""
         import numpy as np
 
         if self.publish_on_drift is None or self.ref_lam is None:
             return False
+        self._since_probe += 1
+        if self._since_probe < self.drift_probe_every:
+            return self._last_drift > self.publish_on_drift
+        self._since_probe = 0
+        self.drift_probes += 1
+        self.hub.inc("drift_probes_total")
         _, drift = self.batch.probe_all(ref_lam=self.ref_lam)
-        return bool(np.max(drift) > self.publish_on_drift)
+        self._last_drift = float(np.max(drift))
+        self.hub.set_gauge("spectral_drift", self._last_drift)
+        self.batch.note_drift(drift)   # per-tenant lane gauge
+        return self._last_drift > self.publish_on_drift
+
+    def _publish_due(self) -> bool:
+        """Shared publish decision (the ``ingest`` path and the timed
+        decoupled driver both use it): serve_every cadence first, else
+        the rate-limited drift trigger."""
+        cadence = self._since >= self.serve_every
+        drifted = (not cadence) and self._drift_due()
+        if drifted:
+            self.drift_publishes += 1
+            self.hub.inc("drift_publishes_total")
+        return cadence or drifted
 
     def ingest(self, xs) -> bool:
         """Fold one (B, d) block into the working state; republish when
@@ -265,11 +291,7 @@ class IngestServeLoop:
         spectral-drift trigger — says so.  True iff a publish happened."""
         self.batch.update(xs)
         self._since += 1
-        cadence = self._since >= self.serve_every
-        drifted = (not cadence) and self._drift_due()
-        if drifted:
-            self.drift_publishes += 1
-        if not (cadence or drifted):
+        if not self._publish_due():
             return False
         gen0 = self.generation
         self.publish()
@@ -294,35 +316,35 @@ def kpca_main(args) -> dict:
     stream = inkpca.KPCAStream(x0, args.capacity, spec, adjusted=True,
                                plan=_make_plan(args), dtype=jnp.float32)
 
-    # Ingest and query phases are timed into SEPARATE series — a single
-    # flattened latency list conflated update steps with transform calls,
-    # and warm-up compiles (first call per bucket rung / component count)
-    # polluted the percentiles.  Keyed first calls go to *_compile_ms.
-    upd, qry = _PhaseTimer(), _PhaseTimer()
+    # Ingest and query phases are timed into SEPARATE hub histograms — a
+    # single flattened latency list conflated update steps with transform
+    # calls, and warm-up compiles (first call per bucket rung / component
+    # count) polluted the percentiles.  Keyed first calls go to
+    # *_compile_ms (obs.LatencyHistogram).
+    hub = obs.fresh_hub()
+    upd, qry = hub.histogram("update_ms"), hub.histogram("query_ms")
     n_served = 0
     n_heals = 0
     t_total = time.time()
     for i in range(args.points):
         x = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
         rung = _update_rung(args, int(stream.kpca_state.m) + 1)
-        t0 = time.perf_counter()
-        stream.update(x)
-        st = stream.kpca_state
-        jax.block_until_ready(st.L)
-        upd.add((time.perf_counter() - t0) * 1e3, key=rung)
+        with upd.timed(key=rung) as t:
+            stream.update(x)
+            st = stream.kpca_state
+            t.sync(st.L)
         if (i + 1) % args.transform_every == 0:
             # Self-healing cadence rides the transform interval: one host
             # read of the in-graph probe verdict, heal ladder on failure.
             if args.health and not stream.is_healthy():
                 stream.heal()
                 n_heals += 1
+                hub.inc("heals_total")
                 st = stream.kpca_state
             q = jnp.asarray(rng.normal(size=(args.batch, d)), jnp.float32)
             n_comp = min(8, int(st.m))
-            t0 = time.perf_counter()
-            y = stream.transform(q, n_components=n_comp)
-            jax.block_until_ready(y)
-            qry.add((time.perf_counter() - t0) * 1e3, key=n_comp)
+            with qry.timed(key=n_comp) as t:
+                t.sync(stream.transform(q, n_components=n_comp))
             n_served += args.batch
     t_total = time.time() - t_total
 
@@ -340,6 +362,9 @@ def kpca_main(args) -> dict:
     if args.health:
         result["heals"] = n_heals
         result["health"] = stream.health_report()
+    if stream.metrics is not None:
+        result["metrics"] = hub.observe_metrics_state(stream.metrics)
+    _export_metrics(args, hub)
     print(f"[serve/kpca] {args.dispatch}: {args.points} updates to "
           f"m={result['m_final']} (capacity {args.capacity}, "
           f"window {args.window}), "
@@ -364,7 +389,16 @@ def nystrom_main(args) -> dict:
     rule = nystrom.SufficientSubsetRule(rel_tol=args.stop_rel_tol,
                                         patience=args.stop_patience)
     budget = args.landmark_budget or args.capacity - 1
-    counts = {"admitted": 0, "rejected": 0, "replaced": 0}
+    hub = obs.fresh_hub()
+    # Landmark lifecycle counted as one labelled family in the hub; the
+    # result dict reads the counters back (single source of truth).
+    admit = {k: hub.counter("landmark_total", action=k)
+             for k in ("admitted", "rejected", "replaced")}
+    ms = None
+    if engine.plan.metrics:
+        from repro.core import telemetry as tm
+
+        ms = tm.init_metrics()
     n_quarantined = 0
     quarantine = (getattr(engine.plan, "health", None) is not None
                   and engine.plan.health.quarantine)
@@ -380,6 +414,7 @@ def nystrom_main(args) -> dict:
             # The observe_rows gate would drop the row anyway; counting
             # and skipping here keeps it out of the landmark offer too.
             n_quarantined += 1
+            hub.inc("quarantined_total")
             continue
         res = None
         if leverage and not rule.sufficient:
@@ -391,12 +426,12 @@ def nystrom_main(args) -> dict:
             tracker.observe(state, x, residual=res)
         state = nystrom.observe_rows(state, x, spec, plan=engine.plan)
         if leverage and rule.sufficient:
-            counts["rejected"] += 1
+            admit["rejected"].inc()
             continue
         prev = state
         state, action = engine.offer_landmark(state, x, budget=budget,
                                               residual=res)
-        counts[action] += 1
+        admit[action].inc()
         if leverage and action in ("admitted", "replaced"):
             if action == "admitted":
                 tracker.admitted(prev, x)
@@ -405,11 +440,18 @@ def nystrom_main(args) -> dict:
                 # unless the delta itself is numerically untrustworthy.
                 tracker.replaced(state, state_before=prev, x=x)
             tracker.maybe_resync(state)
+            if ms is not None:
+                from repro.core import telemetry as tm
+
+                ms = tm.note_trace_error(ms, tracker.value)
             if rule.observe(tracker.value):
                 stopped_at = i
     t_total = time.time() - t_total
 
     err = float(nystrom.trace_error(state, spec))
+    hub.set_gauge("trace_error", err)
+    hub.set_gauge("active_m", int(state.kpca.m))
+    counts = {k: int(c.value) for k, c in admit.items()}
     result = {
         "mode": "nystrom", "policy": args.landmark_policy,
         "capacity": args.capacity, "budget": budget,
@@ -427,6 +469,9 @@ def nystrom_main(args) -> dict:
     }
     if quarantine:
         result["quarantined"] = n_quarantined
+    if ms is not None:
+        hub.observe_metrics_state(ms, prefix="nystrom")
+    _export_metrics(args, hub)
     print(f"[serve/nystrom] {args.landmark_policy}: {args.points} points, "
           f"{counts['admitted']} admitted / {counts['replaced']} replaced / "
           f"{counts['rejected']} rejected -> m={result['m_final']}, "
@@ -448,11 +493,12 @@ def kpca_multitenant_main(args) -> dict:
                             adjusted=True, dtype=jnp.float32,
                             cohorts=args.cohorts, window=args.window)
 
-    # Satellite of the decoupled-serving PR: ingest steps and transform
-    # calls are timed into separate series (they used to share one
-    # flattened list — and transforms were never timed at all), with
-    # warm-up compiles split out per rung-set / component count.
-    upd, qry = _PhaseTimer(), _PhaseTimer()
+    # Ingest steps and transform calls are timed into separate hub
+    # histograms (they used to share one flattened list — and transforms
+    # were never timed at all), with warm-up compiles split out per
+    # rung-set / component count.
+    hub = obs.fresh_hub()
+    upd, qry = hub.histogram("step_ms"), hub.histogram("query_ms")
     n_served = 0
     t_total = time.time()
     for i in range(args.points):
@@ -460,18 +506,15 @@ def kpca_multitenant_main(args) -> dict:
         rungs = tuple(sorted({_update_rung(args, int(v) + 1)
                               for st in batch.working_states()
                               for v in np.atleast_1d(st.m)}))
-        t0 = time.perf_counter()
-        batch.update(xs)
-        jax.block_until_ready([st.L for st in batch.working_states()])
-        upd.add((time.perf_counter() - t0) * 1e3, key=rungs)
+        with upd.timed(key=rungs) as t:
+            batch.update(xs)
+            t.sync([st.L for st in batch.working_states()])
         if (i + 1) % args.transform_every == 0:
             q = jnp.asarray(rng.normal(size=(B, args.batch, d)), jnp.float32)
             n_comp = min(8, min(int(v) for st in batch.working_states()
                                 for v in np.atleast_1d(st.m)))
-            t0 = time.perf_counter()
-            y = batch.transform(q, n_components=n_comp)
-            jax.block_until_ready(y)
-            qry.add((time.perf_counter() - t0) * 1e3, key=n_comp)
+            with qry.timed(key=n_comp) as t:
+                t.sync(batch.transform(q, n_components=n_comp))
             n_served += B * args.batch
     t_total = time.time() - t_total
 
@@ -492,6 +535,11 @@ def kpca_multitenant_main(args) -> dict:
     }
     if args.health:
         result["quarantined"] = batch.health_summary()["quarantined"]
+    if batch.metrics is not None:
+        report = hub.observe_metrics_state(batch.metrics)
+        result["metrics"] = {k: (v.tolist() if hasattr(v, "tolist") else v)
+                             for k, v in report.items()}
+    _export_metrics(args, hub)
     print(f"[serve/kpca] {B} tenants x {args.points} updates to "
           f"m={m_final[0]} (capacity {args.capacity}), "
           f"step p50 {result['step_ms_p50']:.1f} ms = "
@@ -540,9 +588,13 @@ def kpca_decoupled_main(args) -> dict:
                   f"{pt * pr} devices (have {len(jax.devices())}) and "
                   f"P_t | tenants; falling back to local queries")
 
+    hub = obs.fresh_hub()
     loop = IngestServeLoop(batch, spec, plan=plan, query_fn=query_fn,
-                           publish_on_drift=args.publish_on_drift)
-    ing, qry, pub = _PhaseTimer(), _PhaseTimer(), _PhaseTimer()
+                           publish_on_drift=args.publish_on_drift,
+                           drift_probe_every=args.drift_probe_every,
+                           hub=hub)
+    ing, qry, pub = (hub.histogram("ingest_ms"), hub.histogram("query_ms"),
+                     hub.histogram("publish_ms"))
     n_served = 0
     t_total = time.time()
     for i in range(args.points):
@@ -551,27 +603,19 @@ def kpca_decoupled_main(args) -> dict:
         # never wait on this step's ingest.
         for _ in range(args.query_rate):
             q = jnp.asarray(rng.normal(size=(B, args.batch, d)), jnp.float32)
-            t0 = time.perf_counter()
-            y = loop.query(q)
-            jax.block_until_ready(y)
-            qry.add((time.perf_counter() - t0) * 1e3, key=loop.generation == 0)
+            with qry.timed(key=loop.generation == 0) as t:
+                t.sync(loop.query(q))
             n_served += B * args.batch
         rungs = tuple(sorted({_update_rung(args, int(v) + 1)
                               for st in batch.working_states()
                               for v in np.atleast_1d(st.m)}))
-        t0 = time.perf_counter()
-        batch.update(xs)
-        jax.block_until_ready([st.L for st in batch.working_states()])
-        ing.add((time.perf_counter() - t0) * 1e3, key=rungs)
+        with ing.timed(key=rungs) as t:
+            batch.update(xs)
+            t.sync([st.L for st in batch.working_states()])
         loop._since += 1
-        cadence = loop._since >= loop.serve_every
-        drifted = (not cadence) and loop._drift_due()
-        if drifted:
-            loop.drift_publishes += 1
-        if cadence or drifted:
-            t0 = time.perf_counter()
-            jax.block_until_ready(loop.publish().S)
-            pub.add((time.perf_counter() - t0) * 1e3, key=rungs)
+        if loop._publish_due():
+            with pub.timed(key=rungs) as t:
+                t.sync(loop.publish().S)
     t_total = time.time() - t_total
 
     m_final = [int(v) for v in np.asarray(batch.states.m)]
@@ -586,6 +630,7 @@ def kpca_decoupled_main(args) -> dict:
         "points": args.points, "m_final": m_final,
         "generations": loop.generation,
         "drift_publishes": loop.drift_publishes,
+        "drift_probes": loop.drift_probes,
         "skipped_publishes": loop.skipped,
         "heals": loop.heals,
         "quarantined": int(batch.quarantined.sum()),
@@ -596,6 +641,11 @@ def kpca_decoupled_main(args) -> dict:
         "total_s": t_total,
         "finite": bool(jnp.isfinite(batch.states.L).all()),
     }
+    if batch.metrics is not None:
+        report = hub.observe_metrics_state(batch.metrics)
+        result["metrics"] = {k: (v.tolist() if hasattr(v, "tolist") else v)
+                             for k, v in report.items()}
+    _export_metrics(args, hub)
     print(f"[serve/kpca-decoupled] {B} tenants x {args.points} blocks "
           f"(publish every {args.serve_every}), "
           f"ingest p50 {result['ingest_ms_p50']:.1f} ms, "
@@ -663,6 +713,25 @@ def main(argv=None) -> dict:
                          "points are quarantined before the rank-one "
                          "pair fires, and unhealthy states go down the "
                          "heal ladder instead of being served")
+    ap.add_argument("--metrics", action="store_true",
+                    help="attach the in-graph metric lane (MetricsState) "
+                         "to the plan: per-stream counters and gauges "
+                         "ride the update pytree with zero extra host "
+                         "syncs; implied by the export flags below")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve GET /metrics (Prometheus text format, "
+                         "counters + gauges + phase-latency summaries) "
+                         "from a daemon thread during the run; 0 picks "
+                         "an ephemeral port")
+    ap.add_argument("--metrics-jsonl", default=None, metavar="PATH",
+                    help="append hub events during the run and write a "
+                         "final full-registry scrape line to PATH "
+                         "(one JSON object per line)")
+    ap.add_argument("--drift-probe-every", type=int, default=4,
+                    metavar="K",
+                    help="decoupled mode: run the spectral-drift probe "
+                         "dispatch every K-th non-publish ingest instead "
+                         "of every one (--publish-on-drift)")
     ap.add_argument("--publish-on-drift", type=float, default=None,
                     metavar="THRESH",
                     help="decoupled mode: staleness-aware publication — "
@@ -687,6 +756,16 @@ def main(argv=None) -> dict:
                     help="sufficient-subset rule: consecutive flat "
                          "admissions before stopping")
     args = ap.parse_args(argv)
+
+    if args.metrics_port is not None:
+        # Start before the mode main so the run is scrapeable live; the
+        # mains reset the same default-hub OBJECT (fresh_hub), so the
+        # server keeps reading the active registry.  Daemon thread —
+        # dies with the process.
+        srv = obs.serve_metrics(obs.get_hub(), args.metrics_port)
+        print(f"[obs] /metrics on :{srv.server_address[1]}")
+    if args.metrics_jsonl:
+        obs.get_hub().open_jsonl(args.metrics_jsonl)
 
     if args.mode == "nystrom":
         return nystrom_main(args)

@@ -24,21 +24,32 @@ from dataclasses import dataclass, field
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import inkpca, kernels_fn as kf
+from repro import obs
+from repro.core import health as hl, inkpca, kernels_fn as kf
 
 
 @dataclass
 class SpectralMonitor:
     """``window`` defaults to ``capacity``: the monitor always tracks the
     trailing ``capacity`` examples instead of freezing at the first
-    ``capacity`` ingested."""
+    ``capacity`` ingested.
+
+    Every ``observe`` also publishes its stats as gauges on a
+    ``TelemetryHub`` (``hub``, default the process hub, under
+    ``{prefix}_*``) including ``drift`` — the relative L2 motion of the
+    tracked top spectrum since the previous observe, computed by the
+    health probe's ``spectral_drift`` against a frozen reference rather
+    than by diffing history entries."""
 
     capacity: int = 128
     kernel: str = "rbf"
     adjusted: bool = True
     dtype: object = jnp.float32
     window: int | None = None
+    prefix: str = "spectral"
+    hub: object = field(default=None, repr=False)
     _stream: inkpca.KPCAStream | None = field(default=None, repr=False)
+    _ref_lam: object = field(default=None, repr=False)
     history: list = field(default_factory=list)
 
     def observe(self, activations) -> dict:
@@ -60,6 +71,18 @@ class SpectralMonitor:
         if rest.shape[0] > 0:
             self._stream.update_block(rest)
         stats = self.stats()
+        # Spectrum motion since the previous observe: one traced
+        # top-spectrum read + the probe's relative-L2 drift metric.
+        st = self._stream.kpca_state
+        nc = min(8, self.capacity)
+        if self._ref_lam is not None:
+            stats["drift"] = float(hl.spectral_drift(st, self._ref_lam))
+        else:
+            stats["drift"] = 0.0
+        self._ref_lam = hl.top_spectrum(st, nc)
+        hub = self.hub if self.hub is not None else obs.get_hub()
+        for k, v in stats.items():
+            hub.set_gauge(f"{self.prefix}_{k}", v)
         self.history.append(stats)
         return stats
 
