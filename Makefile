@@ -4,12 +4,19 @@
 
 PYTHONPATH := src
 
-.PHONY: check test test-all bench bench-quick bench-smoke faults metrics
+.PHONY: check test test-all bench bench-quick bench-smoke faults metrics \
+	lint-api
 
-check:
+check: lint-api
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -q -m "not slow" -x
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --quick --only flops_table
 	$(MAKE) bench-smoke
+
+# API-surface gate: fails if a new *_guarded/*_metered cartesian variant
+# appears on Engine outside the deprecation shim block — cross-cutting
+# features must be added as stages of the composed step pipeline.
+lint-api:
+	python scripts/lint_api.py
 
 # Toy-size perf-driver smoke: exercises the update-scaling, multi-tenant
 # and sharded benchmark drivers end-to-end and fails on non-finite output,

@@ -167,7 +167,8 @@ def _swap_section(smoke: bool) -> dict:
     import jax
     import jax.numpy as jnp
 
-    from repro.core import buckets, inkpca, kernels_fn as kf, serving
+    from repro.core import engine as eng
+    from repro.core import inkpca, kernels_fn as kf, serving
 
     Ms = (64, 128) if smoke else (256, 512, 1024)
     d, m_at, rounds = (8, 12, 5) if smoke else (16, 48, 15)
@@ -178,7 +179,8 @@ def _swap_section(smoke: bool) -> dict:
         X = rng.normal(size=(m_at, d)).astype(np.float32)
         state = inkpca.init_state(jnp.asarray(X[:4]), M, spec, adjusted=True,
                                   dtype=jnp.float32)
-        state = buckets.update_block(state, jnp.asarray(X[4:]), spec)
+        state = eng.Engine(spec, eng.DEFAULT_PLAN._replace(
+            dispatch="bucketed")).update_block(state, jnp.asarray(X[4:]))
         buf = serving.DoubleBuffer(state, n_components=8)
         for _ in range(3):                    # reach donation steady state
             jax.block_until_ready(buf.publish(state).S)

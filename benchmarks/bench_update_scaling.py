@@ -7,7 +7,8 @@ with the bucket, not sit flat at capacity.
 Three paths are timed per m:
 
 * ``fixed_jnp``      — seed path: ``inkpca.update_adjusted`` at capacity M
-* ``bucketed_jnp``   — ``buckets.update`` (slice → update at M_b → scatter)
+* ``bucketed_jnp``   — bucketed ``engine.Engine.update`` (slice → update
+                       at M_b → scatter)
 * ``bucketed_fused`` — same, with the fused ±sigma double-rotation pairs
                        (``matmul='jnp2'``: one pass over U per pair)
 
@@ -29,9 +30,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import buckets, inkpca, kernels_fn as kf
+from repro.core import engine as eng
+from repro.core import inkpca, kernels_fn as kf
 
 OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_update_scaling.json"
+
+BPLAN = eng.DEFAULT_PLAN._replace(dispatch="bucketed")
 
 
 def _time(fn, reps: int) -> float:
@@ -52,7 +56,7 @@ def _state_at(X, m: int, capacity: int, spec) -> inkpca.KPCAState:
                               adjusted=True, dtype=jnp.float32)
     # Grow with the bucketed path (fast) — the resulting state is identical
     # to what the fixed path would produce, up to fp rounding.
-    state = buckets.update_block(state, jnp.asarray(X[4:m]), spec)
+    state = eng.Engine(spec, BPLAN).update_block(state, jnp.asarray(X[4:m]))
     return state
 
 
@@ -73,6 +77,8 @@ def main(capacity: int = 1024, reps: int = 3, quick: bool = False,
           f"adjusted update)")
     print(f"{'m':>6s} {'bucket':>7s} {'fixed_jnp_ms':>13s} "
           f"{'bucketed_ms':>12s} {'fused_ms':>9s} {'speedup':>8s}")
+    buck_eng = eng.Engine(spec, BPLAN)
+    fused_eng = eng.Engine(spec, BPLAN._replace(matmul="jnp2"))
     for m in ms:
         state = _state_at(X, m, capacity, spec)
         x_new = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
@@ -80,10 +86,9 @@ def main(capacity: int = 1024, reps: int = 3, quick: bool = False,
 
         t_fixed = _time(lambda: inkpca.update_adjusted(
             state, a, k_new, x_new).L, reps)
-        t_buck = _time(lambda: buckets.update(state, x_new, spec).L, reps)
-        t_fused = _time(lambda: buckets.update(
-            state, x_new, spec, matmul="jnp2").L, reps)
-        bucket = buckets.bucket_for(m + 1, capacity)
+        t_buck = _time(lambda: buck_eng.update(state, x_new).L, reps)
+        t_fused = _time(lambda: fused_eng.update(state, x_new).L, reps)
+        bucket = eng.bucket_for(m + 1, capacity)
         row = {"m": m, "bucket": bucket, "fixed_jnp_s": t_fixed,
                "bucketed_jnp_s": t_buck, "bucketed_fused_s": t_fused,
                "speedup_bucketed": t_fixed / t_buck}

@@ -158,13 +158,14 @@ def kernel_rows(M: int, d: int, Q: int, C: int, reps: int,
 
 
 def _state_at(m: int, capacity: int, d: int, spec) -> inkpca.KPCAState:
-    from repro.core import buckets
+    from repro.core import engine as eng
 
     rng = np.random.default_rng(1)
     X = rng.normal(size=(m, d)).astype(np.float32)
     state = inkpca.init_state(jnp.asarray(X[:4]), capacity, spec,
                               adjusted=True, dtype=jnp.float32)
-    return buckets.update_block(state, jnp.asarray(X[4:]), spec)
+    return eng.Engine(spec, eng.DEFAULT_PLAN._replace(
+        dispatch="bucketed")).update_block(state, jnp.asarray(X[4:]))
 
 
 def fused_comparison(capacity: int, m: int, d: int, q_batch: int,

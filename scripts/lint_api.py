@@ -1,0 +1,57 @@
+#!/usr/bin/env python
+"""API-surface lint: the variant matrix must stay collapsed.
+
+The stream-step refactor folded every ``*_guarded``/``*_metered``
+cartesian spelling of ``Engine`` into the composed ``step``/``step_block``
+pipeline; the survivors are one-line deprecation shims confined to the
+marked block in ``core/engine.py``.  This check fails if a new guarded or
+metered method variant appears on ``Engine`` OUTSIDE that block — the
+refactor's invariant: a cross-cutting feature is a new pipeline STAGE
+(selected from the ``StreamState`` bundle at trace time), never a new
+method per combination.
+
+Grep-based on purpose: no imports, no jax, runs in milliseconds as part
+of ``make lint-api`` / ``make check`` / CI.
+
+Exit status: 0 clean, 1 violation (offending lines printed).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ENGINE = Path(__file__).resolve().parent.parent / "src/repro/core/engine.py"
+SHIM_BEGIN = "legacy variant-matrix shims (deprecated)"
+SHIM_END = "end legacy variant-matrix shims"
+VARIANT = re.compile(r"^\s+def\s+\w*_(?:guarded|metered)\w*\s*\(")
+
+
+def main() -> int:
+    text = ENGINE.read_text().splitlines()
+    begin = end = None
+    for i, line in enumerate(text):
+        if SHIM_BEGIN in line and begin is None:
+            begin = i
+        elif SHIM_END in line and end is None:
+            end = i
+    if begin is None or end is None or end <= begin:
+        print(f"lint-api: shim-block markers missing or malformed in "
+              f"{ENGINE} (need '{SHIM_BEGIN}' before '{SHIM_END}')")
+        return 1
+    bad = [(i + 1, line) for i, line in enumerate(text)
+           if VARIANT.match(line) and not begin <= i <= end]
+    if bad:
+        print("lint-api: new *_guarded/*_metered method variants outside "
+              "the deprecation shim block — add a stage to the composed "
+              "Engine.step pipeline instead:")
+        for lineno, line in bad:
+            print(f"  {ENGINE}:{lineno}: {line.strip()}")
+        return 1
+    print(f"lint-api: OK ({ENGINE.name}: variant matrix stays collapsed; "
+          f"shims confined to lines {begin + 1}-{end + 1})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

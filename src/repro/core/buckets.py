@@ -1,72 +1,7 @@
-"""Back-compat shims for bucketed dispatch — the logic lives in the engine.
-
-This module used to own bucket geometry and the slice→update→scatter
-dispatch for m-scaled updates.  That machinery moved to
-``repro.core.engine`` (``UpdatePlan`` + ``Engine``), where the KPCA
-stream, the Nyström landmark path, the row-sharded distributed drivers
-and the serving layer all share it.  The functions below keep the old
-kwarg-style entry points alive for existing callers and tests; new code
-should construct an ``engine.Engine`` (or pass ``plan=`` to
-``KPCAStream``) directly.
-"""
-from __future__ import annotations
-
-import jax
-
-from repro.core import engine as eng
-from repro.core import inkpca, kernels_fn as kf
-
-Array = jax.Array
-
-DEFAULT_MIN_BUCKET = eng.DEFAULT_MIN_BUCKET
-
-# Geometry + slice/scatter are re-exported verbatim from the engine layer.
-bucket_sizes = eng.bucket_sizes
-bucket_for = eng.bucket_for
-slice_state = eng.slice_state
-scatter_state = eng.scatter_state
-
-
-def _plan(method: str, matmul: str, iters: int | None,
-          min_bucket: int) -> eng.UpdatePlan:
-    return eng.UpdatePlan(method=method, matmul=matmul, iters=iters,
-                          dispatch="bucketed", min_bucket=min_bucket)
-
-
-def rank_one_update(L: Array, U: Array, v: Array, sigma: Array, m: Array,
-                    *, min_bucket: int = DEFAULT_MIN_BUCKET,
-                    method: str = "gu", matmul: str = "jnp",
-                    iters: int | None = None) -> tuple[Array, Array]:
-    """``rankone.rank_one_update`` at bucket capacity, scattered back."""
-    return eng.rank_one(L, U, v, sigma, m,
-                        plan=_plan(method, matmul, iters, min_bucket))
-
-
-def update(state: inkpca.KPCAState, x_new: Array, spec: kf.KernelSpec, *,
-           adjusted: bool = True, method: str = "gu", matmul: str = "jnp",
-           iters: int | None = None,
-           min_bucket: int = DEFAULT_MIN_BUCKET) -> inkpca.KPCAState:
-    """One streaming point through Algorithm 1/2 at bucket capacity."""
-    engine = eng.Engine(spec, _plan(method, matmul, iters, min_bucket),
-                        adjusted=adjusted)
-    return engine.update(state, x_new)
-
-
-def update_block(state: inkpca.KPCAState, xs: Array, spec: kf.KernelSpec, *,
-                 adjusted: bool = True, method: str = "gu",
-                 matmul: str = "jnp", iters: int | None = None,
-                 min_bucket: int = DEFAULT_MIN_BUCKET) -> inkpca.KPCAState:
-    """Stream a block of points: scan within a bucket, re-bucket at
-    crossings (see the cost model in engine.py)."""
-    engine = eng.Engine(spec, _plan(method, matmul, iters, min_bucket),
-                        adjusted=adjusted)
-    return engine.update_block(state, xs)
-
-
-def add_landmark(state, x_all: Array, x_new: Array, spec: kf.KernelSpec, *,
-                 method: str = "gu", matmul: str = "jnp", iters: int | None = None,
-                 min_bucket: int = DEFAULT_MIN_BUCKET):
-    """Bucketed ``nystrom.add_landmark`` via the engine."""
-    engine = eng.Engine(spec, _plan(method, matmul, iters, min_bucket),
-                        adjusted=False)
-    return engine.add_landmark(state, x_all, x_new)
+"""DEPRECATED — bucketed dispatch lives in ``repro.core.engine`` (use
+``UpdatePlan(dispatch="bucketed")`` + ``Engine``); this stub re-exports
+the geometry helpers for stragglers and will be deleted in a later PR."""
+from repro.core.engine import (  # noqa: F401
+    bucket_for, bucket_sizes, scatter_state, slice_state,
+    DEFAULT_MIN_BUCKET,
+)

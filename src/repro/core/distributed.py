@@ -483,25 +483,59 @@ def _window_step_sharded(L, U_local, X, ages, clock, x_new, m, *,
     replicated elementwise select discards the result.  The clock then
     does not advance, so the caller recovers the quarantine count as
     ``T − (clock_after − clock_before)``.
+
+    The step is the same ``gate → evict|ingest`` composition that
+    ``engine.Engine.step`` assembles for single streams, built from the
+    sharded stage helpers below (``_window_gate_sharded``,
+    ``_window_evict_sharded``, ``_window_ingest_sharded``) — extraction
+    only, op-for-op identical, so the traced collective schedule is
+    unchanged.
     """
-    M = L.shape[0]
-    dtype = L.dtype
     policy = getattr(plan, "health", None)
     guard = policy is not None and policy.quarantine
     if guard:
-        ok = jnp.all(jnp.isfinite(x_new))
-        if policy.outlier_tol > 0.0:
-            x_tmp = jnp.where(ok, x_new, X[0].astype(x_new.dtype))
-            a_g = kf.kernel_row(x_tmp, X, spec=spec)
-            a_g = jnp.where(rankone.active_mask(M, m), a_g, 0.0)
-            k_g = kf.gram_block(x_tmp[None], x_tmp[None], spec=spec)[0, 0]
-            ok = ok & (jnp.max(jnp.abs(a_g)) >= policy.outlier_tol * k_g)
-        x_new = jnp.where(ok, x_new, X[0].astype(x_new.dtype))
+        ok, x_new = _window_gate_sharded(x_new, X, m, spec=spec,
+                                         policy=policy)
         L0, U0, X0, ages0, clock0 = L, U_local, X, ages, clock
+    L1, U1, X1, ages1, m1 = _window_evict_sharded(
+        L, U_local, X, ages, m, axis=axis, spec=spec, plan=plan,
+        nshards=nshards, rows_full=rows_full)
+    L3, U3, X2, ages2 = _window_ingest_sharded(
+        L1, U1, X1, ages1, clock, x_new, m1, axis=axis, spec=spec,
+        plan=plan, rows_full=rows_full)
+    if guard:
+        return (jnp.where(ok, L3, L0), jnp.where(ok, U3, U0),
+                jnp.where(ok, X2, X0), jnp.where(ok, ages2, ages0),
+                jnp.where(ok, clock + 1, clock0))
+    return L3, U3, X2, ages2, clock + 1
+
+
+def _window_gate_sharded(x_new, X, m, *, spec: kf.KernelSpec, policy):
+    """The gate stage of the sharded window step: quarantine verdict plus
+    the sanitized stand-in (stored row 0).  ``x_new`` and ``X`` are
+    replicated, so the verdict is identical on every shard and no
+    collective is issued — downstream stages stay schedule-fixed."""
+    M = X.shape[0]
+    ok = jnp.all(jnp.isfinite(x_new))
+    if policy.outlier_tol > 0.0:
+        x_tmp = jnp.where(ok, x_new, X[0].astype(x_new.dtype))
+        a_g = kf.kernel_row(x_tmp, X, spec=spec)
+        a_g = jnp.where(rankone.active_mask(M, m), a_g, 0.0)
+        k_g = kf.gram_block(x_tmp[None], x_tmp[None], spec=spec)[0, 0]
+        ok = ok & (jnp.max(jnp.abs(a_g)) >= policy.outlier_tol * k_g)
+    return ok, jnp.where(ok, x_new, X[0].astype(x_new.dtype))
+
+
+def _window_evict_sharded(L, U_local, X, ages, m, *, axis: str,
+                          spec: kf.KernelSpec, plan: eng.UpdatePlan,
+                          nshards: int, rows_full: int | None = None):
+    """The evict stage: permute the FIFO victim (argmin of ages) to the
+    boundary, inverse ±sigma pair + contraction — the sharded mirror of
+    the downdate half of ``engine._window_pair`` (ppermute + 3 psums,
+    unconditional)."""
+    M = L.shape[0]
     victim = jnp.argmin(ages).astype(jnp.int32)
     order = dd.boundary_perm(victim, m, M)
-
-    # --- evict: permute victim to the boundary, inverse pair + contract ---
     U_p = _permute_rows_sharded(U_local, victim, m, axis=axis,
                                 nshards=nshards, rows_full=rows_full)
     X_p = X[order]
@@ -513,14 +547,25 @@ def _window_step_sharded(L, U_local, X, ages, clock, x_new, m, *,
     idx = jnp.arange(M)
     X1 = jnp.where((idx == q)[:, None], 0.0, X_p)
     # No sentinel write for the freed boundary slot: at m ≡ W the ingest
-    # below stamps the same index m1 with the clock.
+    # stage stamps the same index m1 with the clock.
     ages1 = ages[order]
+    return L1, U1, X1, ages1, m1
 
-    # --- ingest: expansion + forward ±sigma pair (Algorithm 1) ---
+
+def _window_ingest_sharded(L1, U1, X1, ages1, clock, x_new, m1, *,
+                           axis: str, spec: kf.KernelSpec,
+                           plan: eng.UpdatePlan,
+                           rows_full: int | None = None):
+    """The ingest stage: expansion + forward ±sigma pair (Algorithm 1) —
+    the sharded mirror of the ingest half of ``engine._window_pair``
+    (one fused or separate z psum + the pair's collectives)."""
+    M = L1.shape[0]
+    dtype = L1.dtype
+    idx = jnp.arange(M)
     k_new = kf.gram_block(x_new[None], x_new[None], spec=spec)[0, 0]
     kn = jnp.maximum(k_new, jnp.finfo(dtype).tiny)
     sigma = 4.0 / kn
-    R = U_local.shape[0]
+    R = U1.shape[0]
     r0 = jax.lax.axis_index(axis) * (rows_full or R)
     if plan.fuse_krow:
         # Fused prologue, rectangular per-shard: ONE pass over this
@@ -565,11 +610,7 @@ def _window_step_sharded(L, U_local, X, ages, clock, x_new, m, *,
                                                rows_full=rows_full)
     X2 = jnp.where((idx == m1)[:, None], x_new[None, :].astype(X1.dtype), X1)
     ages2 = ages1.at[m1].set(clock)
-    if guard:
-        return (jnp.where(ok, L3, L0), jnp.where(ok, U3, U0),
-                jnp.where(ok, X2, X0), jnp.where(ok, ages2, ages0),
-                jnp.where(ok, clock + 1, clock0))
-    return L3, U3, X2, ages2, clock + 1
+    return L3, U3, X2, ages2
 
 
 def _rebase_ring_traced(ages, clock, span: int):
@@ -851,64 +892,86 @@ def make_tenant_query(mesh, spec: kf.KernelSpec, *,
 # ------------------------------------------------ row-rebalancing reshard --
 def make_rebalanced_update(mesh, *, axis: str = "data",
                            plan: eng.UpdatePlan = eng.DEFAULT_PLAN):
-    """Bucketed sharded update that RESHARDS small buckets to a sub-mesh:
-    f(L, U, v, sigma, m), same contract as ``make_sharded_update``.
+    """Bucketed sharded update that REBALANCES small buckets across the
+    mesh: f(L, U, v, sigma, m), same contract as ``make_sharded_update``.
 
     With m ≪ M/P the bucketed full-mesh update degenerates: only the
-    devices owning global rows < M_b hold active data, yet all P devices
-    still join every O(M) psum (fan-in P) and rotate dead identity rows.
-    Below the crossover P_eff = ceil(M_b / (M/P)) < P this builder
-    re-lays the (M_b, M_b) active system out over the FIRST P_eff devices
-    (each getting M_b/P_eff ACTIVE rows), runs the 1-D sharded update on
-    that sub-mesh — psum fan-in P_eff, zero dead rotation flops — and
-    scatters the result back into the full-capacity sharded state.  At or
-    above the crossover (and for fixed dispatch) it falls back to
+    devices owning global rows < M_b hold active data, yet every device
+    still runs the per-bucket body — the ones past the bucket on dead
+    masked rows.  Below the crossover P_eff = ceil(M_b / (M/P)) < P this
+    builder re-lays the (M_b, M_b) active system out over ALL P devices
+    (each getting M_b/P ACTIVE rows) and runs the 1-D sharded update on
+    that balanced layout before scattering back into the full-capacity
+    sharding.
+
+    The reshard is IN-GRAPH: one jitted shard_map per bucket rung gathers
+    the (M_b, M_b) active system with ``jax.lax.all_gather``, hands every
+    device a balanced M_b/P slice of its rows, runs the 1-D sharded
+    update on that layout, and scatters the result back into the
+    full-capacity row sharding — all inside the same traced step, so the
+    rebalanced update composes with scanned window blocks (the carried-
+    over follow-up this closes).  Collective fan-in stays P (the psums
+    still span the full mesh), but the O(M_b · m²) rotation flops now
+    balance across all P devices with ZERO dead identity-row work,
+    instead of piling onto the ceil(M_b/(M/P)) devices that happen to own
+    low rows.  Buckets not divisible by P (and fixed dispatch, and at or
+    above the bucket = capacity rung) fall back to
     ``make_sharded_update`` unchanged.
-
-    The reshard itself moves the O(M_b²) bucket through host collectives,
-    so per-call it trades bandwidth for fan-in; steady-state callers keep
-    a bucket RESIDENT (reshard once per rung change, as ``engine``'s
-    bucketed residency does) by reusing the returned sub-mesh state
-    across calls — the dispatch only re-lays-out when the rung changes.
     """
-    import numpy as np
-
     nP = mesh.shape[axis]
-    devs = np.asarray(mesh.devices).reshape(-1)
     full_fn = make_sharded_update(mesh, axis=axis, plan=plan)
     if plan.dispatch != "bucketed" or nP == 1:
         return full_fn
 
-    sub_cache: dict[int, tuple] = {}
+    bal_cache: dict[int, object] = {}
 
-    def _sub(P_eff: int):
-        if P_eff not in sub_cache:
-            sub_mesh = jax.sharding.Mesh(devs[:P_eff], (axis,))
-            sub_fn = make_sharded_update(
-                sub_mesh, axis=axis, plan=plan._replace(dispatch="fixed"))
-            sub_cache[P_eff] = (sub_mesh, sub_fn)
-        return sub_cache[P_eff]
+    def _balanced(Mb: int, M: int):
+        if Mb not in bal_cache:
+            R = M // nP                 # local rows, capacity layout
+            Rb = Mb // nP               # local rows, balanced bucket layout
+            nloc = min(R, Mb)           # local rows overlapping the bucket
+
+            def body(L, U_local, v, sigma, m):
+                p = jax.lax.axis_index(axis)
+                zero = jnp.zeros((), p.dtype)
+                # Gather the bucket: each device contributes its first
+                # nloc rows; in device order the first Mb gathered rows
+                # are exactly global rows [0, Mb) (devices past the
+                # bucket contribute rows that land beyond Mb and are
+                # dropped by the slice).
+                U_all = jax.lax.all_gather(U_local[:nloc, :Mb], axis,
+                                           tiled=True)
+                Ubkt = U_all[:Mb]                       # (Mb, Mb) repl
+                U_b = jax.lax.dynamic_slice(Ubkt, (p * Rb, zero), (Rb, Mb))
+                v_b = jax.lax.dynamic_slice(v, (p * Rb,), (Rb,))
+                Lb, U_b = _rank_one_update_sharded(L[:Mb], U_b, v_b, sigma,
+                                                   m, axis=axis, plan=plan)
+                # Second gather: the updated bucket, replicated, scattered
+                # back into this device's capacity-layout rows.
+                U_upd = jax.lax.all_gather(U_b, axis, tiled=True)  # (Mb,Mb)
+                gids = jnp.arange(R) + p * R
+                cand = U_upd[jnp.clip(gids, 0, Mb - 1)]
+                newcols = jnp.where((gids < Mb)[:, None], cand,
+                                    U_local[:, :Mb])
+                L_new = rankone.sentinelize(L.at[:Mb].set(Lb), m,
+                                            jnp.zeros((), L.dtype))
+                return L_new, U_local.at[:, :Mb].set(newcols)
+
+            bal_cache[Mb] = jax.jit(_shard_map(
+                body, mesh=mesh,
+                in_specs=(P(), P(axis, None), P(), P(), P()),
+                out_specs=(P(), P(axis, None)),
+                check_vma=False,
+            ))
+        return bal_cache[Mb]
 
     def dispatch(L, U, v, sigma, m):
         M = L.shape[0]
         R = M // nP
         Mb = eng.bucket_for(max(int(m), 1), M, plan.min_bucket)
         P_eff = max(1, -(-Mb // R))              # ceil(Mb / R)
-        if P_eff >= nP:
+        if P_eff >= nP or Mb % nP != 0:
             return full_fn(L, U, v, sigma, m)
-        sub_mesh, sub_fn = _sub(P_eff)
-        rowsh = jax.sharding.NamedSharding(sub_mesh, P(axis, None))
-        vecsh = jax.sharding.NamedSharding(sub_mesh, P(axis))
-        repl = jax.sharding.NamedSharding(sub_mesh, P())
-        Lb = jax.device_put(L[:Mb], repl)
-        Ub = jax.device_put(U[:Mb, :Mb], rowsh)
-        vb = jax.device_put(v[:Mb], vecsh)
-        Lb, Ub = sub_fn(Lb, Ub, vb, jax.device_put(sigma, repl),
-                        jax.device_put(m, repl))
-        back = jax.sharding.NamedSharding(mesh, P())
-        Lh, Uh = jax.device_put(Lb, back), jax.device_put(Ub, back)
-        L_new = rankone.sentinelize(L.at[:Mb].set(Lh), m,
-                                    jnp.zeros((), L.dtype))
-        return L_new, U.at[:Mb, :Mb].set(Uh)
+        return _balanced(Mb, M)(L, U, v, sigma, m)
 
     return dispatch

@@ -360,6 +360,21 @@ def _ingest(st, x_new: Array, spec: kf.KernelSpec, adjusted: bool,
     return fn(st, a, k_new, x_new, plan=plan)
 
 
+def _window_pair(st, victim, x_new: Array, spec: kf.KernelSpec,
+                 adjusted: bool, plan: UpdatePlan):
+    """The steady-state ``evict|ingest`` pair stage at m ≡ W: inverse
+    ±sigma pair + contraction on the victim row, then one Algorithm-1/2
+    ingest.  THE shared windowed composition — the single-stream scan,
+    the guarded scan (``health._guarded_window_chunk_impl``) and the
+    multi-tenant lockstep scan all fold this exact pair; the sharded
+    mirror (``distributed._window_step_sharded``) composes the same two
+    stages from the sharded bodies."""
+    from repro.core import downdate as dd
+
+    st = dd.downdate(st, victim, spec, adjusted=adjusted, plan=plan)
+    return _ingest(st, x_new, spec, adjusted, plan)
+
+
 @partial(jax.jit, static_argnames=("spec", "adjusted", "plan"))
 def _scan_chunk(sub, xs: Array, spec: kf.KernelSpec, adjusted: bool,
                 plan: UpdatePlan):
@@ -448,12 +463,10 @@ def _window_scan_chunk(sub, ages: Array, clock: Array, xs: Array,
         st, ages, clock = carry
         victim = jnp.argmin(ages).astype(jnp.int32)
         order = dd.boundary_perm(victim, st.m, ages.shape[0])
-        st = dd.downdate(st, victim, spec, adjusted=adjusted, plan=plan)
         # No sentinel write for the evicted slot: at m ≡ W the freed
-        # boundary row W−1 is exactly where the new point lands below.
-        ages = ages[order]
-        st = _ingest(st, x_new, spec, adjusted, plan)
-        ages = ages.at[st.m - 1].set(clock)            # new point's row
+        # boundary row W−1 is exactly where the new point lands.
+        st = _window_pair(st, victim, x_new, spec, adjusted, plan)
+        ages = ages[order].at[st.m - 1].set(clock)     # new point's row
         return (st, ages, clock + 1), None
 
     (sub, ages, clock), _ = jax.lax.scan(step, (sub, ages, clock), xs)
@@ -471,13 +484,10 @@ def _batched_window_scan_masked(states, xs: Array, active: Array,
     tenants stay bitwise untouched), which is what makes the whole block
     a fixed-shape scan — the windowed mirror of ``_batched_scan_masked``.
     """
-    from repro.core import downdate as dd
-
     def step(sts, x_row):
         def one(st, x, act):
-            st_e = dd.downdate(st, jnp.zeros((), jnp.int32), spec,
-                               adjusted=adjusted, plan=plan)
-            new = _ingest(st_e, x, spec, adjusted, plan)
+            new = _window_pair(st, jnp.zeros((), jnp.int32), x, spec,
+                               adjusted, plan)
             return jax.tree.map(lambda n, o: jnp.where(act, n, o), new, st)
 
         return jax.vmap(one)(sts, x_row, active), None
@@ -500,12 +510,61 @@ def _batched_scan(states, xs: Array, spec: kf.KernelSpec, adjusted: bool,
     return out
 
 
+# ------------------------------------------------------- stream bundle --
+class StreamState(NamedTuple):
+    """The unified stream bundle the composed pipeline advances.
+
+    One pytree carries everything a stream can accumulate: the
+    eigensystem plus the OPTIONAL cross-cutting members — the sliding
+    window's arrival ring, the self-healing layer's ``HealthState``, the
+    telemetry lane's ``MetricsState``.  Absent members are ``None``
+    leaves (``None`` is an empty pytree node), so the treestructure is a
+    pure function of the plan: jit never retraces because a member
+    appeared mid-stream, and ``Engine.step``/``step_block`` select their
+    stages from the bundle SHAPE at trace time —
+
+        gate  — runs iff ``health``  is present (quarantine + probe)
+        evict — runs iff ``ages``    is present (sliding-window FIFO)
+        note  — runs iff ``metrics`` is present (telemetry accounting)
+
+    ``kpca``    ``inkpca.KPCAState`` — the fixed-capacity eigensystem
+    ``ages``    (M,) arrival ring, or None for append-only streams
+    ``clock``   () next arrival stamp (present iff ``ages`` is)
+    ``health``  ``health.HealthState`` or None
+    ``metrics`` ``telemetry.MetricsState`` or None
+    """
+
+    kpca: object
+    ages: object = None
+    clock: object = None
+    health: object = None
+    metrics: object = None
+
+    @property
+    def windowed(self) -> bool:
+        return self.ages is not None
+
+
+def make_stream(state, *, health=None, metrics=None) -> StreamState:
+    """Wrap a bare ``KPCAState`` or a ``window.WindowState`` (plus any
+    riding layers) into the bundle ``Engine.step`` advances.  The inverse
+    is structural: read ``.kpca`` (or rebuild a ``WindowState`` from
+    ``kpca``/``ages``/``clock``), ``.health``, ``.metrics``."""
+    if hasattr(state, "kpca"):                         # WindowState
+        return StreamState(kpca=state.kpca, ages=state.ages,
+                           clock=state.clock, health=health, metrics=metrics)
+    return StreamState(kpca=state, health=health, metrics=metrics)
+
+
 # ---------------------------------------------------------------- engine --
 class Engine:
     """Slice→update→scatter for one stream, under an ``UpdatePlan``.
 
     The engine is stateless with respect to the stream (states go in and
     out), so one engine can serve many states with the same plan/kernel.
+    Streams advance through the composed ``step``/``step_block``
+    pipeline; the pre-collapse cartesian spellings survive as one-line
+    deprecation shims (see the marked block below).
     """
 
     def __init__(self, spec: kf.KernelSpec, plan: UpdatePlan = DEFAULT_PLAN,
@@ -525,7 +584,148 @@ class Engine:
         return _ingest(state, x_new, self.spec, self.adjusted,
                        self.plan.kernel_plan())
 
-    def update(self, state, x_new: Array, *, min_rows: int = 0):
+    # ---- composed stream-step pipeline -------------------------------------
+    # THE update path.  ``step``/``step_block`` advance a ``StreamState``
+    # bundle through up to four stages, selected at TRACE TIME from the
+    # bundle's structure (absent members are None leaves):
+    #
+    #     gate → (evict|ingest|pair) → note
+    #
+    #     gate          health present:  quarantine gate + in-graph probe
+    #                   (the guarded impls in ``core/health.py``)
+    #     evict         ages present:    FIFO eviction, fused with the
+    #                   ingest at m ≡ W (``_window_pair``)
+    #     ingest|pair   always:          Algorithm 1/2 expansion + ±sigma
+    #                   pair (``_ingest``)
+    #     note          metrics present: one tiny separate accounting
+    #                   dispatch (``telemetry.note_block``)
+    #
+    # Every stage routes through the SAME jitted impls the pre-collapse
+    # variant methods used (``_scan_chunk``, ``_window_scan_chunk``,
+    # ``health._guarded_*_impl``, ``telemetry.note_block``), so each of
+    # the 2×2×2 (window × health × metrics) combinations is bitwise
+    # identical to its legacy spelling — and a future cross-cutting
+    # feature is ONE new stage here, not 2^k new methods.
+
+    def _stream_window(self, stream: "StreamState",
+                       window: int | None) -> int | None:
+        if window is None:
+            window = self.plan.window
+        if stream.ages is not None and window is None:
+            raise ValueError(
+                "windowed StreamState needs a window size — pass window= "
+                "or build the engine with UpdatePlan(window=W)")
+        return window if stream.ages is not None else None
+
+    def step(self, stream: "StreamState", x_new: Array, *,
+             window: int | None = None, min_rows: int = 0) -> "StreamState":
+        """Advance the bundle by ONE offered point through the composed
+        gate → (evict|ingest|pair) → note pipeline.  Absent members stay
+        absent; ``window`` defaults to the plan's and is required only
+        for windowed bundles.  Point-wise windowed steps keep the
+        two-dispatch evict+ingest spelling (the evict decision reads
+        ``int(m)`` on the host); fold blocks through ``step_block`` for
+        the single-dispatch steady-state scan."""
+        from repro.core import window as wnd
+
+        window = self._stream_window(stream, window)
+        metered = stream.metrics is not None
+        if metered:
+            m0, c0 = stream.kpca.m, stream.clock
+            q0 = (stream.health.quarantined if stream.health is not None
+                  else None)
+        if stream.ages is not None:
+            w = wnd.WindowState(kpca=stream.kpca, ages=stream.ages,
+                                clock=stream.clock)
+            if stream.health is not None:
+                w, h = self._gated_window_point(w, stream.health, x_new,
+                                                window=window,
+                                                min_rows=min_rows)
+                stream = stream._replace(kpca=w.kpca, ages=w.ages,
+                                         clock=w.clock, health=h)
+            else:
+                w = self._window_point(w, x_new, window=window,
+                                       min_rows=min_rows)
+                stream = stream._replace(kpca=w.kpca, ages=w.ages,
+                                         clock=w.clock)
+        elif stream.health is not None:
+            st, h = self._gated_point(stream.kpca, stream.health, x_new,
+                                      min_rows=min_rows)
+            stream = stream._replace(kpca=st, health=h)
+        else:
+            stream = stream._replace(kpca=self._ingest_point(
+                stream.kpca, x_new, min_rows=min_rows))
+        if metered:
+            stream = self._note_stage(stream, m0, c0, q0, offered=1,
+                                      window=window)
+        return stream
+
+    def step_block(self, stream: "StreamState", xs: Array, *,
+                   window: int | None = None,
+                   min_rows: int = 0) -> "StreamState":
+        """Fold a (T, d) block through the composed pipeline — the block
+        mirror of ``step``.  Windowed bundles scan steady-state points
+        under ONE dispatch (victim selection and the arrival ring fully
+        in-graph); guarded bundles gate per point inside the scan; the
+        note stage accounts the whole block once at the end."""
+        from repro.core import window as wnd
+
+        xs = jnp.asarray(xs)
+        window = self._stream_window(stream, window)
+        metered = stream.metrics is not None
+        if metered:
+            m0, c0 = stream.kpca.m, stream.clock
+            q0 = (stream.health.quarantined if stream.health is not None
+                  else None)
+        if stream.ages is not None:
+            w = wnd.WindowState(kpca=stream.kpca, ages=stream.ages,
+                                clock=stream.clock)
+            if stream.health is not None:
+                w, h = self._gated_window_block(w, stream.health, xs,
+                                                window=window,
+                                                min_rows=min_rows)
+                stream = stream._replace(kpca=w.kpca, ages=w.ages,
+                                         clock=w.clock, health=h)
+            else:
+                w = self._window_block(w, xs, window=window,
+                                       min_rows=min_rows)
+                stream = stream._replace(kpca=w.kpca, ages=w.ages,
+                                         clock=w.clock)
+        elif stream.health is not None:
+            st, h = self._gated_block(stream.kpca, stream.health, xs,
+                                      min_rows=min_rows)
+            stream = stream._replace(kpca=st, health=h)
+        else:
+            stream = stream._replace(kpca=self._ingest_block(
+                stream.kpca, xs, min_rows=min_rows))
+        if metered:
+            stream = self._note_stage(stream, m0, c0, q0,
+                                      offered=xs.shape[0], window=window)
+        return stream
+
+    def _note_stage(self, stream: "StreamState", m0, c0, q0, *,
+                    offered: int, window: int | None) -> "StreamState":
+        """The note stage: account the step into the riding MetricsState
+        as ONE tiny separate dispatch, leaving the eigensystem path's jit
+        cache entries untouched.  Accepted-count identities (all traced,
+        zero host syncs): windowed bundles use the clock delta (guarded
+        scans advance the clock only for accepted points); guarded plain
+        bundles use the quarantine-counter delta; unguarded plain bundles
+        accept everything offered."""
+        from repro.core import telemetry as tm
+
+        if c0 is not None:
+            accepted = stream.clock - c0
+        elif q0 is not None:
+            accepted = offered - (stream.health.quarantined - q0)
+        else:
+            accepted = offered
+        return stream._replace(metrics=tm.note_block(
+            stream.metrics, m0, stream.kpca.m, offered, accepted,
+            stream.health, window=window))
+
+    # ---- stage impls: plain ingest -----------------------------------------
+    def _ingest_point(self, state, x_new: Array, *, min_rows: int = 0):
         """One streaming point through Algorithm 1/2 at bucket capacity.
 
         The kernel row is evaluated against the sliced X as well, so the
@@ -539,7 +739,7 @@ class Engine:
         sub = self._kpca_step(sub, x_new)
         return scatter_state(state, sub) if Mb < M else sub
 
-    def update_block(self, state, xs: Array, *, min_rows: int = 0):
+    def _ingest_block(self, state, xs: Array, *, min_rows: int = 0):
         """Stream a block of points: scan within a bucket, re-bucket at
         crossings (see the cost model in the module docstring)."""
         M = state.L.shape[0]
@@ -610,24 +810,33 @@ class Engine:
         one), so the whole evict+ingest pair fits at bucket_for(W)."""
         return self._bucket(M, max(window, min_rows, 1))
 
-    def window_step(self, wstate, x_new: Array, *, window: int,
-                    min_rows: int = 0):
-        """One steady-state sliding-window step (m ≡ W): evict-oldest +
-        ingest fused under ONE jitted dispatch at the window's bucket —
-        against the two dispatches (plus slice/scatter traffic between
-        them) of ``window.ingest``.  Below a full window the point is
-        append-only (no eviction), exactly like ``window.ingest``.
-        """
-        return self.window_block(wstate, jnp.asarray(x_new)[None],
-                                 window=window, min_rows=min_rows)
+    # ---- stage impls: window (evict|ingest fused) ---------------------------
+    def _window_point(self, wstate, x_new: Array, *, window: int,
+                      min_rows: int = 0):
+        """Point-wise evict|ingest: append-only below a full window,
+        evict-oldest + ingest at m ≡ W — the two-dispatch spelling
+        ``window.ingest`` established (the evict decision reads
+        ``int(m)`` on the host, the same sync bucket selection pays).
+        Blocks fold through ``_window_block``'s single-dispatch scan."""
+        from repro.core import window as wnd
 
-    def window_block(self, wstate, xs: Array, *, window: int,
-                     min_rows: int = 0):
+        wstate = wnd.maybe_rebase(wstate)
+        if int(wstate.kpca.m) >= window:
+            wstate = wnd.evict(self, wstate, wnd.oldest_row(wstate),
+                               min_rows=min_rows)
+        kpca = self._ingest_point(wstate.kpca, jnp.asarray(x_new),
+                                  min_rows=min_rows)
+        ages = wstate.ages.at[wstate.kpca.m].set(wstate.clock)
+        return wnd.WindowState(kpca=kpca, ages=ages,
+                               clock=wstate.clock + 1)
+
+    def _window_block(self, wstate, xs: Array, *, window: int,
+                      min_rows: int = 0):
         """Fold a (T, d) block into a windowed stream — the windowed
-        mirror of ``update_block``.
+        mirror of ``_ingest_block``.
 
         Growth phase (m < W): the leading W − m points are append-only
-        and route through ``update_block`` (scan within buckets), with
+        and route through ``_ingest_block`` (scan within buckets), with
         their arrival stamps written in one fused slice.  Steady state
         (m ≡ W): the remaining points fold through ``_window_scan_chunk``
         — ONE dispatch for the whole chunk, victim selection and the
@@ -650,8 +859,8 @@ class Engine:
         i = 0
         if m < window:
             g = min(window - m, T)
-            grown = self.update_block(wstate.kpca, xs[:g],
-                                      min_rows=min_rows)
+            grown = self._ingest_block(wstate.kpca, xs[:g],
+                                       min_rows=min_rows)
             wstate = wnd.stamp_grown_ages(wstate, grown, g)
             i = g
         if i == T:
@@ -671,7 +880,7 @@ class Engine:
             kpca, ages = sub, ages_sub
         return wnd.WindowState(kpca=kpca, ages=ages, clock=clock)
 
-    # ---- self-healing layer (core/health.py) -------------------------------
+    # ---- stage impls: gate (core/health.py) ---------------------------------
     def _health_policy(self):
         policy = self.plan.health
         if policy is None:
@@ -680,13 +889,13 @@ class Engine:
                 "with UpdatePlan(health=health.HealthPolicy(...))")
         return policy
 
-    def update_guarded(self, state, hstate, x_new: Array, *,
-                       min_rows: int = 0):
-        """``update`` with the self-healing layer: the offered point is
-        gated (non-finite / outlier quarantine) before the rank-one pair
-        fires, and an in-graph probe refreshes ``hstate`` — all under the
-        same single dispatch, zero extra host syncs.  A rejected point
-        returns the input state bitwise.  Returns ``(state, hstate)``."""
+    def _gated_point(self, state, hstate, x_new: Array, *,
+                     min_rows: int = 0):
+        """Gated ingest: the offered point runs the quarantine gate
+        (non-finite / outlier) before the rank-one pair fires, and an
+        in-graph probe refreshes ``hstate`` — all under the same single
+        dispatch, zero extra host syncs.  A rejected point returns the
+        input state bitwise.  Returns ``(state, hstate)``."""
         self._health_policy()
         from repro.core import health as hl
 
@@ -696,10 +905,10 @@ class Engine:
                                        self.spec, self.adjusted, self.plan,
                                        Mb)
 
-    def update_block_guarded(self, state, hstate, xs: Array, *,
-                             min_rows: int = 0):
-        """Guarded ``update_block``: per-point gate + select inside the
-        scan, one probe per chunk.  Chunk cuts re-read the ACTUAL active
+    def _gated_block(self, state, hstate, xs: Array, *,
+                     min_rows: int = 0):
+        """Gated block ingest: per-point gate + select inside the scan,
+        one probe per chunk.  Chunk cuts re-read the ACTUAL active
         count, so rejected points never push a chunk past its bucket."""
         self._health_policy()
         from repro.core import health as hl
@@ -719,13 +928,13 @@ class Engine:
             i += take
         return state, hstate
 
-    def window_ingest_guarded(self, wstate, hstate, x_new: Array, *,
-                              window: int, min_rows: int = 0):
-        """Guarded ``window.ingest``: one sliding-window point through
-        the quarantine gate.  Rejection leaves the eigensystem, the
-        arrival ring, the ages AND the clock untouched (bitwise), so the
-        evict order of a stream that saw a bad point is identical to one
-        that never did.  Returns ``(wstate, hstate)``."""
+    def _gated_window_point(self, wstate, hstate, x_new: Array, *,
+                            window: int, min_rows: int = 0):
+        """Gated sliding-window point: one arrival through the
+        quarantine gate.  Rejection leaves the eigensystem, the arrival
+        ring, the ages AND the clock untouched (bitwise), so the evict
+        order of a stream that saw a bad point is identical to one that
+        never did.  Returns ``(wstate, hstate)``."""
         self._health_policy()
         from repro.core import health as hl
         from repro.core import window as wnd
@@ -747,13 +956,13 @@ class Engine:
                 self.spec, self.adjusted, self.plan, Mb)
         return wnd.WindowState(kpca=kpca, ages=ages, clock=clock), hstate
 
-    def window_block_guarded(self, wstate, hstate, xs: Array, *,
-                             window: int, min_rows: int = 0):
-        """Guarded ``window_block``: growth-phase points step through the
+    def _gated_window_block(self, wstate, hstate, xs: Array, *,
+                            window: int, min_rows: int = 0):
+        """Gated window block: growth-phase points step through the
         per-point gate (the arrival stamp is conditional, so the ring
-        semantics match ``window_ingest_guarded``), steady-state points
-        fold through ONE guarded scan — fixed shapes, fixed collective
-        schedule, clock advances only by the accepted count."""
+        semantics match the point path), steady-state points fold through
+        ONE guarded scan — fixed shapes, fixed collective schedule,
+        clock advances only by the accepted count."""
         self._health_policy()
         from repro.core import health as hl
         from repro.core import window as wnd
@@ -784,93 +993,121 @@ class Engine:
             self.spec, self.adjusted, self.plan, Mb)
         return wnd.WindowState(kpca=kpca, ages=ages, clock=clock), hstate
 
-    # ---- metered dispatches (core/telemetry.py) ----------------------------
-    # Every *_metered wrapper runs the UNMODIFIED dispatch above (same jit
-    # cache entry, bitwise-identical eigensystem) and then accounts the
-    # step into the riding MetricsState as one tiny separate dispatch.
+    # ======== legacy variant-matrix shims (deprecated) =======================
+    # The pre-collapse cartesian spellings — plain/guarded/metered ×
+    # point/block × plain/window.  Each is a one-line delegation that
+    # wraps its arguments into a ``StreamState`` bundle, runs the
+    # composed ``step``/``step_block`` pipeline, and unwraps — bitwise
+    # identical by construction (the pipeline routes through the same
+    # jitted impls these spellings used).  Kept only for callers not yet
+    # on the bundle API.  Do NOT add new ``*_guarded``/``*_metered``
+    # variants here or anywhere on Engine: add a STAGE to the pipeline
+    # instead (``make lint-api`` enforces this).
+    def _wstate(self, stream: "StreamState"):
+        from repro.core import window as wnd
+
+        return wnd.WindowState(kpca=stream.kpca, ages=stream.ages,
+                               clock=stream.clock)
+
+    def update(self, state, x_new: Array, *, min_rows: int = 0):
+        """Deprecated spelling of ``step`` on a bare-eigensystem bundle."""
+        return self.step(StreamState(kpca=state), x_new,
+                         min_rows=min_rows).kpca
+
+    def update_block(self, state, xs: Array, *, min_rows: int = 0):
+        """Deprecated spelling of ``step_block`` on a bare bundle."""
+        return self.step_block(StreamState(kpca=state), xs,
+                               min_rows=min_rows).kpca
+
+    def window_step(self, wstate, x_new: Array, *, window: int,
+                    min_rows: int = 0):
+        """One steady-state sliding-window step (m ≡ W): evict-oldest +
+        ingest fused under ONE jitted dispatch at the window's bucket —
+        a length-1 ``step_block`` (the point-wise ``step`` keeps the
+        two-dispatch ``window.ingest`` spelling instead)."""
+        return self.window_block(wstate, jnp.asarray(x_new)[None],
+                                 window=window, min_rows=min_rows)
+
+    def window_block(self, wstate, xs: Array, *, window: int,
+                     min_rows: int = 0):
+        """Deprecated spelling of ``step_block`` on a windowed bundle."""
+        return self._wstate(self.step_block(make_stream(wstate), xs,
+                                            window=window,
+                                            min_rows=min_rows))
+
+    def update_guarded(self, state, hstate, x_new: Array, *,
+                       min_rows: int = 0):
+        """Deprecated spelling of ``step`` on a guarded bundle."""
+        out = self.step(StreamState(kpca=state, health=hstate), x_new,
+                        min_rows=min_rows)
+        return out.kpca, out.health
+
+    def update_block_guarded(self, state, hstate, xs: Array, *,
+                             min_rows: int = 0):
+        out = self.step_block(StreamState(kpca=state, health=hstate), xs,
+                              min_rows=min_rows)
+        return out.kpca, out.health
+
+    def window_ingest_guarded(self, wstate, hstate, x_new: Array, *,
+                              window: int, min_rows: int = 0):
+        out = self.step(make_stream(wstate, health=hstate), x_new,
+                        window=window, min_rows=min_rows)
+        return self._wstate(out), out.health
+
+    def window_block_guarded(self, wstate, hstate, xs: Array, *,
+                             window: int, min_rows: int = 0):
+        out = self.step_block(make_stream(wstate, health=hstate), xs,
+                              window=window, min_rows=min_rows)
+        return self._wstate(out), out.health
+
     def update_metered(self, state, mstate, x_new: Array, *,
                        min_rows: int = 0):
-        """``update`` + metric note.  Returns ``(state, mstate)``."""
-        from repro.core import telemetry as tm
-
-        m0 = state.m
-        state = self.update(state, x_new, min_rows=min_rows)
-        return state, tm.note_block(mstate, m0, state.m, 1, 1)
+        """Deprecated spelling of ``step`` on a metered bundle."""
+        out = self.step(StreamState(kpca=state, metrics=mstate), x_new,
+                        min_rows=min_rows)
+        return out.kpca, out.metrics
 
     def update_block_metered(self, state, mstate, xs: Array, *,
                              min_rows: int = 0):
-        from repro.core import telemetry as tm
-
-        m0 = state.m
-        state = self.update_block(state, xs, min_rows=min_rows)
-        return state, tm.note_block(mstate, m0, state.m, xs.shape[0],
-                                    xs.shape[0])
+        out = self.step_block(StreamState(kpca=state, metrics=mstate), xs,
+                              min_rows=min_rows)
+        return out.kpca, out.metrics
 
     def window_block_metered(self, wstate, mstate, xs: Array, *,
                              window: int, min_rows: int = 0):
-        """``window_block`` + metric note: accepted count is the clock
-        delta (every unguarded ingest advances it), so evictions fall out
-        exactly even across the growth→steady transition."""
-        from repro.core import telemetry as tm
-
-        m0, c0 = wstate.kpca.m, wstate.clock
-        wstate = self.window_block(wstate, xs, window=window,
-                                   min_rows=min_rows)
-        mstate = tm.note_block(mstate, m0, wstate.kpca.m, xs.shape[0],
-                               wstate.clock - c0, window=window)
-        return wstate, mstate
+        out = self.step_block(make_stream(wstate, metrics=mstate), xs,
+                              window=window, min_rows=min_rows)
+        return self._wstate(out), out.metrics
 
     def update_guarded_metered(self, state, hstate, mstate, x_new: Array, *,
                                min_rows: int = 0):
-        """Guarded update + note: accepted = 1 − Δquarantined."""
-        from repro.core import telemetry as tm
-
-        m0, q0 = state.m, hstate.quarantined
-        state, hstate = self.update_guarded(state, hstate, x_new,
-                                            min_rows=min_rows)
-        acc = 1 - (hstate.quarantined - q0)
-        return state, hstate, tm.note_block(mstate, m0, state.m, 1, acc,
-                                            hstate)
+        out = self.step(StreamState(kpca=state, health=hstate,
+                                    metrics=mstate), x_new,
+                        min_rows=min_rows)
+        return out.kpca, out.health, out.metrics
 
     def update_block_guarded_metered(self, state, hstate, mstate, xs: Array,
                                      *, min_rows: int = 0):
-        from repro.core import telemetry as tm
-
-        m0, q0 = state.m, hstate.quarantined
-        state, hstate = self.update_block_guarded(state, hstate, xs,
-                                                  min_rows=min_rows)
-        acc = xs.shape[0] - (hstate.quarantined - q0)
-        return state, hstate, tm.note_block(mstate, m0, state.m,
-                                            xs.shape[0], acc, hstate)
+        out = self.step_block(StreamState(kpca=state, health=hstate,
+                                          metrics=mstate), xs,
+                              min_rows=min_rows)
+        return out.kpca, out.health, out.metrics
 
     def window_block_guarded_metered(self, wstate, hstate, mstate,
                                      xs: Array, *, window: int,
                                      min_rows: int = 0):
-        """Guarded window block + note: the guarded scan advances the
-        clock only for ACCEPTED points, so the clock delta is the exact
-        fold count even with quarantined arrivals in the block."""
-        from repro.core import telemetry as tm
-
-        m0, c0 = wstate.kpca.m, wstate.clock
-        wstate, hstate = self.window_block_guarded(wstate, hstate, xs,
-                                                   window=window,
-                                                   min_rows=min_rows)
-        mstate = tm.note_block(mstate, m0, wstate.kpca.m, xs.shape[0],
-                               wstate.clock - c0, hstate, window=window)
-        return wstate, hstate, mstate
+        out = self.step_block(make_stream(wstate, health=hstate,
+                                          metrics=mstate), xs,
+                              window=window, min_rows=min_rows)
+        return self._wstate(out), out.health, out.metrics
 
     def window_ingest_guarded_metered(self, wstate, hstate, mstate,
                                       x_new: Array, *, window: int,
                                       min_rows: int = 0):
-        from repro.core import telemetry as tm
-
-        m0, c0 = wstate.kpca.m, wstate.clock
-        wstate, hstate = self.window_ingest_guarded(wstate, hstate, x_new,
-                                                    window=window,
-                                                    min_rows=min_rows)
-        mstate = tm.note_block(mstate, m0, wstate.kpca.m, 1,
-                               wstate.clock - c0, hstate, window=window)
-        return wstate, hstate, mstate
+        out = self.step(make_stream(wstate, health=hstate,
+                                    metrics=mstate), x_new,
+                        window=window, min_rows=min_rows)
+        return self._wstate(out), out.health, out.metrics
 
     def downdate_metered(self, state, mstate, i: int, *, min_rows: int = 0):
         from repro.core import telemetry as tm
@@ -878,6 +1115,7 @@ class Engine:
         state = self.downdate(state, i, min_rows=min_rows)
         m_after = (state.kpca.m if hasattr(state, "kpca") else state.m)
         return state, tm.note_downdate(mstate, m_after)
+    # ======== end legacy variant-matrix shims ================================
 
     def probe(self, state, hstate=None, *, ref_lam: Array | None = None):
         """Standalone in-graph health probe of any state this engine

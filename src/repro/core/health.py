@@ -353,10 +353,8 @@ def _guarded_window_chunk_impl(kpca, ages: Array, clock: Array, hstate,
         ok, x_safe = _gate(st, x_new, spec, policy)
         victim = jnp.argmin(ag).astype(jnp.int32)
         order = dd.boundary_perm(victim, st.m, ag.shape[0])
-        st_e = dd.downdate(st, victim, spec, adjusted=adjusted, plan=kplan)
-        ag_e = ag[order]
-        st_n = eng._ingest(st_e, x_safe, spec, adjusted, kplan)
-        ag_n = ag_e.at[st_n.m - 1].set(ck)
+        st_n = eng._window_pair(st, victim, x_safe, spec, adjusted, kplan)
+        ag_n = ag[order].at[st_n.m - 1].set(ck)
         return (_select(ok, st_n, st), jnp.where(ok, ag_n, ag),
                 jnp.where(ok, ck + 1, ck), _note_gate(h, ok)), None
 

@@ -376,58 +376,33 @@ class KPCAStream:
         """The eigensystem state, regardless of windowing."""
         return self.state.kpca if self.window is not None else self.state
 
-    def _note_metrics(self, m_before, offered: int, h_before=None,
-                      clock_before=None) -> None:
-        """Account the step just taken into the riding MetricsState.
+    def _bundle(self) -> eng.StreamState:
+        """The stream's whole mutable state as ONE pipeline bundle: the
+        eigensystem, plus the arrival ring / HealthState / MetricsState
+        exactly when the plan carries the matching stage."""
+        return eng.make_stream(self.state, health=self.health,
+                               metrics=self.metrics)
 
-        Accepted-count identities (all traced, no host sync):
-        windowed paths use the clock delta (guarded scans advance the
-        clock only for accepted points); guarded plain paths use the
-        quarantine-counter delta; unguarded plain paths accept all.
-        """
-        from repro.core import telemetry as tm
-
-        if clock_before is not None:
-            accepted = self.state.clock - clock_before
-        elif h_before is not None:
-            accepted = offered - (self.health.quarantined
-                                  - h_before.quarantined)
-        else:
-            accepted = offered
-        self.metrics = tm.note_block(self.metrics, m_before,
-                                     self.kpca_state.m, offered, accepted,
-                                     self.health, window=self.window)
-
-    def update(self, x_new: Array):
-        if self.metrics is not None:
-            m0 = self.kpca_state.m
-            h0 = self.health
-            c0 = self.state.clock if self.window is not None else None
-            out = self._update_impl(x_new)
-            self._note_metrics(m0, 1, h0, c0)
-            return out
-        return self._update_impl(x_new)
-
-    def _update_impl(self, x_new: Array):
-        if self.health is not None:
-            if self.window is not None:
-                self.state, self.health = self.engine.window_ingest_guarded(
-                    self.state, self.health, x_new, window=self.window,
-                    min_rows=self._min_rows)
-            else:
-                self.state, self.health = self.engine.update_guarded(
-                    self.state, self.health, x_new,
-                    min_rows=self._min_rows)
-            return self.state
+    def _unbundle(self, s: eng.StreamState):
+        """Write an advanced bundle back into the stream's attributes and
+        return ``self.state`` (the legacy return convention)."""
         if self.window is not None:
             from repro.core import window as wnd
-            self.state = wnd.ingest(self.engine, self.state, x_new,
-                                    window=self.window,
-                                    min_rows=self._min_rows)
-            return self.state
-        self.state = self.engine.update(self.state, x_new,
-                                        min_rows=self._min_rows)
+            self.state = wnd.WindowState(kpca=s.kpca, ages=s.ages,
+                                         clock=s.clock)
+        else:
+            self.state = s.kpca
+        self.health = s.health
+        self.metrics = s.metrics
         return self.state
+
+    def update(self, x_new: Array):
+        """One point through the composed gate→evict|ingest→note pipeline
+        (``engine.Engine.step``) — the bundle's structure, set from the
+        plan at construction, selects the stages."""
+        return self._unbundle(self.engine.step(
+            self._bundle(), x_new, window=self.window,
+            min_rows=self._min_rows))
 
     def downdate(self, i: int):
         """Remove point ``i`` (physical row) from the stream."""
@@ -453,33 +428,9 @@ class KPCAStream:
         append-only, and once the window fills the evict+ingest pairs run
         as ONE scanned dispatch per block (fixed shape at m ≡ W) instead
         of the old per-point host-decided stepping."""
-        if self.metrics is not None:
-            m0 = self.kpca_state.m
-            h0 = self.health
-            c0 = self.state.clock if self.window is not None else None
-            out = self._update_block_impl(xs)
-            self._note_metrics(m0, int(jnp.asarray(xs).shape[0]), h0, c0)
-            return out
-        return self._update_block_impl(xs)
-
-    def _update_block_impl(self, xs: Array):
-        if self.health is not None:
-            if self.window is not None:
-                self.state, self.health = self.engine.window_block_guarded(
-                    self.state, self.health, xs, window=self.window,
-                    min_rows=self._min_rows)
-            else:
-                self.state, self.health = self.engine.update_block_guarded(
-                    self.state, self.health, xs, min_rows=self._min_rows)
-            return self.state
-        if self.window is not None:
-            self.state = self.engine.window_block(self.state, xs,
-                                                  window=self.window,
-                                                  min_rows=self._min_rows)
-            return self.state
-        self.state = self.engine.update_block(self.state, xs,
-                                              min_rows=self._min_rows)
-        return self.state
+        return self._unbundle(self.engine.step_block(
+            self._bundle(), xs, window=self.window,
+            min_rows=self._min_rows))
 
     # sklearn-style spelling for streaming consumers: identical semantics.
     partial_fit_block = update_block

@@ -17,10 +17,13 @@ This enables *empirical* stopping: monitor the chosen norm of K - K̃ (or a
 cheap proxy) after each added landmark and stop when it plateaus.
 
 For landmark sets that grow far below capacity, construct an
-``engine.Engine`` over this module (or use the ``repro.core.buckets``
-shims): ``Engine.add_landmark`` wraps this module's ``add_landmark`` with
-bucketed dispatch so each addition costs O(M_b³) at the active
-power-of-two bucket M_b instead of O(M³) at capacity.
+``engine.Engine`` over this module with
+``UpdatePlan(dispatch="bucketed")``: ``Engine.add_landmark`` wraps this
+module's ``add_landmark`` with bucketed dispatch so each addition costs
+O(M_b³) at the active power-of-two bucket M_b instead of O(M³) at
+capacity.  (Landmark streams also ride the composed ``Engine.step``
+pipeline via ``offer_landmark``/``add_landmark`` — the stage selection
+in ``step`` is orthogonal to which state family the ingest touches.)
 
 Two row regimes:
 

@@ -145,21 +145,21 @@ def ingest(engine: eng.Engine, wstate: WindowState, x_new: Array, *,
     Pass ``hstate`` (a ``health.HealthState``) to also receive the
     updated probe/quarantine counters: returns ``(wstate, hstate)``;
     without it, returns ``wstate`` alone.
+
+    This is now a thin spelling of the composed pipeline: the bundle's
+    ``ages`` member selects the evict stage, ``plan.health`` decides the
+    gate stage (see ``engine.Engine.step``).
     """
     policy = getattr(engine.plan, "health", None)
+    h = None
     if policy is not None:
         from repro.core import health as hl
 
         h = hstate if hstate is not None else hl.init_health(
             wstate.kpca.L.dtype)
-        out, h = engine.window_ingest_guarded(wstate, h, x_new,
-                                              window=window,
-                                              min_rows=min_rows)
-        return (out, h) if hstate is not None else out
-    wstate = maybe_rebase(wstate)
-    if int(wstate.kpca.m) >= window:
-        wstate = evict(engine, wstate, oldest_row(wstate),
-                       min_rows=min_rows)
-    kpca = engine.update(wstate.kpca, x_new, min_rows=min_rows)
-    ages = wstate.ages.at[wstate.kpca.m].set(wstate.clock)
-    return WindowState(kpca=kpca, ages=ages, clock=wstate.clock + 1)
+    s = engine.step(eng.make_stream(wstate, health=h), x_new,
+                    window=window, min_rows=min_rows)
+    out = WindowState(kpca=s.kpca, ages=s.ages, clock=s.clock)
+    if policy is not None and hstate is not None:
+        return out, s.health
+    return out

@@ -34,6 +34,12 @@ Two serving workloads share this entry point:
   (``core/downdate.py``), so the service runs forever in bounded memory
   instead of exhausting capacity.
 
+  Every ingest below — single-stream, windowed, guarded, metered, and
+  their combinations — is one spelling of the composed
+  ``engine.Engine.step``/``step_block`` pipeline: the plan flags select
+  the gate/evict/note stages at trace time, so this driver never has to
+  pick a ``*_guarded``/``*_metered`` variant by hand.
+
   ``--decouple`` switches to the double-buffered snapshot architecture
   (``core/serving``): ingest folds blocks into working state A while
   ``--query-rate`` query micro-batches per step read the last PUBLISHED

@@ -4,7 +4,22 @@ import os
 os.environ.setdefault("REPRO_PALLAS_FORCE", "ref")
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 # The numerics tests (rank-one updates, drift) need f64; model code pins its
 # dtypes explicitly so this is safe globally.
 jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    """Drop jit/compile caches after each test module.
+
+    The full suite compiles thousands of distinct executables in one
+    process; letting them accumulate segfaults CPU XLA partway through
+    (deterministically, inside ``backend_compile``).  Per-module
+    clearing bounds the live compile state; within-module caching —
+    which the dispatch-count and retrace regression tests rely on — is
+    untouched."""
+    yield
+    jax.clear_caches()

@@ -1,39 +1,50 @@
-"""Bucketed dispatch (repro.core.buckets): m-scaled updates must match the
-fixed-capacity path across bucket crossings."""
+"""Bucketed dispatch (engine.UpdatePlan/Engine): m-scaled updates must
+match the fixed-capacity path across bucket crossings.
+
+Historically these tests drove the ``repro.core.buckets`` kwarg shims;
+they now exercise the same geometry and dispatch through the engine API
+directly (the shim module is a deprecation stub slated for deletion).
+"""
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core import buckets, inkpca, kernels_fn as kf, nystrom, rankone
+from repro.core import engine as eng
+from repro.core import inkpca, kernels_fn as kf, nystrom, rankone
 
 RNG = np.random.default_rng(11)
 SPEC = kf.KernelSpec(name="rbf", sigma=5.0)
 
 
+def _bplan(min_bucket: int, **kw) -> eng.UpdatePlan:
+    return eng.DEFAULT_PLAN._replace(dispatch="bucketed",
+                                     min_bucket=min_bucket, **kw)
+
+
 # ------------------------------------------------------- bucket geometry --
 def test_bucket_sizes_ladder():
-    assert buckets.bucket_sizes(1024, 128) == (128, 256, 512, 1024)
-    assert buckets.bucket_sizes(1000, 128) == (128, 256, 512, 1000)
-    assert buckets.bucket_sizes(100, 128) == (100,)
-    assert buckets.bucket_sizes(128, 128) == (128,)
+    assert eng.bucket_sizes(1024, 128) == (128, 256, 512, 1024)
+    assert eng.bucket_sizes(1000, 128) == (128, 256, 512, 1000)
+    assert eng.bucket_sizes(100, 128) == (100,)
+    assert eng.bucket_sizes(128, 128) == (128,)
 
 
 def test_bucket_for_smallest_fit():
-    assert buckets.bucket_for(1, 1024, 128) == 128
-    assert buckets.bucket_for(128, 1024, 128) == 128
-    assert buckets.bucket_for(129, 1024, 128) == 256
-    assert buckets.bucket_for(1024, 1024, 128) == 1024
+    assert eng.bucket_for(1, 1024, 128) == 128
+    assert eng.bucket_for(128, 1024, 128) == 128
+    assert eng.bucket_for(129, 1024, 128) == 256
+    assert eng.bucket_for(1024, 1024, 128) == 1024
     with pytest.raises(ValueError):
-        buckets.bucket_for(1025, 1024, 128)
+        eng.bucket_for(1025, 1024, 128)
 
 
 def test_slice_scatter_roundtrip():
     x0 = jnp.asarray(RNG.normal(size=(6, 3)))
     state = inkpca.init_state(x0, 32, SPEC, adjusted=True, dtype=jnp.float64)
-    sub = buckets.slice_state(state, 16)
+    sub = eng.slice_state(state, 16)
     assert sub.L.shape == (16,) and sub.U.shape == (16, 16)
-    back = buckets.scatter_state(state, sub)
+    back = eng.scatter_state(state, sub)
     np.testing.assert_allclose(np.asarray(back.U), np.asarray(state.U))
     np.testing.assert_allclose(np.asarray(back.L[:6]), np.asarray(state.L[:6]))
     # tail is re-sentinelized: still ascending, still above the spectrum
@@ -93,9 +104,8 @@ def test_bucketed_rank_one_update_matches_fixed():
     Lf, Uf = rankone.rank_one_update(jnp.asarray(L), jnp.asarray(U),
                                      jnp.asarray(v), jnp.float64(1.1),
                                      jnp.int32(m))
-    Lb, Ub = buckets.rank_one_update(jnp.asarray(L), jnp.asarray(U),
-                                     jnp.asarray(v), jnp.float64(1.1),
-                                     jnp.int32(m), min_bucket=16)
+    Lb, Ub = eng.rank_one(jnp.asarray(L), jnp.asarray(U), jnp.asarray(v),
+                          jnp.float64(1.1), jnp.int32(m), plan=_bplan(16))
     np.testing.assert_allclose(np.asarray(Lb[:m]), np.asarray(Lf[:m]),
                                atol=1e-10)
     np.testing.assert_allclose(np.abs(np.asarray(Ub[:m, :m])),
@@ -111,9 +121,10 @@ def test_bucketed_add_landmark_matches_fixed():
                                dtype=jnp.float64)
     buk = nystrom.init_nystrom(x_all, x_all[:4], 32, SPEC,
                                dtype=jnp.float64)
+    engine = eng.Engine(SPEC, _bplan(8), adjusted=False)
     for i in range(4, 20):
         fix = nystrom.add_landmark(fix, x_all, x_all[i], SPEC)
-        buk = buckets.add_landmark(buk, x_all, x_all[i], SPEC, min_bucket=8)
+        buk = engine.add_landmark(buk, x_all, x_all[i])
     np.testing.assert_allclose(np.asarray(buk.Knm), np.asarray(fix.Knm),
                                atol=1e-10)
     np.testing.assert_allclose(
